@@ -1,0 +1,46 @@
+"""Table 7: condition-bound (κ threshold) sweep.
+
+Sweeps the κ threshold of the adaptive-λ rule (Eq. 3) from 10⁰ to 10¹⁸ and
+records reconstruction error + PPL. Expected: improvement up to ~10²,
+saturation beyond (the paper's monotone-then-flat pattern).
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from benchmarks.common import (perplexity, quantize_params_with, save_result,
+                               trained_eval_model)
+from repro.core.ptqtp import (PTQTPConfig, ptqtp_dequantize, ptqtp_error,
+                              ptqtp_quantize)
+
+COND_GRID = (1e0, 1e1, 1e2, 1e4, 1e8, 1e12, 1e18)
+
+
+def run(log=print):
+    cfg, params, _ = trained_eval_model()
+    w = params["blocks"]["b0"]["attn"]["wq"]["kernel"][0].T.astype(jnp.float32)
+
+    rows = {"cond": list(COND_GRID), "err": [], "ppl": []}
+    for cond in COND_GRID:
+        pcfg = PTQTPConfig(group_size=128, t_max=30, cond_bound=cond)
+        q = ptqtp_quantize(w, pcfg)
+        err = float(ptqtp_error(w, q))
+        qp = quantize_params_with(
+            params, lambda m: ptqtp_dequantize(ptqtp_quantize(m.T, pcfg),
+                                               m.dtype).T)
+        ppl = perplexity(qp, cfg, n_batches=4)
+        rows["err"].append(err)
+        rows["ppl"].append(ppl)
+        log(f"bench_condition,cond=1e{int(jnp.log10(cond))},err={err:.5f},"
+            f"ppl={ppl:.3f}")
+
+    # saturation check: the 1e8..1e18 tail is flat
+    tail = rows["ppl"][-3:]
+    rows["saturates"] = bool(max(tail) - min(tail) < 0.05 * min(tail))
+    save_result("bench_condition", rows)
+    return rows
+
+
+if __name__ == "__main__":
+    run()

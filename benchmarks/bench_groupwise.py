@@ -1,0 +1,59 @@
+"""Table 8: group-wise (G=128) vs row-wise (no grouping) across methods.
+
+On trained LLM weights (heterogeneous scales), grouping should improve every
+method; PTQTP-with-groups should be competitive with 3-bit-grouped RTN.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import (perplexity, quantize_params_with, save_result,
+                               trained_eval_model)
+from repro.core.baselines.rtn import rtn_quantize
+from repro.core.ptqtp import PTQTPConfig, ptqtp_dequantize, ptqtp_quantize
+
+
+def run(log=print):
+    cfg, params, _ = trained_eval_model()
+
+    # NOTE: quantizer groups along the contraction dim after transpose; G<=d_in
+    def ptqtp_method(group):
+        def f(w):
+            d_in = w.shape[0]
+            gs = group if group > 0 else d_in
+            q = ptqtp_quantize(w.T, PTQTPConfig(group_size=min(gs, d_in),
+                                                t_max=30))
+            return ptqtp_dequantize(q, w.dtype).T
+        return f
+
+    def rtn_method(bits, group):
+        def f(w):
+            g = group if group > 0 else w.shape[0]
+            return rtn_quantize(w.T, bits=bits,
+                                group_size=min(g, w.shape[0])).__getitem__(0).T
+        return f
+
+    rows = {}
+    for name, method in {
+        "ptqtp_g128": ptqtp_method(128),
+        "ptqtp_nogroup": ptqtp_method(0),
+        "rtn3_g128": rtn_method(3, 128),
+        "rtn3_nogroup": rtn_method(3, 0),
+        "rtn2_g128": rtn_method(2, 128),
+        "rtn2_nogroup": rtn_method(2, 0),
+    }.items():
+        qp = quantize_params_with(params, method)
+        ppl = perplexity(qp, cfg, n_batches=4)
+        rows[name] = ppl
+        log(f"bench_groupwise,{name},{ppl:.4f}")
+
+    rows["grouping_helps_ptqtp"] = rows["ptqtp_g128"] <= rows["ptqtp_nogroup"]
+    rows["grouping_helps_rtn3"] = rows["rtn3_g128"] <= rows["rtn3_nogroup"]
+    save_result("bench_groupwise", rows)
+    return rows
+
+
+if __name__ == "__main__":
+    run()

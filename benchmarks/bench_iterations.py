@@ -1,0 +1,59 @@
+"""Fig. 3: progressive-search iterations vs error/PPL and quantization time.
+
+Sweeps T_max and records (a) reconstruction error on real trained weights,
+(b) held-out PPL of the quantized LM, (c) quantization wall-clock. Expected
+shape: steep improvement then plateau ≈ 30 iterations (the paper's threshold).
+"""
+
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import (perplexity, quantize_params_with, save_result,
+                               trained_eval_model)
+from repro.core.ptqtp import (PTQTPConfig, ptqtp_dequantize, ptqtp_error,
+                              ptqtp_quantize, quantize_with_history)
+
+T_GRID = (1, 2, 5, 10, 20, 30, 50)
+
+
+def run(log=print):
+    cfg, params, _ = trained_eval_model()
+    # a representative trained matrix for the error curve
+    w = params["blocks"]["b0"]["attn"]["wq"]["kernel"][0].T.astype(jnp.float32)
+
+    rows = {"t_max": list(T_GRID), "err": [], "time_s": [], "ppl": []}
+    for t_max in T_GRID:
+        pcfg = PTQTPConfig(group_size=128, t_max=t_max, eps=0.0)
+        t0 = time.perf_counter()
+        q = ptqtp_quantize(w, pcfg)
+        jax.block_until_ready(q.alpha)
+        dt = time.perf_counter() - t0
+        err = float(ptqtp_error(w, q))
+
+        qp = quantize_params_with(
+            params, lambda m: ptqtp_dequantize(
+                ptqtp_quantize(m.T, pcfg), m.dtype).T)
+        ppl = perplexity(qp, cfg, n_batches=4)
+        rows["err"].append(err)
+        rows["time_s"].append(dt)
+        rows["ppl"].append(ppl)
+        log(f"bench_iterations,t_max={t_max},err={err:.5f},ppl={ppl:.3f},"
+            f"time={dt:.3f}s")
+
+    # convergence-history curve (the Fig. 3 middle/right sub-figures)
+    _, hist = quantize_with_history(w, PTQTPConfig(t_max=50))
+    rows["error_history"] = [float(h) for h in np.asarray(hist)]
+    improves = rows["err"][0] - rows["err"][-1]
+    tail = abs(rows["err"][4] - rows["err"][-1])  # t=20 vs t=50
+    rows["plateau_after_20"] = bool(tail < 0.1 * max(improves, 1e-9))
+    save_result("bench_iterations", rows)
+    return rows
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,73 @@
+"""Tables 5/6 analogue: ternary-matmul kernel latency vs fp matmul.
+
+On this CPU container, wall-clock compares the *grouped jnp* execution path
+(what XLA actually runs) for PTQTP vs dense fp32, across the decode (B=1) and
+prefill (B=128/2048) shapes of a LLaMA2-7B-like gate_proj (4096×11008), plus
+roofline-*predicted* TPU latency from byte counts — the quantity the paper's
+Table 5 measures on RTX 4090.
+"""
+
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import save_result
+from repro.core.packing import pack_trits, ptqtp_weight_bytes
+from repro.core.ptqtp import PTQTPConfig, ptqtp_quantize
+from repro.kernels.ternary_matmul.ops import ternary_matmul
+
+HBM_BW = 819e9          # v5e bytes/s
+PEAK_BF16 = 197e12      # v5e FLOP/s
+
+
+def _time(fn, reps=5):
+    fn()
+    ts = []
+    for _ in range(reps):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn())
+        ts.append(time.perf_counter() - t0)
+    return min(ts)
+
+
+def run(log=print):
+    d_in, d_out = 2048, 5504   # 1/2-scale gate_proj (CPU-tractable)
+    w = jnp.asarray(np.random.default_rng(0)
+                    .standard_normal((d_out, d_in), dtype=np.float32) * 0.02)
+    q = ptqtp_quantize(w.reshape(d_out, d_in), PTQTPConfig(t_max=5))
+    t1p, t2p = pack_trits(q.t1), pack_trits(q.t2)
+    wd = w.T  # dense (d_in, d_out)
+
+    rows = {}
+    for b in (1, 128, 2048):
+        x = jnp.asarray(np.random.default_rng(b)
+                        .standard_normal((b, d_in), dtype=np.float32))
+        f_dense = jax.jit(lambda x: x @ wd)
+        f_tern = jax.jit(lambda x: ternary_matmul(
+            x, t1p, t2p, q.alpha, group_size=128, backend="grouped"))
+        td = _time(lambda: f_dense(x))
+        tt = _time(lambda: f_tern(x))
+        rows[f"dense_ms_b{b}"] = td * 1e3
+        rows[f"ptqtp_ms_b{b}"] = tt * 1e3
+        log(f"bench_latency,dense_ms_b{b},{td * 1e3:.3f}")
+        log(f"bench_latency,ptqtp_ms_b{b},{tt * 1e3:.3f}")
+
+    # roofline-predicted decode latency on TPU v5e (B=1: HBM-bound)
+    bytes_fp16 = 2 * d_in * d_out
+    bytes_ptqtp = ptqtp_weight_bytes((d_out, d_in), 128)
+    t_fp16 = bytes_fp16 / HBM_BW
+    t_ptqtp = bytes_ptqtp / HBM_BW
+    rows["tpu_pred_decode_us_fp16"] = t_fp16 * 1e6
+    rows["tpu_pred_decode_us_ptqtp"] = t_ptqtp * 1e6
+    rows["tpu_pred_decode_speedup"] = t_fp16 / t_ptqtp
+    log(f"bench_latency,tpu_pred_decode_speedup,{t_fp16 / t_ptqtp:.2f}")
+    save_result("bench_latency", rows)
+    return rows
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,74 @@
+"""Table 1/9 analogue: PPL across quantization methods on the in-repo LM.
+
+Trains a byte LM on the synthetic corpus, then measures held-out perplexity
+for FP32, PTQTP (1.58b), and the baselines at 2/3/4 bits. The reproduced
+claim is the ORDERING: PTQTP ≺ binary-PTQ and 2-bit, ≈ grouped 3-bit,
+and close to FP (paper Tables 1/2/9).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax.numpy as jnp
+
+from benchmarks.common import (perplexity, quantize_params_with, save_result,
+                               trained_eval_model)
+from repro.core.baselines.billm import billm_quantize
+from repro.core.baselines.gptq import gptq_quantize
+from repro.core.baselines.rtn import rtn_quantize
+from repro.core.ptqtp import (PTQTPConfig, ptqtp_dequantize, ptqtp_quantize)
+
+
+# All fake-quant helpers mirror the deployment path's orientation: quantize
+# Wᵀ (rows = outputs) with groups along the contraction dim d_in, like
+# repro.core.quantize_model does — so vocab-sized output dims never need to
+# divide the group size.
+
+def _ptqtp_fake_quant(w, t_max=30):
+    q = ptqtp_quantize(w.T, PTQTPConfig(group_size=128, t_max=t_max))
+    return ptqtp_dequantize(q, w.dtype).T
+
+
+def _rtn(bits):
+    return lambda w: rtn_quantize(w.T, bits=bits, group_size=128)[0].T
+
+
+def _gptq(bits):
+    return lambda w: gptq_quantize(w.T, None, bits=bits, group_size=128)[0].T
+
+
+METHODS = {
+    "fp32": None,
+    "ptqtp_b1.58": _ptqtp_fake_quant,
+    "rtn_b4_g128": _rtn(4),
+    "rtn_b3_g128": _rtn(3),
+    "rtn_b2_g128": _rtn(2),
+    "gptq_b3_g128": _gptq(3),
+    "gptq_b2_g128": _gptq(2),
+    "billm_b1": lambda w: billm_quantize(w.T)[0].T,
+}
+
+
+def run(log=print):
+    cfg, params, _ = trained_eval_model()
+    rows = {}
+    for name, method in METHODS.items():
+        p = params if method is None else quantize_params_with(params, method)
+        ppl = perplexity(p, cfg)
+        rows[name] = ppl
+        log(f"bench_perplexity,{name},{ppl:.4f}")
+    # the paper-claim assertions (soft: recorded, not raised)
+    checks = {
+        "ptqtp_lt_binary": rows["ptqtp_b1.58"] < rows["billm_b1"],
+        "ptqtp_lt_rtn2": rows["ptqtp_b1.58"] < rows["rtn_b2_g128"],
+        "ptqtp_lt_gptq2": rows["ptqtp_b1.58"] < rows["gptq_b2_g128"],
+        "ptqtp_within_2x_of_fp": rows["ptqtp_b1.58"] < 2 * rows["fp32"],
+    }
+    save_result("bench_perplexity", {"ppl": rows, "checks": checks})
+    log(f"bench_perplexity,checks,{checks}")
+    return rows
+
+
+if __name__ == "__main__":
+    run()

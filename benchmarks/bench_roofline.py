@@ -1,0 +1,92 @@
+"""§Roofline deliverable: aggregate the dry-run cache into the roofline table.
+
+For every (arch × shape) cell on the single-pod mesh: the three roofline
+terms, the dominant bottleneck, MODEL_FLOPS/HLO_FLOPS utilization, and the
+PTQTP-vs-fp16 serving comparison where the quantized variant exists.
+"""
+
+from __future__ import annotations
+
+import json
+from pathlib import Path
+
+from benchmarks.common import save_result
+
+DRYRUN = Path(__file__).resolve().parent / "results" / "dryrun"
+
+
+def load_cells():
+    cells = {}
+    for p in sorted(DRYRUN.glob("*.json")):
+        cells[p.stem] = json.loads(p.read_text())
+    return cells
+
+
+def table(mesh="single", quantized=False, cells=None):
+    cells = cells or load_cells()
+    rows = []
+    suffix = f"__{mesh}" + ("__q" if quantized else "")
+    for tag, c in cells.items():
+        if not tag.endswith(suffix):
+            continue
+        r = c["roofline"]
+        rows.append({
+            "arch": c["arch"], "shape": c["shape"], "chips": c["n_chips"],
+            "compute_s": r["compute_s"], "memory_s": r["memory_s"],
+            "collective_s": r["collective_s"], "dominant": r["dominant"],
+            "roofline_fraction": r["roofline_fraction"],
+            "memory_fused_s": r.get("memory_fused_s"),
+            "step_fused_s": r.get("step_lower_bound_fused_s"),
+            "useful_flops_ratio": c.get("useful_flops_ratio"),
+            "bytes_per_chip": c.get("bytes_per_chip"),
+        })
+    rows.sort(key=lambda r: (r["arch"], r["shape"]))
+    return rows
+
+
+def run(log=print):
+    cells = load_cells()
+    base = table("single", False, cells)
+    quant = table("single", True, cells)
+    multi = table("multi", False, cells)
+
+    log("bench_roofline,arch,shape,compute_s,memory_s,collective_s,"
+        "dominant,fraction")
+    for r in base:
+        log(f"bench_roofline,{r['arch']},{r['shape']},"
+            f"{r['compute_s']:.3e},{r['memory_s']:.3e},"
+            f"{r['collective_s']:.3e},{r['dominant']},"
+            f"{r['roofline_fraction']:.4f}")
+
+    # PTQTP serving win: memory-term ratio fp16 vs quantized per cell
+    wins = []
+    qmap = {(r["arch"], r["shape"]): r for r in quant}
+    for r in base:
+        qr = qmap.get((r["arch"], r["shape"]))
+        if qr is None:
+            continue
+        wins.append({
+            "arch": r["arch"], "shape": r["shape"],
+            "fp16_memory_s": r["memory_s"],
+            "ptqtp_memory_s": qr["memory_s"],
+            "memory_term_speedup": (r["memory_s"] / qr["memory_s"]
+                                    if qr["memory_s"] else None),
+            "fp16_step_s": max(r["compute_s"], r["memory_s"],
+                               r["collective_s"]),
+            "ptqtp_step_s": max(qr["compute_s"], qr["memory_s"],
+                                qr["collective_s"]),
+        })
+    for w in wins:
+        log(f"bench_roofline_q,{w['arch']},{w['shape']},"
+            f"mem_speedup={w['memory_term_speedup']:.2f}")
+
+    out = {"single": base, "multi": multi, "quantized": quant,
+           "ptqtp_serving_wins": wins,
+           "n_cells": {"single": len(base), "multi": len(multi),
+                       "quantized": len(quant)}}
+    save_result("bench_roofline", out)
+    return out
+
+
+if __name__ == "__main__":
+    run()

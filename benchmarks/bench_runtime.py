@@ -1,0 +1,81 @@
+"""Fig. 1(b) + App. A.2: quantization runtime & O(T·n·d) scaling.
+
+Measures wall-clock quantization time per matrix for PTQTP vs GPTQ/AWQ/
+BiLLM-style baselines (relative speedups are the reproduced claim; absolute
+numbers are CPU wall-clock, not A100), and verifies PTQTP runtime scales
+LINEARLY in n·d (the paper's complexity claim; GPTQ is O(n·d²) for contrast).
+"""
+
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import Timer, save_result
+from repro.core.baselines.awq import awq_quantize
+from repro.core.baselines.billm import billm_quantize
+from repro.core.baselines.gptq import gptq_quantize
+from repro.core.ptqtp import PTQTPConfig, ptqtp_quantize
+
+
+def _w(n, d, seed=0):
+    return jnp.asarray(np.random.default_rng(seed)
+                       .standard_normal((n, d), dtype=np.float32) * 0.02)
+
+
+def _time(fn, *args, reps=3):
+    fn(*args)  # compile
+    ts = []
+    for _ in range(reps):
+        t0 = time.perf_counter()
+        out = fn(*args)
+        jax.block_until_ready(jax.tree.leaves(out)[0])
+        ts.append(time.perf_counter() - t0)
+    return min(ts)
+
+
+def run(log=print):
+    n, d = 512, 2048
+    w = _w(n, d)
+    x = jnp.asarray(np.random.default_rng(1)
+                    .standard_normal((128, d), dtype=np.float32))
+
+    t_ptqtp = _time(lambda w: ptqtp_quantize(w, PTQTPConfig(t_max=50)), w)
+    t_gptq = _time(lambda w: gptq_quantize(w, x, bits=3, group_size=128), w)
+    t_awq = _time(lambda w: awq_quantize(w, x, bits=3, group_size=128), w)
+    t_billm = _time(lambda w: billm_quantize(w, x), w)
+
+    rows = {"ptqtp_s": t_ptqtp, "gptq_s": t_gptq, "awq_s": t_awq,
+            "billm_s": t_billm,
+            "speedup_vs_gptq": t_gptq / t_ptqtp,
+            "speedup_vs_awq": t_awq / t_ptqtp,
+            "speedup_vs_billm": t_billm / t_ptqtp}
+    for k, v in rows.items():
+        log(f"bench_runtime,{k},{v:.4f}")
+
+    # O(n·d) scaling: time vs elements should be ~linear (r² of linear fit)
+    sizes = [(128, 512), (256, 1024), (512, 2048), (1024, 2048)]
+    elems, times = [], []
+    for (ni, di) in sizes:
+        wi = _w(ni, di, seed=ni)
+        ti = _time(lambda w: ptqtp_quantize(w, PTQTPConfig(t_max=20)), wi,
+                   reps=2)
+        elems.append(ni * di)
+        times.append(ti)
+        log(f"bench_runtime,scaling_{ni}x{di},{ti:.4f}")
+    e = np.asarray(elems, np.float64)
+    t = np.asarray(times, np.float64)
+    coef = np.polyfit(e, t, 1)
+    pred = np.polyval(coef, e)
+    r2 = 1 - np.sum((t - pred) ** 2) / np.sum((t - t.mean()) ** 2)
+    rows["scaling_r2_linear"] = float(r2)
+    log(f"bench_runtime,scaling_r2_linear,{r2:.4f}")
+    save_result("bench_runtime", rows)
+    return rows
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,50 @@
+"""Fig. 4: tolerance ε vs quantization time and PPL.
+
+Tighter ε → more iterations before the ||Δα|| early-exit → better PPL at
+higher cost; inflection ≈ 1e-2 (the paper's recommended range [1e-3, 1e-2]).
+"""
+
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import (perplexity, quantize_params_with, save_result,
+                               trained_eval_model)
+from repro.core.ptqtp import PTQTPConfig, ptqtp_dequantize, ptqtp_quantize
+
+EPS_GRID = (1e0, 1e-1, 1e-2, 1e-3, 1e-4)
+
+
+def run(log=print):
+    cfg, params, _ = trained_eval_model()
+    w = params["blocks"]["b0"]["attn"]["wq"]["kernel"][0].T.astype(jnp.float32)
+
+    rows = {"eps": list(EPS_GRID), "iters": [], "time_s": [], "ppl": []}
+    for eps in EPS_GRID:
+        pcfg = PTQTPConfig(group_size=128, t_max=50, eps=eps)
+        t0 = time.perf_counter()
+        q = ptqtp_quantize(w, pcfg)
+        jax.block_until_ready(q.alpha)
+        dt = time.perf_counter() - t0
+
+        qp = quantize_params_with(
+            params, lambda m: ptqtp_dequantize(ptqtp_quantize(m.T, pcfg),
+                                               m.dtype).T)
+        ppl = perplexity(qp, cfg, n_batches=4)
+        rows["iters"].append(int(q.iters))
+        rows["time_s"].append(dt)
+        rows["ppl"].append(ppl)
+        log(f"bench_tolerance,eps={eps:g},iters={int(q.iters)},"
+            f"ppl={ppl:.3f},time={dt:.3f}s")
+
+    rows["iters_monotone_in_tightness"] = bool(
+        all(a <= b for a, b in zip(rows["iters"], rows["iters"][1:])))
+    save_result("bench_tolerance", rows)
+    return rows
+
+
+if __name__ == "__main__":
+    run()

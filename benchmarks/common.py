@@ -1,0 +1,129 @@
+"""Shared benchmark utilities: tiny-LM training, PPL evaluation, timers."""
+
+from __future__ import annotations
+
+import dataclasses
+import json
+import time
+from pathlib import Path
+from typing import Any, Callable, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro import configs
+from repro.core.ptqtp import PTQTPConfig
+from repro.data.pipeline import DataConfig
+from repro.optim.adamw import AdamW, cosine_schedule
+from repro.training.trainer import Trainer, TrainerConfig
+
+RESULTS = Path(__file__).resolve().parent / "results"
+
+
+def save_result(name: str, payload: Dict[str, Any]):
+    RESULTS.mkdir(parents=True, exist_ok=True)
+    with open(RESULTS / f"{name}.json", "w") as f:
+        json.dump(payload, f, indent=1, default=float)
+
+
+def load_result(name: str) -> Optional[Dict[str, Any]]:
+    p = RESULTS / f"{name}.json"
+    if not p.exists():
+        return None
+    return json.loads(p.read_text())
+
+
+# ---------------------------------------------------------------------------
+# the in-miniature evaluation model (DESIGN.md §8.2): a byte LM trained on the
+# synthetic corpus; PPL before/after quantization is the Table-1 analogue.
+# ---------------------------------------------------------------------------
+
+def eval_model_config(d_model=256, n_layers=4, d_ff=1024, vocab=259):
+    base = configs.get_config("qwen2-1.5b")
+    return base.scaled(
+        name="bench-lm", n_layers=n_layers, d_model=d_model, n_heads=4,
+        n_kv_heads=2, d_ff=d_ff, vocab_size=vocab,
+        param_dtype="float32", activation_dtype="float32", remat="none",
+        q_chunk=64,
+    )
+
+
+def train_eval_model(steps=300, seq_len=128, batch=16, seed=0,
+                     cfg=None, log=lambda *_: None):
+    cfg = cfg or eval_model_config()
+    t = Trainer(cfg, AdamW(lr=cosine_schedule(3e-3, warmup=30, total=steps)),
+                DataConfig(seq_len=seq_len, global_batch=batch, seed=seed),
+                TrainerConfig(total_steps=steps, log_interval=100),
+                log_fn=log)
+    state = t.fit()
+    return cfg, state["params"], t.history
+
+
+_PPL_CACHE: Dict[str, Any] = {}
+
+
+def trained_eval_model(steps=300):
+    """Trained tiny LM shared across benchmarks — memoized in-process AND
+    on disk (benchmarks/results/eval_model/), so each bench process pays
+    zero training cost after the first."""
+    from repro.runtime.checkpoint import (load_checkpoint, save_checkpoint)
+
+    key = f"steps{steps}"
+    if key in _PPL_CACHE:
+        return _PPL_CACHE[key]
+    cfg = eval_model_config()
+    ckpt_dir = RESULTS / "eval_model" / key
+    try:
+        _, tree, _ = load_checkpoint(ckpt_dir)
+        params = jax.tree.map(jnp.asarray, tree["params"])
+        hist = tree.get("history", None)
+    except (FileNotFoundError, KeyError):
+        cfg, params, history = train_eval_model(steps=steps, cfg=cfg)
+        hist = {"loss": np.asarray([h["loss"] for h in history],
+                                   np.float32)}
+        save_checkpoint(ckpt_dir, steps, {"params": params,
+                                          "history": hist})
+    _PPL_CACHE[key] = (cfg, params, hist)
+    return _PPL_CACHE[key]
+
+
+def perplexity(params, cfg, *, seq_len=128, n_batches=8, batch=16,
+               seed=123) -> float:
+    """Byte-level perplexity on held-out synthetic text."""
+    from repro.models import loss_fn
+
+    dcfg = DataConfig(seq_len=seq_len, global_batch=batch, seed=seed)
+    from repro.data.pipeline import ShardedLoader
+
+    loader = ShardedLoader(dcfg)
+    loss_j = jax.jit(lambda p, b: loss_fn(p, cfg, b))
+    losses = []
+    for step in range(n_batches):
+        b = {k: jnp.asarray(v) for k, v in loader.batch_at(step).items()}
+        losses.append(float(loss_j(params, b)))
+    return float(np.exp(np.mean(losses)))
+
+
+def quantize_params_with(params, method: Callable[[jax.Array], jax.Array]):
+    """Apply a (w)->w_hat matrix quantizer to every linear kernel (dense
+    fake-quant path used for baseline comparisons)."""
+
+    def walk(node, path=""):
+        if isinstance(node, dict):
+            return {k: walk(v, f"{path}/{k}") for k, v in node.items()}
+        if (path.endswith("kernel") and getattr(node, "ndim", 0) == 2
+                and "router" not in path and "norm" not in path):
+            return method(node).astype(node.dtype)
+        return node
+
+    return walk(params)
+
+
+class Timer:
+    def __enter__(self):
+        self.t0 = time.perf_counter()
+        return self
+
+    def __exit__(self, *exc):
+        self.seconds = time.perf_counter() - self.t0

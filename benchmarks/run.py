@@ -1,0 +1,57 @@
+"""Benchmark harness: one function per paper table/figure.
+
+``PYTHONPATH=src python -m benchmarks.run [--only NAME]``
+
+Prints ``bench,key,value`` CSV lines; each bench also persists JSON to
+benchmarks/results/<name>.json (consumed by EXPERIMENTS.md).
+"""
+
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+import traceback
+
+from benchmarks import (bench_condition, bench_groupwise, bench_iterations,
+                        bench_latency, bench_memory, bench_perplexity,
+                        bench_roofline, bench_runtime, bench_tolerance)
+
+SUITES = {
+    "perplexity": bench_perplexity.run,    # Table 1/2/9
+    "runtime": bench_runtime.run,          # Fig. 1(b), App. A.2
+    "memory": bench_memory.run,            # Table 4, Eq. 9-13
+    "latency": bench_latency.run,          # Tables 5/6
+    "iterations": bench_iterations.run,    # Fig. 3
+    "tolerance": bench_tolerance.run,      # Fig. 4
+    "condition": bench_condition.run,      # Table 7
+    "groupwise": bench_groupwise.run,      # Table 8
+    "roofline": bench_roofline.run,        # §Roofline deliverable
+}
+
+
+def main(argv=None) -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", choices=tuple(SUITES), default=None)
+    args = ap.parse_args(argv)
+    todo = {args.only: SUITES[args.only]} if args.only else SUITES
+
+    failed = []
+    for name, fn in todo.items():
+        print(f"=== bench:{name} ===", flush=True)
+        t0 = time.time()
+        try:
+            fn(log=lambda s: print(s, flush=True))
+            print(f"=== bench:{name} done in {time.time() - t0:.1f}s ===",
+                  flush=True)
+        except Exception:  # noqa: BLE001
+            traceback.print_exc()
+            failed.append(name)
+    if failed:
+        print(f"FAILED: {failed}")
+        sys.exit(1)
+    print("ALL BENCHMARKS OK")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,51 @@
+"""Production-mesh walkthrough: lower the PTQTP-quantized serving step of any
+assigned architecture onto the 2-pod × 16×16 mesh and read the roofline.
+
+    PYTHONPATH=src python examples/multipod_dryrun.py --arch gemma3-27b
+
+Thin veneer over repro.launch.dryrun (which owns the 512-placeholder-device
+XLA flag) run in a subprocess so this process's JAX stays single-device.
+"""
+
+import argparse
+import json
+import subprocess
+import sys
+import tempfile
+from pathlib import Path
+
+REPO = Path(__file__).resolve().parents[1]
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="qwen2-1.5b")
+    ap.add_argument("--shape", default="decode_32k")
+    ap.add_argument("--mesh", default="multi", choices=("single", "multi"))
+    args = ap.parse_args()
+
+    with tempfile.TemporaryDirectory() as td:
+        for quantized in (False, True):
+            cmd = [sys.executable, "-m", "repro.launch.dryrun",
+                   "--arch", args.arch, "--shape", args.shape,
+                   "--mesh", args.mesh, "--out", td]
+            if quantized:
+                cmd.append("--quantized")
+            subprocess.run(cmd, cwd=str(REPO), check=True,
+                           env={"PYTHONPATH": str(REPO / "src"),
+                                "PATH": "/usr/bin:/bin", "HOME": "/root"},
+                           capture_output=True, text=True)
+            tag = (f"{args.arch}__{args.shape}__{args.mesh}"
+                   + ("__q" if quantized else ""))
+            res = json.loads((Path(td) / f"{tag}.json").read_text())
+            r = res["roofline"]
+            label = "PTQTP-1.58b" if quantized else "fp16/bf16  "
+            print(f"{label} chips={res['n_chips']:4d} "
+                  f"compute={r['compute_s']:.2e}s "
+                  f"memory={r['memory_s']:.2e}s "
+                  f"collective={r['collective_s']:.2e}s "
+                  f"dominant={r['dominant']}")
+
+
+if __name__ == "__main__":
+    main()

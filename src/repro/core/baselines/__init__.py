@@ -1,0 +1,12 @@
+"""Baseline PTQ methods the paper compares against (Table 1/2, Fig. 1).
+
+All baselines expose  quantize(w, **kw) -> (w_hat, meta)  returning the
+dequantized approximation (for quality comparison) plus bookkeeping.
+"""
+
+from repro.core.baselines.rtn import rtn_quantize
+from repro.core.baselines.gptq import gptq_quantize
+from repro.core.baselines.awq import awq_quantize
+from repro.core.baselines.billm import billm_quantize
+
+__all__ = ["rtn_quantize", "gptq_quantize", "awq_quantize", "billm_quantize"]

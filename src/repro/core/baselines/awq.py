@@ -1,0 +1,47 @@
+"""AWQ baseline (Lin et al., 2024): activation-aware per-channel scaling.
+
+Searches a per-input-channel scale s = act_scaleʳ (grid over r ∈ [0, 1]),
+quantizes W·diag(s) with group-wise RTN, folds 1/s back, and keeps the r that
+minimizes reconstruction error on the calibration batch:  ‖(Ŵ − W)·Xᵀ‖².
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.baselines.rtn import rtn_quantize
+
+
+@functools.partial(jax.jit, static_argnames=("bits", "group_size", "n_grid"))
+def awq_quantize(
+    w: jax.Array,
+    x: jax.Array,
+    bits: int = 3,
+    group_size: int = 128,
+    n_grid: int = 20,
+):
+    """Quantize (n, d) weights with activation stats from x (..., d).
+
+    Returns (w_hat, meta) where meta carries the chosen ratio and scales.
+    """
+    n, d = w.shape
+    w = w.astype(jnp.float32)
+    xf = x.reshape(-1, d).astype(jnp.float32)
+    act_scale = jnp.maximum(jnp.mean(jnp.abs(xf), axis=0), 1e-8)  # (d,)
+
+    def attempt(ratio):
+        s = jnp.power(act_scale, ratio)
+        s = s / jnp.sqrt(jnp.maximum(jnp.max(s) * jnp.min(s), 1e-20))
+        s = jnp.maximum(s, 1e-4)
+        w_hat_s, _ = rtn_quantize(w * s[None, :], bits=bits, group_size=group_size)
+        w_hat = w_hat_s / s[None, :]
+        err = jnp.sum(((w_hat - w) @ xf.T) ** 2)
+        return err, w_hat
+
+    ratios = jnp.linspace(0.0, 1.0, n_grid)
+    errs, w_hats = jax.vmap(attempt)(ratios)
+    best = jnp.argmin(errs)
+    return w_hats[best], {"ratio": ratios[best], "err": errs[best]}

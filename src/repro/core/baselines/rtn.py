@@ -1,0 +1,41 @@
+"""Round-to-nearest (RTN) uniform quantization baseline at k bits.
+
+Group-wise symmetric/asymmetric min-max quantization — the vanilla PTQ
+baseline underlying AWQ/GPTQ comparisons.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+
+@functools.partial(jax.jit, static_argnames=("bits", "group_size", "symmetric"))
+def rtn_quantize(w: jax.Array, bits: int = 3, group_size: int = 128,
+                 symmetric: bool = False):
+    """Quantize (n, d) weights to `bits` with per-(row, group) scales.
+
+    Returns (w_hat, meta) with meta = {"q": int8 codes, "scale", "zero"}.
+    """
+    n, d = w.shape
+    g = group_size if group_size > 0 else d
+    assert d % g == 0
+    wg = w.astype(jnp.float32).reshape(n, d // g, g)
+    if symmetric:
+        maxabs = jnp.max(jnp.abs(wg), axis=-1, keepdims=True)
+        qmax = 2 ** (bits - 1) - 1
+        scale = jnp.maximum(maxabs / qmax, 1e-10)
+        q = jnp.clip(jnp.round(wg / scale), -qmax - 1, qmax)
+        w_hat = q * scale
+        zero = jnp.zeros_like(scale)
+    else:
+        lo = jnp.min(wg, axis=-1, keepdims=True)
+        hi = jnp.max(wg, axis=-1, keepdims=True)
+        qmax = 2**bits - 1
+        scale = jnp.maximum((hi - lo) / qmax, 1e-10)
+        zero = jnp.round(-lo / scale)
+        q = jnp.clip(jnp.round(wg / scale) + zero, 0, qmax)
+        w_hat = (q - zero) * scale
+    return w_hat.reshape(n, d), {"q": q.astype(jnp.int32), "scale": scale, "zero": zero}

@@ -1,0 +1,68 @@
+"""Trit packing: 4 ternary values per byte (2-bit fields).
+
+Storage format (paper App. A.3: "each trit-plane ... stored as a 2bit datatype"):
+  field encoding  0b00 -> 0,  0b01 -> +1,  0b10 -> -1   (0b11 unused)
+  byte layout     trit j occupies bits [2*(j%4), 2*(j%4)+1] of byte j//4.
+
+This gives 0.25 byte / trit / plane -> 0.5 byte/weight for two planes, plus
+2 fp16 scales per group of 128 weights (0.03125 byte/weight) = 0.53125 byte per
+weight vs 2.0 for fp16 (3.76x; the paper's ~4x trit-plane compression claim).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+__all__ = ["pack_trits", "unpack_trits", "packed_nbytes", "ptqtp_weight_bytes"]
+
+
+def _encode(t: jax.Array) -> jax.Array:
+    """{-1,0,1} int -> 2-bit field value {2,0,1} (uint8)."""
+    t = t.astype(jnp.int8)
+    return jnp.where(t == -1, jnp.uint8(2), t.astype(jnp.uint8))
+
+
+def pack_trits(t: jax.Array) -> jax.Array:
+    """Pack an int8 trit array (..., d) with d % 4 == 0 into (..., d//4) uint8."""
+    if t.shape[-1] % 4 != 0:
+        raise ValueError(f"last dim {t.shape[-1]} must be divisible by 4")
+    enc = _encode(t)
+    e = enc.reshape(*t.shape[:-1], t.shape[-1] // 4, 4)
+    b = (
+        e[..., 0]
+        | (e[..., 1] << 2)
+        | (e[..., 2] << 4)
+        | (e[..., 3] << 6)
+    )
+    return b.astype(jnp.uint8)
+
+
+def unpack_trits(packed: jax.Array, dtype=jnp.int8) -> jax.Array:
+    """Unpack (..., b) uint8 -> (..., 4*b) trits in {-1,0,1} of `dtype`."""
+    p = packed
+    fields = jnp.stack(
+        [(p >> (2 * i)) & jnp.uint8(3) for i in range(4)], axis=-1
+    )  # (..., b, 4)
+    t = (fields == 1).astype(jnp.int8) - (fields == 2).astype(jnp.int8)
+    return t.reshape(*packed.shape[:-1], packed.shape[-1] * 4).astype(dtype)
+
+
+def packed_nbytes(shape) -> int:
+    """Bytes used by one packed trit-plane of logical `shape`."""
+    n = int(np.prod(shape))
+    assert n % 4 == 0
+    return n // 4
+
+
+def ptqtp_weight_bytes(shape, group_size: int = 128, scale_bytes: int = 2) -> int:
+    """Total PTQTP storage for a weight of `shape` (2 planes + 2 scales/group).
+
+    Mirrors Eq. 13 of the paper:
+      M = 2 * n * d * 2bit + ceil(d/G) * 2n * fp16.
+    """
+    n = int(np.prod(shape[:-1]))
+    d = int(shape[-1])
+    n_groups = -(-d // group_size)
+    return 2 * packed_nbytes((n, d)) + n_groups * n * 2 * scale_bytes

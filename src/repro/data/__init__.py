@@ -1,0 +1,5 @@
+from repro.data.tokenizer import ByteTokenizer
+from repro.data.synthetic import synthetic_corpus
+from repro.data.pipeline import DataConfig, ShardedLoader
+
+__all__ = ["ByteTokenizer", "synthetic_corpus", "DataConfig", "ShardedLoader"]

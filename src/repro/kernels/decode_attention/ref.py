@@ -1,0 +1,35 @@
+"""Pure-jnp oracle for fused int8-KV decode attention (GQA, ring cache)."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def decode_attention_ref(q, k8, k_scale, v8, v_scale, pos_buf, pos,
+                         window=None):
+    """One-token GQA decode attention over an int8 ring cache.
+
+    Args:
+      q:        (B, KV, G, hd) float — query heads grouped per kv head.
+      k8, v8:   (B, S, KV, hd) int8 cache.
+      k_scale, v_scale: (B, S, KV) f32 per-slot/head absmax scales.
+      pos_buf:  (B, S) int32 absolute position per slot (-1 = empty).
+      pos:      (B,) int32 current decode position.
+      window:   sliding-window size (None = full).
+    Returns:
+      (B, KV, G, hd) f32 attention output.
+    """
+    b, s, kv, hd = k8.shape
+    scale = hd ** -0.5
+    k = k8.astype(jnp.float32) * k_scale[..., None]
+    v = v8.astype(jnp.float32) * v_scale[..., None]
+    logits = jnp.einsum("bkgd,bskd->bkgs", q.astype(jnp.float32), k) * scale
+    w_eff = window if window else s + 1
+    valid = ((pos_buf >= 0) & (pos_buf <= pos[:, None])
+             & (pos[:, None] - pos_buf < w_eff))  # (B, S)
+    logits = jnp.where(valid[:, None, None, :], logits, NEG_INF)
+    p = jnp.exp(logits - jnp.max(logits, axis=-1, keepdims=True))
+    p = p / jnp.sum(p, axis=-1, keepdims=True)
+    return jnp.einsum("bkgs,bskd->bkgd", p, v)

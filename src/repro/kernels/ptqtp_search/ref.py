@@ -1,0 +1,28 @@
+"""Pure-jnp oracle for the PTQTP 9-candidate trit search (paper Eq. 5)."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+# Same candidate order as repro.core.ptqtp.CANDIDATES ((0,0) first for ties).
+CANDIDATES = np.array(
+    [[0, 0], [0, 1], [0, -1], [1, 0], [-1, 0], [1, 1], [-1, -1], [1, -1], [-1, 1]],
+    dtype=np.float32,
+)
+
+
+def ptqtp_search_ref(w, alpha):
+    """Per-element argmin over the 9 ternary pairs.
+
+    Args:
+      w:     (R, G) float32 group-rows.
+      alpha: (R, 2) float32 scales.
+    Returns:
+      (t1, t2): (R, G) float32 planes in {-1, 0, 1}.
+    """
+    cand = jnp.asarray(CANDIDATES)
+    vals = alpha.astype(jnp.float32) @ cand.T  # (R, 9)
+    err = (w.astype(jnp.float32)[:, :, None] - vals[:, None, :]) ** 2
+    best = jnp.argmin(err, axis=-1)
+    return cand[best, 0], cand[best, 1]

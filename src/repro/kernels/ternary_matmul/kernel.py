@@ -1,0 +1,118 @@
+"""Pallas TPU kernel: fused unpack + grouped ternary matmul + per-group scale.
+
+TPU adaptation of PTQTP's multiplication-free inference (DESIGN.md §2):
+packed 2-bit trit-planes stream HBM→VMEM (0.5 B/weight instead of 2 B),
+are unpacked with shifts/masks on the VPU, promoted to the activation dtype
+and fed to the MXU in 128-aligned tiles; the per-group α pair scales the
+128-wide partial sums before accumulation.
+
+Grid layout: (M // bm, N // bn, D // G)  — the k axis steps one weight group
+(G = 128 = MXU tile edge) at a time, so each k step is exactly one scaled
+MXU pass per plane:
+
+    acc += (x_g @ T¹_gᵀ) * α¹[:, g]  +  (x_g @ T²_gᵀ) * α²[:, g]
+
+BlockSpecs keep the working set in VMEM:
+  x      (bm, G)        activations tile
+  t1p/t2p(bn, G // 4)   packed trits (uint8)
+  alpha  (bn, 1, 2)     group scales
+  out    (bm, bn)       f32 accumulator (revisited across k steps)
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _unpack_block(packed_i32, bn: int, g: int):
+    """(bn, G//4) int32 packed bytes -> (bn, G) f32 trits in {-1,0,1}."""
+    fields = [(packed_i32 >> (2 * i)) & 0x3 for i in range(4)]
+    # field: 0 -> 0, 1 -> +1, 2 -> -1
+    trits = [
+        (f == 1).astype(jnp.float32) - (f == 2).astype(jnp.float32) for f in fields
+    ]
+    stacked = jnp.stack(trits, axis=-1)  # (bn, G//4, 4): trit j = byte j//4 field j%4
+    return stacked.reshape(bn, g)
+
+
+def _ternary_matmul_kernel(x_ref, t1_ref, t2_ref, a_ref, o_ref, *, bm, bn, g,
+                           acc_dtype):
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    x = x_ref[...].astype(acc_dtype)                      # (bm, G)
+    t1 = _unpack_block(t1_ref[...].astype(jnp.int32), bn, g).astype(acc_dtype)
+    t2 = _unpack_block(t2_ref[...].astype(jnp.int32), bn, g).astype(acc_dtype)
+    a = a_ref[...].astype(acc_dtype)                      # (bn, 1, 2)
+    a1 = a[:, 0, 0]                                       # (bn,)
+    a2 = a[:, 0, 1]
+
+    p1 = jax.lax.dot_general(
+        x, t1, (((1,), (1,)), ((), ())), preferred_element_type=acc_dtype
+    )                                                     # (bm, bn)
+    p2 = jax.lax.dot_general(
+        x, t2, (((1,), (1,)), ((), ())), preferred_element_type=acc_dtype
+    )
+    o_ref[...] += p1 * a1[None, :] + p2 * a2[None, :]
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("group_size", "block_m", "block_n", "interpret"),
+)
+def ternary_matmul_pallas(
+    x: jax.Array,
+    t1p: jax.Array,
+    t2p: jax.Array,
+    alpha: jax.Array,
+    *,
+    group_size: int = 128,
+    block_m: int = 128,
+    block_n: int = 128,
+    interpret: bool = False,
+) -> jax.Array:
+    """y = x @ Ŵᵀ from packed trit-planes.
+
+    Args:
+      x:     (m, d) activations (f32/bf16).
+      t1p:   (n, d // 4) uint8 packed plane 1.
+      t2p:   (n, d // 4) uint8 packed plane 2.
+      alpha: (n, d // group_size, 2) f32.
+    Returns:
+      (m, n) f32.
+    """
+    m, d = x.shape
+    n = t1p.shape[0]
+    g = group_size
+    assert d % g == 0, (d, g)
+    assert t1p.shape == (n, d // 4)
+    assert alpha.shape == (n, d // g, 2)
+
+    bm = min(block_m, m)
+    bn = min(block_n, n)
+    assert m % bm == 0 and n % bn == 0, (m, bm, n, bn)
+
+    grid = (m // bm, n // bn, d // g)
+    kernel = functools.partial(
+        _ternary_matmul_kernel, bm=bm, bn=bn, g=g, acc_dtype=jnp.float32
+    )
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, g), lambda i, j, k: (i, k)),
+            pl.BlockSpec((bn, g // 4), lambda i, j, k: (j, k)),
+            pl.BlockSpec((bn, g // 4), lambda i, j, k: (j, k)),
+            pl.BlockSpec((bn, 1, 2), lambda i, j, k: (j, k, 0)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, k: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), jnp.float32),
+        interpret=interpret,
+    )(x, t1p, t2p, alpha)

@@ -1,0 +1,106 @@
+"""Jitted public wrapper for the PTQTP ternary matmul.
+
+Backends:
+  * ``pallas``  — the fused TPU kernel (interpret=True on CPU for validation).
+  * ``grouped`` — XLA path over *packed* planes: unpack + grouped einsum.
+                  This is what the multi-pod dry-run lowers (Pallas cannot
+                  lower for the CPU host platform), and is what XLA itself
+                  would fuse on TPU absent the hand kernel.
+  * ``ref``     — full-dequant oracle (testing only).
+
+The grouped einsum applies α to per-group partial sums, never materializing
+the dequantized Ŵ at matmul precision for the whole matrix at once:
+
+  y[b, n] = Σ_g α¹[n,g]·(Σ_{j∈g} x[b,j]·T¹[n,j]) + α²[...]·(...)
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.packing import pack_trits, unpack_trits
+from repro.kernels.ternary_matmul import ref as _ref
+from repro.kernels.ternary_matmul.kernel import ternary_matmul_pallas
+
+DEFAULT_BACKEND = "grouped"
+
+
+def _grouped(x, t1p, t2p, alpha, group_size):
+    *lead, d = x.shape
+    n = t1p.shape[0]
+    g = group_size
+    ng = d // g
+    xf = x.reshape(-1, ng, g)
+    t1 = unpack_trits(t1p).reshape(n, ng, g).astype(x.dtype)
+    t2 = unpack_trits(t2p).reshape(n, ng, g).astype(x.dtype)
+    # (B, ng, g) x (n, ng, g) -> (B, ng, n) partial sums per group
+    p1 = jnp.einsum("bgk,ngk->bgn", xf, t1, preferred_element_type=jnp.float32)
+    p2 = jnp.einsum("bgk,ngk->bgn", xf, t2, preferred_element_type=jnp.float32)
+    a = alpha.astype(jnp.float32)
+    y = jnp.einsum("bgn,ng->bn", p1, a[..., 0]) + jnp.einsum(
+        "bgn,ng->bn", p2, a[..., 1]
+    )
+    return y.reshape(*lead, n)
+
+
+def ternary_matmul(
+    x: jax.Array,
+    t1p: jax.Array,
+    t2p: jax.Array,
+    alpha: jax.Array,
+    *,
+    group_size: int = 128,
+    backend: str = DEFAULT_BACKEND,
+    interpret: bool = True,
+    out_dtype=None,
+) -> jax.Array:
+    """y = x @ Ŵᵀ. x: (..., d); packed planes (n, d//4); alpha (n, d//G, 2)."""
+    if backend == "ref":
+        y = _ref.ternary_matmul_packed_ref(x, t1p, t2p, alpha, group_size)
+    elif backend == "grouped":
+        y = _grouped(x, t1p, t2p, alpha, group_size)
+    elif backend == "pallas":
+        *lead, d = x.shape
+        x2 = x.reshape(-1, d)
+        m = x2.shape[0]
+        n = t1p.shape[0]
+        # pad m to a tile multiple
+        bm = 128 if m >= 128 else _pow2_at_most(m)
+        pad = (-m) % bm
+        if pad:
+            x2 = jnp.pad(x2, ((0, pad), (0, 0)))
+        bn = 128 if n % 128 == 0 else _largest_divisor_at_most(n, 128)
+        y = ternary_matmul_pallas(
+            x2, t1p, t2p, alpha,
+            group_size=group_size, block_m=bm, block_n=bn, interpret=interpret,
+        )
+        if pad:
+            y = y[:m]
+        y = y.reshape(*lead, n)
+    else:
+        raise ValueError(f"unknown backend {backend!r}")
+    return y.astype(out_dtype) if out_dtype is not None else y
+
+
+def _pow2_at_most(m: int) -> int:
+    b = 1
+    while b * 2 <= m:
+        b *= 2
+    return b
+
+
+def _largest_divisor_at_most(n: int, cap: int) -> int:
+    for b in range(min(cap, n), 0, -1):
+        if n % b == 0:
+            return b
+    return 1
+
+
+def quantized_from_dense(w_t: jax.Array, alpha: jax.Array):
+    """Pack int8 planes -> uint8 packed buffers. w_t: tuple (t1, t2)."""
+    t1, t2 = w_t
+    return pack_trits(t1), pack_trits(t2)

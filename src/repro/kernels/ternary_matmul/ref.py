@@ -1,0 +1,45 @@
+"""Pure-jnp oracle for the fused PTQTP ternary matmul.
+
+Computes  y = x @ Ŵᵀ  with  Ŵ = α¹∘T¹ + α²∘T²  (group-wise α, G columns per
+group). This is the semantic ground truth the Pallas kernel and the XLA
+grouped path are tested against.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.core.packing import unpack_trits
+
+
+def dequantize(t1, t2, alpha, group_size: int):
+    """Materialize Ŵ (n, d) from int8 planes + (n, d//G, 2) scales."""
+    n, d = t1.shape
+    g = group_size
+    t1 = t1.reshape(n, d // g, g).astype(jnp.float32)
+    t2 = t2.reshape(n, d // g, g).astype(jnp.float32)
+    a = alpha.astype(jnp.float32)
+    return (t1 * a[..., 0:1] + t2 * a[..., 1:2]).reshape(n, d)
+
+
+def ternary_matmul_ref(x, t1, t2, alpha, group_size: int = 128):
+    """Oracle: full dequant + dense matmul.
+
+    Args:
+      x:     (..., d) activations.
+      t1,t2: (n, d) int8 trit-planes.
+      alpha: (n, d // group_size, 2) float scales.
+    Returns:
+      (..., n) float32.
+    """
+    w_hat = dequantize(t1, t2, alpha, group_size)
+    return jnp.einsum(
+        "...d,nd->...n", x.astype(jnp.float32), w_hat, preferred_element_type=jnp.float32
+    )
+
+
+def ternary_matmul_packed_ref(x, t1p, t2p, alpha, group_size: int = 128):
+    """Oracle for the packed-input variant (uint8 planes, 4 trits/byte)."""
+    t1 = unpack_trits(t1p)
+    t2 = unpack_trits(t2p)
+    return ternary_matmul_ref(x, t1, t2, alpha, group_size)

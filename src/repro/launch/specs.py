@@ -1,0 +1,79 @@
+"""ShapeDtypeStruct stand-ins for every model input — the dry-run contract.
+
+``input_specs(cfg, shape_name)`` returns weak-type-correct, shardable specs
+with NO device allocation, for all four assigned input shapes:
+
+  train_4k     {"tokens"/"embeddings", "labels"}           (train_step)
+  prefill_32k  {"tokens"/"embeddings"}                     (prefill)
+  decode_32k   (state, tokens)  — one new token, 32k cache (serve_step)
+  long_500k    (state, tokens)  — one new token, 512k cache (serve_step)
+
+[audio]/[vlm] archs have a stub modality frontend: their specs carry
+precomputed frame/patch embeddings (B, S, d_model) instead of token ids.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import SHAPES
+from repro.models import init_decode_state
+from repro.models.common import dtype_of
+
+
+def _sds(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def batch_specs(cfg, shape_name: str) -> Dict[str, Any]:
+    """Train/prefill batch specs."""
+    info = SHAPES[shape_name]
+    b, s = info["global_batch"], info["seq_len"]
+    adt = dtype_of(cfg.activation_dtype)
+    if cfg.embed_inputs:
+        batch = {"tokens": _sds((b, s), jnp.int32)}
+    else:
+        batch = {"embeddings": _sds((b, s, cfg.d_model), adt)}
+    if info["kind"] == "train":
+        batch["labels"] = _sds((b, s), jnp.int32)
+    return batch
+
+
+def decode_state_specs(cfg, shape_name: str):
+    """(state_specs, token_specs) for serve_step lowering."""
+    info = SHAPES[shape_name]
+    assert info["kind"] == "decode"
+    b, s = info["global_batch"], info["seq_len"]
+    # b/s must stay static (they are shapes): close over them, no args.
+    state = jax.eval_shape(lambda: init_decode_state(cfg, b, s))
+    adt = dtype_of(cfg.activation_dtype)
+    if cfg.embed_inputs:
+        tokens = _sds((b,), jnp.int32)
+    else:
+        tokens = _sds((b, cfg.d_model), adt)
+    return state, tokens
+
+
+def params_specs(cfg, key=None):
+    from repro.models import init_params
+
+    key = key if key is not None else jax.random.PRNGKey(0)
+    return jax.eval_shape(functools.partial(init_params, cfg), key)
+
+
+def quantized_params_specs(cfg, key=None):
+    """Specs for the PTQTP-quantized serving params (paper technique)."""
+    from repro.core.ptqtp import PTQTPConfig
+    from repro.core.quantize_model import quantize_tree
+
+    dense = params_specs(cfg, key)
+
+    def q(tree):
+        out, _ = quantize_tree(tree, PTQTPConfig())
+        return out
+
+    return jax.eval_shape(q, dense)

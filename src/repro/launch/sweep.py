@@ -1,0 +1,94 @@
+"""Dry-run sweep driver: every runnable (arch × shape × mesh) cell.
+
+Each cell runs in its own subprocess (isolates XLA state + failures); results
+are cached as JSON in benchmarks/results/dryrun/, so re-running the sweep only
+fills the gaps. ``--quantized`` adds the PTQTP-serving variants for the
+inference shapes (the paper-technique roofline rows).
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import subprocess
+import sys
+import time
+from pathlib import Path
+
+REPO = Path(__file__).resolve().parents[3]
+RESULTS_DIR = REPO / "benchmarks" / "results" / "dryrun"
+
+
+def cells(include_quantized: bool):
+    from repro import configs  # safe: no device state touched
+
+    out = []
+    for arch, shape in configs.runnable_cells():
+        for mesh in ("single", "multi"):
+            out.append((arch, shape, mesh, False))
+        if include_quantized and shape in ("prefill_32k", "decode_32k",
+                                           "long_500k"):
+            out.append((arch, shape, "single", True))
+    return out
+
+
+def tag_of(arch, shape, mesh, quantized):
+    return f"{arch}__{shape}__{mesh}" + ("__q" if quantized else "")
+
+
+def run_one(arch, shape, mesh, quantized, timeout_s=3600):
+    cmd = [sys.executable, "-m", "repro.launch.dryrun",
+           "--arch", arch, "--shape", shape, "--mesh", mesh]
+    if quantized:
+        cmd.append("--quantized")
+    t0 = time.time()
+    proc = subprocess.run(
+        cmd, cwd=str(REPO), capture_output=True, text=True, timeout=timeout_s,
+        env={"PYTHONPATH": str(REPO / "src"), "PATH": "/usr/bin:/bin",
+             "HOME": "/root"},
+    )
+    dt = time.time() - t0
+    return proc.returncode, dt, proc.stdout[-2000:], proc.stderr[-4000:]
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quantized", action="store_true",
+                    help="also run PTQTP-quantized inference cells")
+    ap.add_argument("--force", action="store_true", help="ignore cache")
+    ap.add_argument("--only-arch", default=None)
+    args = ap.parse_args(argv)
+
+    todo = cells(args.quantized)
+    if args.only_arch:
+        todo = [c for c in todo if c[0] == args.only_arch]
+    RESULTS_DIR.mkdir(parents=True, exist_ok=True)
+
+    n_ok = n_skip = n_fail = 0
+    failures = []
+    for arch, shape, mesh, q in todo:
+        tag = tag_of(arch, shape, mesh, q)
+        out = RESULTS_DIR / f"{tag}.json"
+        if out.exists() and not args.force:
+            n_skip += 1
+            continue
+        print(f"[sweep] {tag} ...", flush=True)
+        try:
+            rc, dt, so, se = run_one(arch, shape, mesh, q)
+        except subprocess.TimeoutExpired:
+            rc, dt, so, se = -9, float("nan"), "", "TIMEOUT"
+        if rc == 0 and out.exists():
+            n_ok += 1
+            print(f"[sweep] {tag} OK ({dt:.0f}s)", flush=True)
+        else:
+            n_fail += 1
+            failures.append(tag)
+            print(f"[sweep] {tag} FAILED rc={rc}\n{se}", flush=True)
+    print(f"[sweep] done: ok={n_ok} cached={n_skip} failed={n_fail}")
+    if failures:
+        print("[sweep] failures:", failures)
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

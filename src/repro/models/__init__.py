@@ -1,0 +1,16 @@
+"""Model zoo: one generic decoder covering all 10 assigned architectures."""
+
+from repro.models.transformer import (
+    decode_step,
+    forward,
+    init_decode_state,
+    init_params,
+    loss_fn,
+    prefill,
+)
+from repro.models.common import use_matmul_backend
+
+__all__ = [
+    "init_params", "forward", "loss_fn", "prefill", "decode_step",
+    "init_decode_state", "use_matmul_backend",
+]

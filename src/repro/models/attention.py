@@ -1,0 +1,266 @@
+"""GQA attention: chunked full-causal and sliding-window variants + ring cache.
+
+Memory-safe by construction: the (S × S) score matrix is never materialized —
+training/prefill scans over query chunks (full attention: each chunk scores
+against all keys; local attention: only against the ⌈W/C⌉+1 covering key
+chunks, giving the O(S·W) FLOP count that the gemma3/recurrentgemma roofline
+requires).
+
+The decode cache is a *ring buffer* with per-slot absolute positions:
+full-attention layers use capacity = max context, sliding-window layers use
+capacity = W (so a gemma3 local layer at 500k context holds 1024 slots, not
+500k — the cache-memory optimization that makes `long_500k` feasible).
+One implementation serves both (window = capacity ⇒ full attention).
+"""
+
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import apply_rope, dense, dense_init, norm_init, rms_norm
+
+NEG_INF = -1e30
+
+
+def attn_init(key, cfg, dtype) -> Dict[str, Any]:
+    hd = cfg.head_dim
+    ks = jax.random.split(key, 4)
+    return {
+        "wq": dense_init(ks[0], cfg.d_model, cfg.n_heads * hd, bias=cfg.qkv_bias,
+                         dtype=dtype),
+        "wk": dense_init(ks[1], cfg.d_model, cfg.n_kv_heads * hd,
+                         bias=cfg.qkv_bias, dtype=dtype),
+        "wv": dense_init(ks[2], cfg.d_model, cfg.n_kv_heads * hd,
+                         bias=cfg.qkv_bias, dtype=dtype),
+        "wo": dense_init(ks[3], cfg.n_heads * hd, cfg.d_model, dtype=dtype),
+    }
+
+
+def _qkv(params, cfg, x, positions):
+    b, s, _ = x.shape
+    hd = cfg.head_dim
+    q = dense(params["wq"], x).reshape(b, s, cfg.n_heads, hd)
+    k = dense(params["wk"], x).reshape(b, s, cfg.n_kv_heads, hd)
+    v = dense(params["wv"], x).reshape(b, s, cfg.n_kv_heads, hd)
+    q = apply_rope(q, positions, cfg.rope_theta)
+    k = apply_rope(k, positions, cfg.rope_theta)
+    return q, k, v
+
+
+def _gqa_scores(q, k):
+    """q: (B, Sq, KV, G, hd), k: (B, Sk, KV, hd) -> (B, KV, G, Sq, Sk) f32."""
+    return jnp.einsum("bqkgd,bskd->bkgqs", q, k,
+                      preferred_element_type=jnp.float32)
+
+
+def _gqa_out(p, v):
+    """p: (B, KV, G, Sq, Sk), v: (B, Sk, KV, hd) -> (B, Sq, KV, G, hd)."""
+    return jnp.einsum("bkgqs,bskd->bqkgd", p, v.astype(p.dtype))
+
+
+def _pick_chunk(s: int, target: int) -> int:
+    for c in range(min(target, s), 0, -1):
+        if s % c == 0:
+            return c
+    return s
+
+
+def attention_forward(
+    params: Dict[str, Any],
+    cfg,
+    x: jax.Array,
+    positions: jax.Array,
+    *,
+    window: Optional[int] = None,
+    q_chunk: int = 1024,
+    return_kv: bool = False,
+):
+    """Full-sequence causal (optionally sliding-window) attention.
+
+    Args:
+      x: (B, S, D); positions: (S,) absolute positions (training: arange).
+      window: sliding-window size; None = full causal.
+      return_kv: also return the rotary-applied (k, v) for cache prefill.
+    """
+    b, s, _ = x.shape
+    hd = cfg.head_dim
+    kv, g = cfg.n_kv_heads, cfg.n_heads // cfg.n_kv_heads
+    scale = hd ** -0.5
+
+    q, k, v = _qkv(params, cfg, x, positions[None, :])
+    q = q.reshape(b, s, kv, g, hd)
+
+    c = _pick_chunk(s, q_chunk)
+    n_chunks = s // c
+
+    if window is None or window >= s:
+        # full causal: each q chunk scores against all keys
+        def body(_, i):
+            q_i = jax.lax.dynamic_slice(q, (0, i * c, 0, 0, 0),
+                                        (b, c, kv, g, hd))
+            qpos = jax.lax.dynamic_slice(positions, (i * c,), (c,))
+            logits = _gqa_scores(q_i, k) * scale  # (B,KV,G,c,S)
+            mask = positions[None, :] <= qpos[:, None]  # (c, S)
+            logits = jnp.where(mask[None, None, None], logits, NEG_INF)
+            p = jax.nn.softmax(logits, axis=-1)
+            return None, _gqa_out(p, v)
+
+        _, outs = jax.lax.scan(body, None, jnp.arange(n_chunks))
+    else:
+        w = window
+        n_prev = -(-w // c)  # chunks of history needed left of the q chunk
+        span = (n_prev + 1) * c
+
+        def body(_, i):
+            q_i = jax.lax.dynamic_slice(q, (0, i * c, 0, 0, 0),
+                                        (b, c, kv, g, hd))
+            start = jnp.maximum(i * c - n_prev * c, 0)
+            k_i = jax.lax.dynamic_slice(k, (0, start, 0, 0), (b, min(span, s), kv, hd))
+            v_i = jax.lax.dynamic_slice(v, (0, start, 0, 0), (b, min(span, s), kv, hd))
+            qpos = jax.lax.dynamic_slice(positions, (i * c,), (c,))
+            kpos = jax.lax.dynamic_slice(positions, (start,), (min(span, s),))
+            logits = _gqa_scores(q_i, k_i) * scale
+            mask = (kpos[None, :] <= qpos[:, None]) & (
+                qpos[:, None] - kpos[None, :] < w
+            )
+            logits = jnp.where(mask[None, None, None], logits, NEG_INF)
+            p = jax.nn.softmax(logits, axis=-1)
+            return None, _gqa_out(p, v_i)
+
+        _, outs = jax.lax.scan(body, None, jnp.arange(n_chunks))
+
+    # outs: (n_chunks, B, c, KV, G, hd) -> (B, S, H*hd)
+    y = jnp.moveaxis(outs, 0, 1).reshape(b, s, cfg.n_heads * hd)
+    y = dense(params["wo"], y.astype(x.dtype))
+    if return_kv:
+        return y, (k, v)
+    return y
+
+
+# ---------------------------------------------------------------------------
+# decode: ring-buffer KV cache
+# ---------------------------------------------------------------------------
+
+def cache_init(cfg, batch: int, capacity: int, window: Optional[int],
+               dtype) -> Dict[str, Any]:
+    """Ring cache. capacity = min(window, max_context) for local layers.
+
+    kv_cache_dtype="int8" (§Perf it. 5, beyond-paper): k/v stored int8 with
+    per-(slot, kv-head) absmax scales — halves cache HBM capacity AND the
+    decode-read traffic that dominates the decode_32k memory term.
+    """
+    cap = min(window, capacity) if window else capacity
+    hd = cfg.head_dim
+    cache = {"pos": jnp.full((batch, cap), -1, jnp.int32)}
+    if cfg.kv_cache_dtype == "int8":
+        cache["k"] = jnp.zeros((batch, cap, cfg.n_kv_heads, hd), jnp.int8)
+        cache["v"] = jnp.zeros((batch, cap, cfg.n_kv_heads, hd), jnp.int8)
+        cache["k_scale"] = jnp.zeros((batch, cap, cfg.n_kv_heads), jnp.float32)
+        cache["v_scale"] = jnp.zeros((batch, cap, cfg.n_kv_heads), jnp.float32)
+    else:
+        cache["k"] = jnp.zeros((batch, cap, cfg.n_kv_heads, hd), dtype)
+        cache["v"] = jnp.zeros((batch, cap, cfg.n_kv_heads, hd), dtype)
+    return cache
+
+
+def _q8(x):
+    """absmax int8 quantization over the trailing (head) dim."""
+    scale = jnp.max(jnp.abs(x.astype(jnp.float32)), axis=-1) / 127.0
+    scale = jnp.maximum(scale, 1e-10)
+    q = jnp.clip(jnp.round(x.astype(jnp.float32) / scale[..., None]),
+                 -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def _deq8(q, scale, dtype):
+    return (q.astype(jnp.float32) * scale[..., None]).astype(dtype)
+
+
+def cache_prefill(cfg, cache: Dict[str, Any], k, v, positions) -> Dict[str, Any]:
+    """Write a full prefill sequence into the ring (keeps the last `cap`).
+
+    k/v: (B, S, KV, hd); positions: (B, S) absolute.
+    """
+    b, s, kv, hd = k.shape
+    cap = cache["k"].shape[1]
+    if s <= cap:
+        ktail, vtail, ptail = k, v, positions
+    else:
+        ktail, vtail, ptail = k[:, -cap:], v[:, -cap:], positions[:, -cap:]
+    slots = ptail % cap
+    out = {"pos": _scatter_slots(cache["pos"], slots,
+                                 ptail.astype(jnp.int32))}
+    if "k_scale" in cache:  # int8 cache
+        kq, ks = _q8(ktail)
+        vq, vs = _q8(vtail)
+        out["k"] = _scatter_slots(cache["k"], slots, kq)
+        out["v"] = _scatter_slots(cache["v"], slots, vq)
+        out["k_scale"] = _scatter_slots(cache["k_scale"], slots, ks)
+        out["v_scale"] = _scatter_slots(cache["v_scale"], slots, vs)
+    else:
+        out["k"] = _scatter_slots(cache["k"], slots, ktail)
+        out["v"] = _scatter_slots(cache["v"], slots, vtail)
+    return out
+
+
+def _scatter_slots(buf, slots, vals):
+    """buf: (B, cap, ...), slots: (B, S), vals: (B, S, ...)."""
+    def per_batch(bf, sl, vl):
+        return bf.at[sl].set(vl)
+
+    return jax.vmap(per_batch)(buf, slots, vals)
+
+
+def attention_decode(
+    params: Dict[str, Any],
+    cfg,
+    cache: Dict[str, Any],
+    x_t: jax.Array,
+    pos: jax.Array,
+    *,
+    window: Optional[int] = None,
+) -> Tuple[jax.Array, Dict[str, Any]]:
+    """One-token decode. x_t: (B, D); pos: (B,) absolute position of x_t."""
+    b, _ = x_t.shape
+    hd = cfg.head_dim
+    kv, g = cfg.n_kv_heads, cfg.n_heads // cfg.n_kv_heads
+    cap = cache["k"].shape[1]
+    scale = hd ** -0.5
+
+    q = dense(params["wq"], x_t).reshape(b, cfg.n_heads, hd)
+    k_t = dense(params["wk"], x_t).reshape(b, kv, hd)
+    v_t = dense(params["wv"], x_t).reshape(b, kv, hd)
+    q = apply_rope(q, pos, cfg.rope_theta)
+    k_t = apply_rope(k_t, pos, cfg.rope_theta)
+
+    slot = (pos % cap).astype(jnp.int32)  # (B,)
+    upd = lambda bf, s_, v_: bf.at[s_].set(v_)
+    pc = jax.vmap(upd)(cache["pos"], slot, pos.astype(jnp.int32))
+    new_cache = {"pos": pc}
+    if "k_scale" in cache:  # int8 cache: quantize the new token, dequant read
+        kq, ks = _q8(k_t)
+        vq, vs = _q8(v_t)
+        kc8 = jax.vmap(upd)(cache["k"], slot, kq)
+        vc8 = jax.vmap(upd)(cache["v"], slot, vq)
+        ksc = jax.vmap(upd)(cache["k_scale"], slot, ks)
+        vsc = jax.vmap(upd)(cache["v_scale"], slot, vs)
+        new_cache.update(k=kc8, v=vc8, k_scale=ksc, v_scale=vsc)
+        kc = _deq8(kc8, ksc, x_t.dtype)
+        vc = _deq8(vc8, vsc, x_t.dtype)
+    else:
+        kc = jax.vmap(upd)(cache["k"], slot, k_t)
+        vc = jax.vmap(upd)(cache["v"], slot, v_t)
+        new_cache.update(k=kc, v=vc)
+
+    qh = q.reshape(b, 1, kv, g, hd)
+    logits = _gqa_scores(qh, kc)[:, :, :, 0, :] * scale  # (B, KV, G, cap)
+    w_eff = window if window else cap + 1
+    valid = (pc >= 0) & (pc <= pos[:, None]) & (pos[:, None] - pc < w_eff)
+    logits = jnp.where(valid[:, None, None, :], logits, NEG_INF)
+    p = jax.nn.softmax(logits, axis=-1)
+    y = jnp.einsum("bkgs,bskd->bkgd", p, vc.astype(p.dtype))
+    y = y.reshape(b, cfg.n_heads * hd).astype(x_t.dtype)
+    return dense(params["wo"], y), new_cache

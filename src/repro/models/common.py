@@ -1,0 +1,107 @@
+"""Shared building blocks: dense (with PTQTP dispatch), RMSNorm, RoPE, init.
+
+The framework is pure-functional JAX: params are nested dicts of arrays,
+modules are (init, apply) function pairs. A dense layer's ``kernel`` leaf may
+be replaced post-training by a ``QuantizedKernel`` (two packed trit-planes +
+group scales); ``dense`` dispatches on the leaf type, so *every* model in the
+zoo serves quantized without architectural change — the paper's
+model-agnosticity claim, made structural.
+"""
+
+from __future__ import annotations
+
+import contextlib
+import threading
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.quantize_model import QuantizedKernel
+
+_state = threading.local()
+
+
+def matmul_backend() -> str:
+    return getattr(_state, "backend", "grouped")
+
+
+@contextlib.contextmanager
+def use_matmul_backend(backend: str):
+    """Select the quantized-matmul backend ('grouped'|'pallas'|'ref')."""
+    prev = matmul_backend()
+    _state.backend = backend
+    try:
+        yield
+    finally:
+        _state.backend = prev
+
+
+# ---------------------------------------------------------------------------
+# initializers
+# ---------------------------------------------------------------------------
+
+def dense_init(key, d_in: int, d_out: int, *, bias: bool = False,
+               dtype=jnp.float32, scale: Optional[float] = None) -> Dict[str, Any]:
+    std = scale if scale is not None else (1.0 / np.sqrt(d_in))
+    p = {"kernel": (jax.random.normal(key, (d_in, d_out)) * std).astype(dtype)}
+    if bias:
+        p["bias"] = jnp.zeros((d_out,), dtype)
+    return p
+
+
+def dense(params: Dict[str, Any], x: jax.Array) -> jax.Array:
+    """y = x @ kernel (+ bias); kernel may be a QuantizedKernel."""
+    k = params["kernel"]
+    if isinstance(k, QuantizedKernel):
+        from repro.kernels.ternary_matmul.ops import ternary_matmul
+
+        y = ternary_matmul(
+            x, k.t1p, k.t2p, k.alpha,
+            group_size=k.group_size, backend=matmul_backend(),
+            out_dtype=x.dtype,
+        )
+    else:
+        y = jnp.einsum("...d,df->...f", x, k.astype(x.dtype))
+    if "bias" in params:
+        y = y + params["bias"].astype(y.dtype)
+    return y
+
+
+def norm_init(d: int, dtype=jnp.float32) -> Dict[str, Any]:
+    return {"scale": jnp.ones((d,), dtype)}
+
+
+def rms_norm(params: Dict[str, Any], x: jax.Array, eps: float = 1e-5) -> jax.Array:
+    dt = x.dtype
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    y = xf * jax.lax.rsqrt(var + eps)
+    return (y * params["scale"].astype(jnp.float32)).astype(dt)
+
+
+# ---------------------------------------------------------------------------
+# rotary position embedding
+# ---------------------------------------------------------------------------
+
+def rope_freqs(head_dim: int, theta: float) -> jax.Array:
+    half = head_dim // 2
+    return 1.0 / (theta ** (jnp.arange(0, half, dtype=jnp.float32) / half))
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """x: (..., S, H, hd) or (..., H, hd) with positions (..., S) / (...,)."""
+    hd = x.shape[-1]
+    freqs = rope_freqs(hd, theta)  # (hd/2,)
+    ang = positions[..., None].astype(jnp.float32) * freqs  # (..., S, hd/2)
+    cos = jnp.cos(ang)[..., None, :]  # broadcast over heads
+    sin = jnp.sin(ang)[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+def dtype_of(name: str):
+    return {"float32": jnp.float32, "bfloat16": jnp.bfloat16,
+            "float16": jnp.float16}[name]

@@ -1,0 +1,38 @@
+"""Feed-forward variants: SwiGLU (llama/qwen/phi), GeGLU (gemma), GELU (musicgen)."""
+
+from __future__ import annotations
+
+from typing import Any, Dict
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import dense, dense_init
+
+
+def mlp_init(key, d_model: int, d_ff: int, mlp_type: str, dtype) -> Dict[str, Any]:
+    ks = jax.random.split(key, 3)
+    if mlp_type in ("swiglu", "geglu"):
+        return {
+            "wi": dense_init(ks[0], d_model, d_ff, dtype=dtype),
+            "wg": dense_init(ks[1], d_model, d_ff, dtype=dtype),
+            "wo": dense_init(ks[2], d_ff, d_model, dtype=dtype),
+        }
+    if mlp_type == "gelu":
+        return {
+            "wi": dense_init(ks[0], d_model, d_ff, dtype=dtype),
+            "wo": dense_init(ks[2], d_ff, d_model, dtype=dtype),
+        }
+    raise ValueError(mlp_type)
+
+
+def mlp_forward(params: Dict[str, Any], x: jax.Array, mlp_type: str) -> jax.Array:
+    if mlp_type == "swiglu":
+        h = jax.nn.silu(dense(params["wg"], x)) * dense(params["wi"], x)
+    elif mlp_type == "geglu":
+        h = jax.nn.gelu(dense(params["wg"], x)) * dense(params["wi"], x)
+    elif mlp_type == "gelu":
+        h = jax.nn.gelu(dense(params["wi"], x))
+    else:
+        raise ValueError(mlp_type)
+    return dense(params["wo"], h)

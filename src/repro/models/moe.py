@@ -1,0 +1,137 @@
+"""Mixture-of-Experts FFN: top-k routing, capacity-bounded sort-based dispatch,
+optional shared experts (DeepSeek-MoE style), expert-parallel friendly layout.
+
+Dispatch is the sort/scatter formulation (no (T, E, C) one-hot tensors):
+  1. router top-k per token, probabilities renormalized over the k winners,
+  2. (token, expert) assignments sorted by expert id,
+  3. rank-within-expert via counts/segment offsets,
+  4. scatter into dense (E, C, D) buffers (capacity-dropped tokens masked),
+  5. per-expert FFN as one stacked einsum over the E axis — shardable over
+     the `model` mesh axis when E % tp == 0 (expert parallelism), else the
+     FFN hidden dim shards (tensor parallelism),
+  6. gather + combine back to (T, D).
+
+Capacity C = ceil(T·k/E · capacity_factor) bounds compute and makes the
+FLOP count match the active-parameter roofline (6·N_active·D).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import dense, dense_init
+from repro.models.mlp import mlp_forward, mlp_init
+
+
+@dataclasses.dataclass(frozen=True)
+class MoEConfig:
+    n_experts: int
+    top_k: int
+    d_expert: int                 # per-expert FFN hidden size
+    n_shared: int = 0             # always-on shared experts (deepseek)
+    capacity_factor: float = 1.25
+    router_dtype: str = "float32"
+
+
+def moe_init(key, d_model: int, moe: MoEConfig, mlp_type: str, dtype) -> Dict[str, Any]:
+    ks = jax.random.split(key, 5)
+    e, fe = moe.n_experts, moe.d_expert
+    std = 1.0 / jnp.sqrt(d_model).astype(jnp.float32)
+    params: Dict[str, Any] = {
+        "router": dense_init(ks[0], d_model, e, dtype=jnp.float32),
+        "experts": {
+            "wi": {"kernel": (jax.random.normal(ks[1], (e, d_model, fe)) * std).astype(dtype)},
+            "wg": {"kernel": (jax.random.normal(ks[2], (e, d_model, fe)) * std).astype(dtype)},
+            "wo": {"kernel": (jax.random.normal(ks[3], (e, fe, d_model))
+                              * (1.0 / jnp.sqrt(fe))).astype(dtype)},
+        },
+    }
+    if moe.n_shared:
+        params["shared"] = mlp_init(ks[4], d_model, moe.n_shared * fe, mlp_type,
+                                    dtype)
+    return params
+
+
+def _expert_ffn(experts: Dict[str, Any], xe: jax.Array) -> jax.Array:
+    """xe: (E, C, D) -> (E, C, D) via per-expert SwiGLU."""
+    from repro.core.quantize_model import QuantizedKernel
+    from repro.kernels.ternary_matmul.ops import ternary_matmul
+    from repro.models.common import matmul_backend
+
+    def mm(p, x, eq):
+        k = p["kernel"]
+        if isinstance(k, QuantizedKernel):
+            def one(xi, t1p, t2p, al):
+                return ternary_matmul(xi, t1p, t2p, al, group_size=k.group_size,
+                                      backend=matmul_backend(), out_dtype=xi.dtype)
+            return jax.vmap(one)(x, k.t1p, k.t2p, k.alpha)
+        return jnp.einsum(eq, x, k.astype(x.dtype))
+
+    h = jax.nn.silu(mm(experts["wg"], xe, "ecd,edf->ecf")) * mm(
+        experts["wi"], xe, "ecd,edf->ecf")
+    return mm(experts["wo"], h, "ecf,efd->ecd")
+
+
+def moe_forward(params: Dict[str, Any], x: jax.Array, moe: MoEConfig,
+                mlp_type: str = "swiglu") -> jax.Array:
+    """x: (B, S, D) -> (B, S, D)."""
+    b, s, d = x.shape
+    t = b * s
+    e, k = moe.n_experts, moe.top_k
+    xf = x.reshape(t, d)
+
+    logits = dense(params["router"], xf.astype(jnp.float32))  # (T, E)
+    probs = jax.nn.softmax(logits, axis=-1)
+    top_p, top_e = jax.lax.top_k(probs, k)  # (T, k)
+    top_p = top_p / jnp.maximum(jnp.sum(top_p, axis=-1, keepdims=True), 1e-9)
+
+    # flatten (token, slot) assignments and sort by expert
+    flat_e = top_e.reshape(-1)                      # (T*k,)
+    flat_p = top_p.reshape(-1)
+    flat_tok = jnp.repeat(jnp.arange(t), k)
+    order = jnp.argsort(flat_e, stable=True)
+    se, sp, stok = flat_e[order], flat_p[order], flat_tok[order]
+
+    counts = jnp.bincount(se, length=e)             # (E,)
+    starts = jnp.cumsum(counts) - counts            # exclusive prefix
+    rank = jnp.arange(t * k) - starts[se]           # rank within expert
+
+    if moe.capacity_factor <= 0:
+        cap = t * k  # exact no-drop mode (tests / tiny decode batches)
+    else:
+        cap = int(max(1, round(t * k / e * moe.capacity_factor)))
+    keep = rank < cap
+    dst = jnp.where(keep, se * cap + jnp.clip(rank, 0, cap - 1), e * cap)
+
+    # scatter tokens into (E*C (+1 overflow), D)
+    buf = jnp.zeros((e * cap + 1, d), x.dtype)
+    buf = buf.at[dst].add(xf[stok] * keep[:, None].astype(x.dtype))
+    xe = buf[:-1].reshape(e, cap, d)
+
+    ye = _expert_ffn(params["experts"], xe)         # (E, C, D)
+    yf = ye.reshape(e * cap, d)
+
+    # gather back and combine
+    contrib = yf[jnp.clip(dst, 0, e * cap - 1)] * (
+        sp * keep.astype(jnp.float32))[:, None].astype(x.dtype)
+    y = jnp.zeros((t, d), x.dtype).at[stok].add(contrib)
+
+    if "shared" in params:
+        y = y + mlp_forward(params["shared"], xf, mlp_type)
+    return y.reshape(b, s, d)
+
+
+def moe_aux_loss(params: Dict[str, Any], x: jax.Array, moe: MoEConfig) -> jax.Array:
+    """Load-balancing auxiliary loss (Switch-style): E · Σ_e f_e · p_e."""
+    b, s, d = x.shape
+    xf = x.reshape(-1, d)
+    logits = dense(params["router"], xf.astype(jnp.float32))
+    probs = jax.nn.softmax(logits, axis=-1)
+    top_e = jnp.argmax(probs, axis=-1)
+    frac = jnp.mean(jax.nn.one_hot(top_e, moe.n_experts), axis=0)
+    imp = jnp.mean(probs, axis=0)
+    return moe.n_experts * jnp.sum(frac * imp)

@@ -1,0 +1,112 @@
+"""RG-LRU recurrent block (RecurrentGemma / Griffin, arXiv:2402.19427).
+
+Block = dual linear branches → temporal conv1d (width 4) → RG-LRU → gated out:
+
+  x_b = W_x·x ;  g_b = gelu(W_g·x)
+  c_t = conv1d(x_b)                                 (depthwise, width 4)
+  r_t = σ(BD_a(c_t));  i_t = σ(BD_x(c_t))           (block-diagonal gates)
+  a_t = exp(−c·softplus(Λ) ⊙ r_t)                   (c = 8)
+  h_t = a_t ⊙ h_{t−1} + √(1 − a_t²) ⊙ (i_t ⊙ c_t)
+  y   = W_o (g_b ⊙ h)
+
+State is (B, R) hidden + (B, conv_width−1, R) conv tail — O(1) per decoded
+token, which is what makes recurrentgemma a `long_500k` architecture.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import dense, dense_init
+
+_C = 8.0  # Griffin's recurrence-gate sharpness constant
+
+
+def rglru_init(key, d: int, r: int, n_blocks: int, conv_width: int,
+               dtype) -> Dict[str, Any]:
+    ks = jax.random.split(key, 6)
+    rb = r // n_blocks
+    return {
+        "wx": dense_init(ks[0], d, r, dtype=dtype),
+        "wgate": dense_init(ks[1], d, r, dtype=dtype),
+        "conv": {
+            "w": (jax.random.normal(ks[2], (conv_width, r)) * 0.1).astype(dtype),
+            "b": jnp.zeros((r,), dtype),
+        },
+        "gate_a": {"w": (jax.random.normal(ks[3], (n_blocks, rb, rb))
+                         * (1.0 / jnp.sqrt(rb))).astype(dtype),
+                   "b": jnp.zeros((r,), dtype)},
+        "gate_x": {"w": (jax.random.normal(ks[4], (n_blocks, rb, rb))
+                         * (1.0 / jnp.sqrt(rb))).astype(dtype),
+                   "b": jnp.zeros((r,), dtype)},
+        # softplus(Λ) init so a^c ≈ 0.9…0.999 (Griffin's stable range)
+        "lam": jnp.linspace(-4.3, -0.7, r).astype(dtype),
+        "wo": dense_init(ks[5], r, d, dtype=dtype),
+    }
+
+
+def _block_diag(gate, x, n_blocks: int):
+    """x: (..., R) through block-diagonal weight (n_blocks, rb, rb)."""
+    r = x.shape[-1]
+    rb = r // n_blocks
+    xb = x.reshape(*x.shape[:-1], n_blocks, rb)
+    y = jnp.einsum("...nr,nrs->...ns", xb, gate["w"].astype(x.dtype))
+    return y.reshape(*x.shape[:-1], r) + gate["b"].astype(x.dtype)
+
+
+def _conv1d(p, x, conv_state=None):
+    """Causal depthwise conv. x: (B, S, R); conv_state: (B, W-1, R)."""
+    w = p["w"].astype(x.dtype)  # (W, R)
+    width = w.shape[0]
+    if conv_state is None:
+        conv_state = jnp.zeros((x.shape[0], width - 1, x.shape[-1]), x.dtype)
+    xp = jnp.concatenate([conv_state, x], axis=1)
+    y = sum(xp[:, i:i + x.shape[1]] * w[i] for i in range(width))
+    return y + p["b"].astype(x.dtype), xp[:, -(width - 1):]
+
+
+def _lru_scan(a, gx, h0):
+    """h_t = a_t ⊙ h_{t−1} + gx_t ; all (B, S, R) f32; h0 (B, R)."""
+    def step(h, inp):
+        at, gt = inp
+        h = at * h + gt
+        return h, h
+
+    xs = (jnp.moveaxis(a, 1, 0), jnp.moveaxis(gx, 1, 0))
+    h_last, hs = jax.lax.scan(step, h0, xs)
+    return jnp.moveaxis(hs, 0, 1), h_last
+
+
+def rglru_forward(p, x, n_blocks: int, state: Tuple | None = None):
+    """x: (B, S, D) -> (y, (h_last, conv_state))."""
+    b, s, d = x.shape
+    conv_state = state[1] if state is not None else None
+    h0 = (state[0] if state is not None
+          else jnp.zeros((b, p["lam"].shape[0]), jnp.float32))
+
+    xb = dense(p["wx"], x)
+    gb = jax.nn.gelu(dense(p["wgate"], x))
+    c, conv_state = _conv1d(p["conv"], xb, conv_state)
+
+    rt = jax.nn.sigmoid(_block_diag(p["gate_a"], c, n_blocks)).astype(jnp.float32)
+    it = jax.nn.sigmoid(_block_diag(p["gate_x"], c, n_blocks)).astype(jnp.float32)
+    log_a = -_C * jax.nn.softplus(p["lam"].astype(jnp.float32)) * rt
+    a = jnp.exp(log_a)
+    gated_x = jnp.sqrt(jnp.maximum(1.0 - jnp.exp(2.0 * log_a), 1e-12)) * (
+        it * c.astype(jnp.float32))
+    h, h_last = _lru_scan(a, gated_x, h0)
+    y = dense(p["wo"], (gb.astype(jnp.float32) * h).astype(x.dtype))
+    return y, (h_last, conv_state)
+
+
+def rglru_decode(p, x_t, n_blocks: int, state):
+    y, new_state = rglru_forward(p, x_t[:, None], n_blocks, state)
+    return y[:, 0], new_state
+
+
+def rglru_state_init(batch: int, r: int, conv_width: int, dtype):
+    return (jnp.zeros((batch, r), jnp.float32),
+            jnp.zeros((batch, conv_width - 1, r), dtype))

@@ -1,0 +1,162 @@
+"""RWKV6 "Finch" block: data-dependent token-shift + decay linear recurrence.
+
+Faithful to arXiv:2404.05892 at the block level:
+
+  time-mix:
+    ddlerp token shift    x_j = x + (shift(x) − x) ⊙ (μ_j + lora_j(x))
+    projections           r, k, v, g  (D→D);  g gated with SiLU
+    data-dependent decay  w_t = exp(−exp(w0 + tanh(x_w W_a) W_b))  per channel
+    per-head WKV state    S_t = diag(w_t) S_{t−1} + k_t v_tᵀ      (hd × hd)
+    readout               y_t = r_tᵀ (S_{t−1} + diag(u) k_t v_tᵀ)
+    group-norm over heads, ⊙ g, output projection.
+
+  channel-mix:
+    k = relu(x_k W_k)²;  y = σ(x_r W_r) ⊙ (k W_v)
+
+Training/prefill run the recurrence as a `lax.scan` over time (O(T·D·hd)
+FLOPs — the sub-quadratic path that makes `long_500k` runnable); decode is a
+single recurrence step on a (B, H, hd, hd) state.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import dense, dense_init
+
+_MIX_NAMES = ("w", "k", "v", "r", "g")
+_LORA_R = 32       # token-shift lora rank
+_DECAY_R = 64      # decay lora rank
+
+
+def rwkv_time_init(key, d: int, head_dim: int, dtype) -> Dict[str, Any]:
+    h = d // head_dim
+    ks = jax.random.split(key, 12)
+    p: Dict[str, Any] = {
+        "mu_x": jnp.zeros((d,), dtype),
+        "mu": jnp.zeros((len(_MIX_NAMES), d), dtype),
+        "mix_lora_a": (jax.random.normal(ks[0], (d, len(_MIX_NAMES) * _LORA_R))
+                       * 0.01).astype(dtype),
+        "mix_lora_b": (jax.random.normal(ks[1], (len(_MIX_NAMES), _LORA_R, d))
+                       * 0.01).astype(dtype),
+        "decay_base": jnp.linspace(-6.0, -1.0, d).astype(dtype),
+        "decay_lora_a": (jax.random.normal(ks[2], (d, _DECAY_R)) * 0.01).astype(dtype),
+        "decay_lora_b": (jax.random.normal(ks[3], (_DECAY_R, d)) * 0.01).astype(dtype),
+        "u": (jax.random.normal(ks[4], (h, head_dim)) * 0.1).astype(dtype),
+        "wr": dense_init(ks[5], d, d, dtype=dtype),
+        "wk": dense_init(ks[6], d, d, dtype=dtype),
+        "wv": dense_init(ks[7], d, d, dtype=dtype),
+        "wg": dense_init(ks[8], d, d, dtype=dtype),
+        "wo": dense_init(ks[9], d, d, dtype=dtype),
+        "ln_x": {"scale": jnp.ones((d,), dtype)},
+    }
+    return p
+
+
+def _ddlerp(p, x, x_prev):
+    """Data-dependent token-shift (B, S, D) -> dict of mixed inputs."""
+    sx = x_prev - x
+    xx = x + sx * p["mu_x"].astype(x.dtype)
+    a = jnp.tanh(jnp.einsum("bsd,dr->bsr", xx, p["mix_lora_a"].astype(x.dtype)))
+    a = a.reshape(*a.shape[:-1], len(_MIX_NAMES), _LORA_R)
+    adj = jnp.einsum("bsnr,nrd->bsnd", a, p["mix_lora_b"].astype(x.dtype))
+    out = {}
+    for i, name in enumerate(_MIX_NAMES):
+        mix = p["mu"][i].astype(x.dtype) + adj[..., i, :]
+        out[name] = x + sx * mix
+    return out
+
+
+def _decay(p, xw):
+    """Per-token per-channel decay w_t ∈ (0, 1)."""
+    lo = jnp.einsum("bsd,dr->bsr", xw, p["decay_lora_a"].astype(xw.dtype))
+    lo = jnp.einsum("bsr,rd->bsd", jnp.tanh(lo), p["decay_lora_b"].astype(xw.dtype))
+    return jnp.exp(-jnp.exp(p["decay_base"].astype(jnp.float32) +
+                            lo.astype(jnp.float32)))
+
+
+def _group_norm(scale, x, h):
+    """Head-wise group norm over (B, S, H*hd)."""
+    b = x.shape[:-1]
+    d = x.shape[-1]
+    xg = x.reshape(*b, h, d // h).astype(jnp.float32)
+    mean = jnp.mean(xg, axis=-1, keepdims=True)
+    var = jnp.var(xg, axis=-1, keepdims=True)
+    xg = (xg - mean) * jax.lax.rsqrt(var + 1e-5)
+    return (xg.reshape(*b, d) * scale.astype(jnp.float32)).astype(x.dtype)
+
+
+def rwkv_time_forward(p, x, head_dim: int, state=None):
+    """x: (B, S, D). Returns (y, (x_last, S_last)) for cache handoff."""
+    bsz, s, d = x.shape
+    h = d // head_dim
+    x_prev = jnp.concatenate(
+        [state[0][:, None] if state is not None else jnp.zeros_like(x[:, :1]),
+         x[:, :-1]], axis=1)
+    m = _ddlerp(p, x, x_prev)
+    r = dense(p["wr"], m["r"]).reshape(bsz, s, h, head_dim)
+    k = dense(p["wk"], m["k"]).reshape(bsz, s, h, head_dim)
+    v = dense(p["wv"], m["v"]).reshape(bsz, s, h, head_dim)
+    g = jax.nn.silu(dense(p["wg"], m["g"]))
+    w = _decay(p, m["w"]).reshape(bsz, s, h, head_dim)  # f32
+    u = p["u"].astype(jnp.float32)
+
+    s0 = (state[1] if state is not None
+          else jnp.zeros((bsz, h, head_dim, head_dim), jnp.float32))
+
+    def step(carry, inp):
+        st = carry  # (B, H, hd, hd)
+        rt, kt, vt, wt = inp  # (B, H, hd) each
+        kv = jnp.einsum("bhi,bhj->bhij", kt, vt)
+        yt = jnp.einsum("bhi,bhij->bhj", rt, st + u[None, :, :, None] * kv)
+        st = wt[..., None] * st + kv
+        return st, yt
+
+    xs = (
+        jnp.moveaxis(r, 1, 0).astype(jnp.float32),
+        jnp.moveaxis(k, 1, 0).astype(jnp.float32),
+        jnp.moveaxis(v, 1, 0).astype(jnp.float32),
+        jnp.moveaxis(w, 1, 0),
+    )
+    s_last, ys = jax.lax.scan(step, s0, xs)
+    y = jnp.moveaxis(ys, 0, 1).reshape(bsz, s, d).astype(x.dtype)
+    y = _group_norm(p["ln_x"]["scale"], y, h) * g
+    return dense(p["wo"], y), (x[:, -1], s_last)
+
+
+def rwkv_time_decode(p, x_t, head_dim: int, state):
+    """x_t: (B, D); state = (x_prev (B,D), S (B,H,hd,hd))."""
+    y, new_state = rwkv_time_forward(p, x_t[:, None], head_dim, state)
+    return y[:, 0], new_state
+
+
+def rwkv_channel_init(key, d: int, d_ff: int, dtype) -> Dict[str, Any]:
+    ks = jax.random.split(key, 3)
+    return {
+        "mu_k": jnp.zeros((d,), dtype),
+        "mu_r": jnp.zeros((d,), dtype),
+        "wk": dense_init(ks[0], d, d_ff, dtype=dtype),
+        "wv": dense_init(ks[1], d_ff, d, dtype=dtype),
+        "wr": dense_init(ks[2], d, d, dtype=dtype),
+    }
+
+
+def rwkv_channel_forward(p, x, state=None):
+    """x: (B, S, D) -> (y, x_last)."""
+    x_prev = jnp.concatenate(
+        [state[:, None] if state is not None else jnp.zeros_like(x[:, :1]),
+         x[:, :-1]], axis=1)
+    sx = x_prev - x
+    xk = x + sx * p["mu_k"].astype(x.dtype)
+    xr = x + sx * p["mu_r"].astype(x.dtype)
+    k = jnp.square(jax.nn.relu(dense(p["wk"], xk)))
+    y = jax.nn.sigmoid(dense(p["wr"], xr)) * dense(p["wv"], k)
+    return y, x[:, -1]
+
+
+def rwkv_channel_decode(p, x_t, state):
+    y, new_state = rwkv_channel_forward(p, x_t[:, None], state)
+    return y[:, 0], new_state

@@ -1,0 +1,406 @@
+"""Generic decoder LM covering all assigned architectures.
+
+Layer stacking: prefix blocks (unscanned) + `lax.scan` over the repeating
+block-pattern period (compile time O(1) in depth; params stacked with a
+leading n_periods axis) + automatic remainder blocks. Remat wraps the scan
+body. Decode threads per-layer caches through the same scan as (xs → ys).
+
+Model API (all pure functions):
+  init_params(cfg, key)                        → params
+  forward(params, cfg, batch)                  → logits (B, S, V)
+  loss_fn(params, cfg, batch)                  → scalar xent (+ MoE aux)
+  prefill(params, cfg, batch, capacity)        → (last_logits, state)
+  decode_step(params, cfg, state, tokens)      → (logits, state)
+  init_decode_state(cfg, batch, capacity)      → state   (zeros; for dry-run
+                                                  use jax.eval_shape)
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import attention as attn
+from repro.models import mlp as mlp_mod
+from repro.models import moe as moe_mod
+from repro.models import rglru as rglru_mod
+from repro.models import rwkv6 as rwkv_mod
+from repro.models.common import dense, dense_init, dtype_of, norm_init, rms_norm
+from repro.sharding.api import constrain
+
+
+# ---------------------------------------------------------------------------
+# block init / forward / prefill / decode dispatch
+# ---------------------------------------------------------------------------
+
+def _block_init(kind: str, cfg, key, dtype) -> Dict[str, Any]:
+    ks = jax.random.split(key, 4)
+    d = cfg.d_model
+    if kind == "rwkv":
+        return {
+            "time_norm": norm_init(d, dtype),
+            "time": rwkv_mod.rwkv_time_init(ks[0], d, cfg.rwkv_head_dim, dtype),
+            "chan_norm": norm_init(d, dtype),
+            "chan": rwkv_mod.rwkv_channel_init(ks[1], d, cfg.d_ff, dtype),
+        }
+    if kind.startswith("rglru"):
+        r = cfg.rglru_width or d
+        nb = cfg.rglru_blocks or cfg.n_heads
+        return {
+            "rec_norm": norm_init(d, dtype),
+            "rec": rglru_mod.rglru_init(ks[0], d, r, nb, cfg.conv_width, dtype),
+            "mlp_norm": norm_init(d, dtype),
+            "mlp": mlp_mod.mlp_init(ks[1], d, cfg.d_ff, cfg.mlp_type, dtype),
+        }
+    mixer, ffn = kind.split("+")
+    p = {
+        "attn_norm": norm_init(d, dtype),
+        "attn": attn.attn_init(ks[0], cfg, dtype),
+        "mlp_norm": norm_init(d, dtype),
+    }
+    if ffn == "moe":
+        p["moe"] = moe_mod.moe_init(ks[1], d, cfg.moe, cfg.mlp_type, dtype)
+    else:
+        p["mlp"] = mlp_mod.mlp_init(ks[1], d, cfg.d_ff, cfg.mlp_type, dtype)
+    return p
+
+
+def _mixer_window(kind: str, cfg) -> Optional[int]:
+    return cfg.window if kind.startswith("local") else None
+
+
+def _block_forward(kind: str, p, cfg, x, positions):
+    if kind == "rwkv":
+        y, _ = rwkv_mod.rwkv_time_forward(
+            p["time"], rms_norm(p["time_norm"], x, cfg.norm_eps),
+            cfg.rwkv_head_dim)
+        x = x + y
+        y, _ = rwkv_mod.rwkv_channel_forward(
+            p["chan"], rms_norm(p["chan_norm"], x, cfg.norm_eps))
+        return x + y
+    if kind.startswith("rglru"):
+        y, _ = rglru_mod.rglru_forward(
+            p["rec"], rms_norm(p["rec_norm"], x, cfg.norm_eps),
+            cfg.rglru_blocks or cfg.n_heads)
+        x = x + y
+        y = mlp_mod.mlp_forward(p["mlp"],
+                                rms_norm(p["mlp_norm"], x, cfg.norm_eps),
+                                cfg.mlp_type)
+        return x + y
+    # attention blocks
+    y = attn.attention_forward(
+        p["attn"], cfg, rms_norm(p["attn_norm"], x, cfg.norm_eps), positions,
+        window=_mixer_window(kind, cfg), q_chunk=cfg.q_chunk)
+    x = x + y
+    h = rms_norm(p["mlp_norm"], x, cfg.norm_eps)
+    if "moe" in p:
+        y = moe_mod.moe_forward(p["moe"], h, cfg.moe, cfg.mlp_type)
+    else:
+        y = mlp_mod.mlp_forward(p["mlp"], h, cfg.mlp_type)
+    return x + y
+
+
+def _block_cache_init(kind: str, cfg, batch: int, capacity: int, dtype):
+    if kind == "rwkv":
+        h = cfg.d_model // cfg.rwkv_head_dim
+        return {
+            "x_time": jnp.zeros((batch, cfg.d_model), dtype),
+            "wkv": jnp.zeros((batch, h, cfg.rwkv_head_dim, cfg.rwkv_head_dim),
+                             jnp.float32),
+            "x_chan": jnp.zeros((batch, cfg.d_model), dtype),
+        }
+    if kind.startswith("rglru"):
+        r = cfg.rglru_width or cfg.d_model
+        return {
+            "h": jnp.zeros((batch, r), jnp.float32),
+            "conv": jnp.zeros((batch, cfg.conv_width - 1, r), dtype),
+        }
+    return attn.cache_init(cfg, batch, capacity, _mixer_window(kind, cfg), dtype)
+
+
+def _block_prefill(kind: str, p, cfg, x, positions, cache):
+    """Full-seq forward that also fills the decode cache."""
+    if kind == "rwkv":
+        h = rms_norm(p["time_norm"], x, cfg.norm_eps)
+        y, (x_last, wkv) = rwkv_mod.rwkv_time_forward(p["time"], h,
+                                                      cfg.rwkv_head_dim)
+        x = x + y
+        h = rms_norm(p["chan_norm"], x, cfg.norm_eps)
+        y, xc_last = rwkv_mod.rwkv_channel_forward(p["chan"], h)
+        return x + y, {"x_time": x_last, "wkv": wkv, "x_chan": xc_last}
+    if kind.startswith("rglru"):
+        h = rms_norm(p["rec_norm"], x, cfg.norm_eps)
+        y, (h_last, conv_state) = rglru_mod.rglru_forward(
+            p["rec"], h, cfg.rglru_blocks or cfg.n_heads)
+        x = x + y
+        y = mlp_mod.mlp_forward(p["mlp"],
+                                rms_norm(p["mlp_norm"], x, cfg.norm_eps),
+                                cfg.mlp_type)
+        return x + y, {"h": h_last, "conv": conv_state}
+    # attention blocks
+    h = rms_norm(p["attn_norm"], x, cfg.norm_eps)
+    window = _mixer_window(kind, cfg)
+    y, (k, v) = attn.attention_forward(
+        p["attn"], cfg, h, positions, window=window, q_chunk=cfg.q_chunk,
+        return_kv=True)
+    b, s, _ = x.shape
+    pos_bs = jnp.broadcast_to(positions[None, :], (b, s))
+    cache = attn.cache_prefill(cfg, cache, k, v, pos_bs)
+    x = x + y
+    h = rms_norm(p["mlp_norm"], x, cfg.norm_eps)
+    if "moe" in p:
+        y = moe_mod.moe_forward(p["moe"], h, cfg.moe, cfg.mlp_type)
+    else:
+        y = mlp_mod.mlp_forward(p["mlp"], h, cfg.mlp_type)
+    return x + y, cache
+
+
+def _block_decode(kind: str, p, cfg, cache, x_t, pos):
+    if kind == "rwkv":
+        h = rms_norm(p["time_norm"], x_t, cfg.norm_eps)
+        y, (x_last, wkv) = rwkv_mod.rwkv_time_decode(
+            p["time"], h, cfg.rwkv_head_dim, (cache["x_time"], cache["wkv"]))
+        x_t = x_t + y
+        h = rms_norm(p["chan_norm"], x_t, cfg.norm_eps)
+        y, xc_last = rwkv_mod.rwkv_channel_decode(p["chan"], h, cache["x_chan"])
+        return x_t + y, {"x_time": x_last, "wkv": wkv, "x_chan": xc_last}
+    if kind.startswith("rglru"):
+        h = rms_norm(p["rec_norm"], x_t, cfg.norm_eps)
+        y, (h_last, conv_state) = rglru_mod.rglru_decode(
+            p["rec"], h, cfg.rglru_blocks or cfg.n_heads,
+            (cache["h"], cache["conv"]))
+        x_t = x_t + y
+        y = mlp_mod.mlp_forward(p["mlp"],
+                                rms_norm(p["mlp_norm"], x_t, cfg.norm_eps),
+                                cfg.mlp_type)
+        return x_t + y, {"h": h_last, "conv": conv_state}
+    h = rms_norm(p["attn_norm"], x_t, cfg.norm_eps)
+    y, cache = attn.attention_decode(p["attn"], cfg, cache, h, pos,
+                                     window=_mixer_window(kind, cfg))
+    x_t = x_t + y
+    h = rms_norm(p["mlp_norm"], x_t, cfg.norm_eps)
+    if "moe" in p:
+        y = moe_mod.moe_forward(p["moe"], h[:, None], cfg.moe, cfg.mlp_type)[:, 0]
+    else:
+        y = mlp_mod.mlp_forward(p["mlp"], h, cfg.mlp_type)
+    return x_t + y, cache
+
+
+# ---------------------------------------------------------------------------
+# model init
+# ---------------------------------------------------------------------------
+
+def init_params(cfg, key) -> Dict[str, Any]:
+    dtype = dtype_of(cfg.param_dtype)
+    n_extra = 3 + len(cfg.prefix_pattern) + len(cfg.remainder_pattern)
+    keys = jax.random.split(key, cfg.n_periods * cfg.period + n_extra)
+    ki = iter(range(len(keys)))
+
+    params: Dict[str, Any] = {}
+    if cfg.embed_inputs:
+        params["embed"] = {
+            "embedding": (jax.random.normal(keys[next(ki)],
+                                            (cfg.vocab_size, cfg.d_model))
+                          * 0.02).astype(dtype)
+        }
+    params["prefix"] = {
+        f"p{i}": _block_init(kind, cfg, keys[next(ki)], dtype)
+        for i, kind in enumerate(cfg.prefix_pattern)
+    }
+    # stacked period blocks: one stack per period position
+    blocks = {}
+    for pidx, kind in enumerate(cfg.block_pattern):
+        per = [_block_init(kind, cfg, keys[next(ki)], dtype)
+               for _ in range(cfg.n_periods)]
+        blocks[f"b{pidx}"] = jax.tree.map(lambda *xs: jnp.stack(xs), *per)
+    params["blocks"] = blocks
+    params["suffix"] = {
+        f"s{i}": _block_init(kind, cfg, keys[next(ki)], dtype)
+        for i, kind in enumerate(cfg.remainder_pattern)
+    }
+    params["final_norm"] = norm_init(cfg.d_model, dtype)
+    params["lm_head"] = dense_init(keys[next(ki)], cfg.d_model, cfg.vocab_size,
+                                   dtype=dtype)
+    return params
+
+
+# ---------------------------------------------------------------------------
+# forward / loss
+# ---------------------------------------------------------------------------
+
+def _embed(params, cfg, batch):
+    adt = dtype_of(cfg.activation_dtype)
+    if cfg.embed_inputs:
+        x = jnp.take(params["embed"]["embedding"], batch["tokens"], axis=0)
+    else:
+        x = batch["embeddings"]
+    return constrain(x.astype(adt), "hidden")
+
+
+def forward(params, cfg, batch) -> jax.Array:
+    """Training/eval forward. batch: {"tokens"|"embeddings": (B, S[, D])}."""
+    x = _embed(params, cfg, batch)
+    s = x.shape[1]
+    positions = jnp.arange(s)
+
+    for i, kind in enumerate(cfg.prefix_pattern):
+        x = _block_forward(kind, params["prefix"][f"p{i}"], cfg, x, positions)
+
+    if cfg.n_periods:
+        def period_fn(x, period_params):
+            for pidx, kind in enumerate(cfg.block_pattern):
+                x = _block_forward(kind, period_params[f"b{pidx}"], cfg, x,
+                                   positions)
+            return constrain(x, "hidden"), None
+
+        if cfg.remat == "full":
+            period_fn = jax.checkpoint(period_fn)
+        if cfg.scan_layers:
+            x, _ = jax.lax.scan(period_fn, x, params["blocks"])
+        else:  # unrolled (exact per-layer HLO costs; dry-run cost variants)
+            for i in range(cfg.n_periods):
+                x, _ = period_fn(x, jax.tree.map(lambda a: a[i],
+                                                 params["blocks"]))
+
+    for i, kind in enumerate(cfg.remainder_pattern):
+        x = _block_forward(kind, params["suffix"][f"s{i}"], cfg, x, positions)
+
+    x = rms_norm(params["final_norm"], x, cfg.norm_eps)
+    logits = dense(params["lm_head"], x)
+    return constrain(logits, "logits")
+
+
+def loss_fn(params, cfg, batch) -> jax.Array:
+    """Mean next-token cross-entropy (+ MoE aux loss if applicable)."""
+    logits = forward(params, cfg, batch).astype(jnp.float32)
+    labels = batch["labels"]
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    loss = jnp.mean(logz - gold)
+    return loss
+
+
+# ---------------------------------------------------------------------------
+# decode state / prefill / decode_step
+# ---------------------------------------------------------------------------
+
+def init_decode_state(cfg, batch: int, capacity: int) -> Dict[str, Any]:
+    adt = dtype_of(cfg.activation_dtype)
+
+    def stack_cache(kind):
+        one = _block_cache_init(kind, cfg, batch, capacity, adt)
+        # broadcast (not zeros!) so sentinel values (e.g. pos = -1) survive
+        return jax.tree.map(
+            lambda a: jnp.broadcast_to(a[None], (cfg.n_periods,) + a.shape)
+            .copy(), one)
+
+    return {
+        "pos": jnp.zeros((batch,), jnp.int32),
+        "prefix": {f"p{i}": _block_cache_init(kind, cfg, batch, capacity, adt)
+                   for i, kind in enumerate(cfg.prefix_pattern)},
+        "blocks": {f"b{pidx}": stack_cache(kind)
+                   for pidx, kind in enumerate(cfg.block_pattern)},
+        "suffix": {f"s{i}": _block_cache_init(kind, cfg, batch, capacity, adt)
+                   for i, kind in enumerate(cfg.remainder_pattern)},
+    }
+
+
+def prefill(params, cfg, batch, capacity: int) -> Tuple[jax.Array, Dict]:
+    """Process a full prompt; return (last-position logits, decode state)."""
+    x = _embed(params, cfg, batch)
+    b, s, _ = x.shape
+    positions = jnp.arange(s)
+    adt = dtype_of(cfg.activation_dtype)
+    state = init_decode_state(cfg, b, capacity)
+
+    for i, kind in enumerate(cfg.prefix_pattern):
+        x, state["prefix"][f"p{i}"] = _block_prefill(
+            kind, params["prefix"][f"p{i}"], cfg, x, positions,
+            state["prefix"][f"p{i}"])
+
+    if cfg.n_periods:
+        def period_fn(x, xs):
+            period_params, cache_p = xs
+            new_caches = {}
+            for pidx, kind in enumerate(cfg.block_pattern):
+                x, new_caches[f"b{pidx}"] = _block_prefill(
+                    kind, period_params[f"b{pidx}"], cfg, x, positions,
+                    cache_p[f"b{pidx}"])
+            return constrain(x, "hidden"), new_caches
+
+        if cfg.remat == "full":
+            period_fn = jax.checkpoint(period_fn)
+        if cfg.scan_layers:
+            x, new_blocks = jax.lax.scan(period_fn, x,
+                                         (params["blocks"], state["blocks"]))
+        else:
+            outs = []
+            for i in range(cfg.n_periods):
+                sl = lambda a: a[i]
+                x, nc = period_fn(x, (jax.tree.map(sl, params["blocks"]),
+                                      jax.tree.map(sl, state["blocks"])))
+                outs.append(nc)
+            new_blocks = jax.tree.map(lambda *xs: jnp.stack(xs), *outs)
+        state["blocks"] = new_blocks
+
+    for i, kind in enumerate(cfg.remainder_pattern):
+        x, state["suffix"][f"s{i}"] = _block_prefill(
+            kind, params["suffix"][f"s{i}"], cfg, x, positions,
+            state["suffix"][f"s{i}"])
+
+    x = rms_norm(params["final_norm"], x, cfg.norm_eps)
+    logits = dense(params["lm_head"], x[:, -1])
+    state["pos"] = jnp.full((b,), s, jnp.int32)
+    return constrain(logits, "decode_logits"), state
+
+
+def decode_step(params, cfg, state, tokens) -> Tuple[jax.Array, Dict]:
+    """One decode step. tokens: (B,) int32 (or (B, D) embeddings if stub)."""
+    adt = dtype_of(cfg.activation_dtype)
+    if cfg.embed_inputs:
+        x = jnp.take(params["embed"]["embedding"], tokens, axis=0)
+    else:
+        x = tokens
+    x = x.astype(adt)
+    pos = state["pos"]
+    new_state = {"pos": pos + 1, "prefix": {}, "blocks": None, "suffix": {}}
+
+    for i, kind in enumerate(cfg.prefix_pattern):
+        x, new_state["prefix"][f"p{i}"] = _block_decode(
+            kind, params["prefix"][f"p{i}"], cfg, state["prefix"][f"p{i}"],
+            x, pos)
+
+    if cfg.n_periods:
+        def period_fn(x, xs):
+            period_params, cache_p = xs
+            new_caches = {}
+            for pidx, kind in enumerate(cfg.block_pattern):
+                x, new_caches[f"b{pidx}"] = _block_decode(
+                    kind, period_params[f"b{pidx}"], cfg, cache_p[f"b{pidx}"],
+                    x, pos)
+            return x, new_caches
+
+        if cfg.scan_layers:
+            x, new_blocks = jax.lax.scan(period_fn, x,
+                                         (params["blocks"], state["blocks"]))
+        else:
+            outs = []
+            for i in range(cfg.n_periods):
+                sl = lambda a: a[i]
+                x, nc = period_fn(x, (jax.tree.map(sl, params["blocks"]),
+                                      jax.tree.map(sl, state["blocks"])))
+                outs.append(nc)
+            new_blocks = jax.tree.map(lambda *xs: jnp.stack(xs), *outs)
+        new_state["blocks"] = new_blocks
+
+    for i, kind in enumerate(cfg.remainder_pattern):
+        x, new_state["suffix"][f"s{i}"] = _block_decode(
+            kind, params["suffix"][f"s{i}"], cfg, state["suffix"][f"s{i}"],
+            x, pos)
+
+    x = rms_norm(params["final_norm"], x, cfg.norm_eps)
+    logits = dense(params["lm_head"], x)
+    return constrain(logits, "decode_logits"), new_state

@@ -1,0 +1,91 @@
+"""AdamW with configurable moment dtype (bf16 moments let 405B fit 256 chips)
+and global-norm gradient clipping. Functional API mirroring optax:
+
+  opt = AdamW(lr=..., moment_dtype=jnp.bfloat16)
+  state = opt.init(params)
+  new_params, new_state = opt.update(grads, state, params)
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Optional, Union
+
+import jax
+import jax.numpy as jnp
+
+
+def global_norm(tree) -> jax.Array:
+    leaves = [jnp.sum(jnp.square(x.astype(jnp.float32)))
+              for x in jax.tree.leaves(tree)]
+    return jnp.sqrt(jnp.sum(jnp.stack(leaves)))
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamW:
+    lr: Union[float, Callable[[jax.Array], jax.Array]] = 1e-3
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    clip_norm: Optional[float] = 1.0
+    moment_dtype: Any = jnp.float32
+
+    def init(self, params):
+        zeros = lambda p: jnp.zeros(p.shape, self.moment_dtype)
+        return {
+            "m": jax.tree.map(zeros, params),
+            "v": jax.tree.map(zeros, params),
+            "count": jnp.zeros((), jnp.int32),
+        }
+
+    def update(self, grads, state, params):
+        count = state["count"] + 1
+        lr = self.lr(count) if callable(self.lr) else self.lr
+
+        if self.clip_norm is not None:
+            gn = global_norm(grads)
+            scale = jnp.minimum(1.0, self.clip_norm / jnp.maximum(gn, 1e-9))
+            grads = jax.tree.map(lambda g: g * scale.astype(g.dtype), grads)
+
+        b1c = 1.0 - self.b1 ** count.astype(jnp.float32)
+        b2c = 1.0 - self.b2 ** count.astype(jnp.float32)
+
+        def upd(p, g, m, v):
+            gf = g.astype(jnp.float32)
+            mf = self.b1 * m.astype(jnp.float32) + (1 - self.b1) * gf
+            vf = self.b2 * v.astype(jnp.float32) + (1 - self.b2) * gf * gf
+            mhat = mf / b1c
+            vhat = vf / b2c
+            step = mhat / (jnp.sqrt(vhat) + self.eps)
+            if self.weight_decay and p.ndim >= 2:  # decay matrices only
+                step = step + self.weight_decay * p.astype(jnp.float32)
+            new_p = p.astype(jnp.float32) - lr * step
+            return (new_p.astype(p.dtype), mf.astype(self.moment_dtype),
+                    vf.astype(self.moment_dtype))
+
+        flat_p, treedef = jax.tree.flatten(params)
+        flat_g = treedef.flatten_up_to(grads)
+        flat_m = treedef.flatten_up_to(state["m"])
+        flat_v = treedef.flatten_up_to(state["v"])
+        out = [upd(p, g, m, v) for p, g, m, v in
+               zip(flat_p, flat_g, flat_m, flat_v)]
+        new_params = treedef.unflatten([o[0] for o in out])
+        new_m = treedef.unflatten([o[1] for o in out])
+        new_v = treedef.unflatten([o[2] for o in out])
+        return new_params, {"m": new_m, "v": new_v, "count": count}
+
+
+def cosine_schedule(peak_lr: float, warmup: int, total: int,
+                    floor: float = 0.1):
+    """Linear warmup then cosine decay to floor·peak."""
+
+    def lr(count):
+        c = count.astype(jnp.float32)
+        warm = peak_lr * c / max(warmup, 1)
+        prog = jnp.clip((c - warmup) / max(total - warmup, 1), 0.0, 1.0)
+        cos = floor * peak_lr + (1 - floor) * peak_lr * 0.5 * (
+            1 + jnp.cos(jnp.pi * prog))
+        return jnp.where(c < warmup, warm, cos)
+
+    return lr

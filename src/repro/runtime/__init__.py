@@ -1,0 +1,7 @@
+from repro.runtime.checkpoint import (CheckpointManager, load_checkpoint,
+                                      save_checkpoint)
+from repro.runtime.monitor import HeartbeatMonitor, StragglerDetector
+from repro.runtime.preempt import PreemptionGuard
+
+__all__ = ["CheckpointManager", "save_checkpoint", "load_checkpoint",
+           "HeartbeatMonitor", "StragglerDetector", "PreemptionGuard"]

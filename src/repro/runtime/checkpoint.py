@@ -1,0 +1,192 @@
+"""Sharded, atomic, elastic checkpointing.
+
+Layout (one directory per step):
+
+    ckpt_dir/step_000123/
+        manifest.json          tree structure, shapes, dtypes, shard map
+        host0000.npz           this host's param/opt shards (flat path keys)
+    ckpt_dir/step_000123.tmp_* staging dir, atomically renamed on commit
+    ckpt_dir/LATEST            text file holding the last committed step
+
+Fault-tolerance posture (DESIGN.md §5):
+  * **atomic** — writes stage into a tmp dir; `rename()` commits. A crash
+    mid-write never corrupts the previous checkpoint; LATEST is updated last.
+  * **per-host shards** — each host saves only the addressable shards of its
+    local devices (here: the single process saves everything, but addressing
+    is by global flat path so the format is multi-host ready).
+  * **elastic restore** — restore only needs the manifest + shard files; the
+    target mesh/sharding may differ from the save-time mesh (`load_checkpoint`
+    returns host arrays; the caller re-`device_put`s with its own shardings).
+  * **retention** — keep the newest `keep` checkpoints, delete older ones
+    after a successful commit (never before).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+import shutil
+import tempfile
+import time
+from pathlib import Path
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import numpy as np
+
+from repro.core.quantize_model import QuantizedKernel
+
+_SEP = "//"
+
+
+def _flatten(tree: Any) -> Dict[str, Any]:
+    """Nested dict tree -> {path: leaf}; QuantizedKernel explodes to fields."""
+    out: Dict[str, Any] = {}
+
+    def walk(node, path):
+        if isinstance(node, QuantizedKernel):
+            out[f"{path}{_SEP}__qk_t1p"] = node.t1p
+            out[f"{path}{_SEP}__qk_t2p"] = node.t2p
+            out[f"{path}{_SEP}__qk_alpha"] = node.alpha
+            out[f"{path}{_SEP}__qk_meta"] = np.asarray(
+                [node.d_in, node.d_out, node.group_size], np.int64)
+            return
+        if isinstance(node, dict):
+            for k, v in node.items():
+                walk(v, f"{path}{_SEP}{k}" if path else k)
+            return
+        out[path] = node
+
+    walk(tree, "")
+    return out
+
+
+def _unflatten(flat: Dict[str, Any]) -> Any:
+    # regroup QuantizedKernel fields first
+    qk_groups: Dict[str, Dict[str, Any]] = {}
+    plain: Dict[str, Any] = {}
+    for path, leaf in flat.items():
+        parts = path.split(_SEP)
+        if parts[-1].startswith("__qk_"):
+            qk_groups.setdefault(_SEP.join(parts[:-1]), {})[parts[-1]] = leaf
+        else:
+            plain[path] = leaf
+    for base, fields in qk_groups.items():
+        meta = np.asarray(fields["__qk_meta"])
+        plain[base] = QuantizedKernel(
+            fields["__qk_t1p"], fields["__qk_t2p"], fields["__qk_alpha"],
+            int(meta[0]), int(meta[1]), int(meta[2]))
+
+    root: Dict[str, Any] = {}
+    for path, leaf in plain.items():
+        parts = path.split(_SEP)
+        node = root
+        for p in parts[:-1]:
+            node = node.setdefault(p, {})
+        node[parts[-1]] = leaf
+    return root
+
+
+def save_checkpoint(ckpt_dir: str | Path, step: int, tree: Any,
+                    *, host_id: int = 0, extra: Optional[Dict] = None) -> Path:
+    """Atomically write checkpoint `step`. Returns the committed directory."""
+    ckpt_dir = Path(ckpt_dir)
+    ckpt_dir.mkdir(parents=True, exist_ok=True)
+    final = ckpt_dir / f"step_{step:08d}"
+    stage = Path(tempfile.mkdtemp(prefix=final.name + ".tmp_", dir=ckpt_dir))
+    try:
+        flat = _flatten(tree)
+        arrays = {}
+        manifest = {"step": step, "time": time.time(), "extra": extra or {},
+                    "leaves": {}}
+        for path, leaf in flat.items():
+            arr = np.asarray(jax.device_get(leaf))
+            arrays[path] = arr
+            manifest["leaves"][path] = {
+                "shape": list(arr.shape), "dtype": str(arr.dtype),
+                "host": host_id,
+            }
+        np.savez(stage / f"host{host_id:04d}.npz", **arrays)
+        with open(stage / "manifest.json", "w") as f:
+            json.dump(manifest, f)
+        if final.exists():  # overwrite-same-step: replace
+            shutil.rmtree(final)
+        os.rename(stage, final)
+    except BaseException:
+        shutil.rmtree(stage, ignore_errors=True)
+        raise
+    # LATEST last: readers never see a pointer to an uncommitted dir
+    latest_tmp = ckpt_dir / ".LATEST.tmp"
+    latest_tmp.write_text(str(step))
+    os.rename(latest_tmp, ckpt_dir / "LATEST")
+    return final
+
+
+def latest_step(ckpt_dir: str | Path) -> Optional[int]:
+    p = Path(ckpt_dir) / "LATEST"
+    if not p.exists():
+        return None
+    return int(p.read_text().strip())
+
+
+def load_checkpoint(ckpt_dir: str | Path, step: Optional[int] = None,
+                    ) -> Tuple[int, Any, Dict]:
+    """Load checkpoint (host arrays). Caller re-shards onto its own mesh —
+    this is what makes restore *elastic* to mesh-shape changes."""
+    ckpt_dir = Path(ckpt_dir)
+    if step is None:
+        step = latest_step(ckpt_dir)
+        if step is None:
+            raise FileNotFoundError(f"no LATEST in {ckpt_dir}")
+    d = ckpt_dir / f"step_{step:08d}"
+    with open(d / "manifest.json") as f:
+        manifest = json.load(f)
+    flat: Dict[str, Any] = {}
+    for shard in sorted(d.glob("host*.npz")):
+        with np.load(shard) as z:
+            for k in z.files:
+                flat[k] = z[k]
+    tree = _unflatten(flat)
+    return step, tree, manifest.get("extra", {})
+
+
+def restore_sharded(tree_host: Any, shardings: Any = None) -> Any:
+    """device_put each host array with the target sharding (elastic restore).
+    shardings=None → default placement (single-device / tests)."""
+    if shardings is None:
+        return jax.tree.map(jax.device_put, tree_host)
+
+    def put(leaf, sh):
+        return jax.device_put(leaf) if sh is None else jax.device_put(leaf, sh)
+
+    return jax.tree.map(put, tree_host, shardings)
+
+
+@dataclasses.dataclass
+class CheckpointManager:
+    """Periodic + on-demand checkpointing with retention."""
+
+    ckpt_dir: str
+    interval_steps: int = 100
+    keep: int = 3
+    host_id: int = 0
+
+    def should_save(self, step: int) -> bool:
+        return step > 0 and step % self.interval_steps == 0
+
+    def save(self, step: int, tree: Any, extra: Optional[Dict] = None) -> Path:
+        path = save_checkpoint(self.ckpt_dir, step, tree,
+                               host_id=self.host_id, extra=extra)
+        self._gc()
+        return path
+
+    def restore_latest(self):
+        return load_checkpoint(self.ckpt_dir)
+
+    def _gc(self):
+        root = Path(self.ckpt_dir)
+        steps = sorted(int(p.name.split("_")[1]) for p in root.glob("step_*")
+                       if p.is_dir() and not p.name.endswith(".tmp"))
+        for s in steps[:-self.keep] if self.keep else []:
+            shutil.rmtree(root / f"step_{s:08d}", ignore_errors=True)

@@ -1,0 +1,4 @@
+from repro.serving.engine import EngineConfig, Request, ServingEngine
+from repro.serving.sampling import sample_token
+
+__all__ = ["ServingEngine", "EngineConfig", "Request", "sample_token"]

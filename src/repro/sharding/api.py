@@ -1,0 +1,38 @@
+"""Activation-sharding hooks: models call ``constrain(x, name)``; the launcher
+installs a rule set mapping names → PartitionSpec under the active mesh.
+Without an installed rule set (unit tests, single device) it is the identity.
+"""
+
+from __future__ import annotations
+
+import contextlib
+import threading
+from typing import Dict, Optional
+
+import jax
+
+_state = threading.local()
+
+
+def current_rules() -> Optional[Dict[str, "jax.sharding.PartitionSpec"]]:
+    return getattr(_state, "rules", None)
+
+
+@contextlib.contextmanager
+def activation_sharding(rules: Dict[str, "jax.sharding.PartitionSpec"]):
+    prev = current_rules()
+    _state.rules = rules
+    try:
+        yield
+    finally:
+        _state.rules = prev
+
+
+def constrain(x: jax.Array, name: str) -> jax.Array:
+    rules = current_rules()
+    if not rules or name not in rules:
+        return x
+    spec = rules[name]
+    if spec is None:
+        return x
+    return jax.lax.with_sharding_constraint(x, spec)

@@ -1,0 +1,141 @@
+"""Trainer: data pipeline + jit'd train step + fault-tolerance plumbing.
+
+Wires together every runtime substrate (DESIGN.md §5):
+  * deterministic sharded loader (resume-aware — restarts mid-epoch exactly),
+  * CheckpointManager (periodic, atomic, elastic),
+  * PreemptionGuard (SIGTERM → final checkpoint, ≤ 1 step lost),
+  * HeartbeatMonitor (straggler/dead-host detection feed),
+  * optional int8 gradient compression with error feedback.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any, Callable, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.data.pipeline import DataConfig, ShardedLoader
+from repro.optim.adamw import AdamW
+from repro.optim.compress import compress_decompress, init_error_feedback
+from repro.runtime.checkpoint import CheckpointManager, restore_sharded
+from repro.runtime.monitor import HeartbeatMonitor
+from repro.runtime.preempt import PreemptionGuard
+from repro.training.train_step import make_train_step
+from repro.models import init_params, loss_fn
+
+
+@dataclasses.dataclass
+class TrainerConfig:
+    total_steps: int = 100
+    ckpt_dir: Optional[str] = None
+    ckpt_interval: int = 50
+    ckpt_keep: int = 2
+    log_interval: int = 10
+    grad_compress: bool = False
+    seed: int = 0
+    run_dir: Optional[str] = None    # heartbeats
+
+
+class Trainer:
+    def __init__(self, model_cfg, opt: AdamW, data_cfg: DataConfig,
+                 tcfg: TrainerConfig,
+                 log_fn: Callable[[str], None] = print):
+        self.cfg = model_cfg
+        self.opt = opt
+        self.tcfg = tcfg
+        self.loader = ShardedLoader(data_cfg)
+        self.log = log_fn
+        self.ckpt = (CheckpointManager(tcfg.ckpt_dir, tcfg.ckpt_interval,
+                                       tcfg.ckpt_keep)
+                     if tcfg.ckpt_dir else None)
+        self.hb = (HeartbeatMonitor(tcfg.run_dir) if tcfg.run_dir else None)
+        self._step_fn = jax.jit(self._build_step(), donate_argnums=(0,))
+        self.history: list[Dict[str, float]] = []
+        # stub modality frontend for [audio]/[vlm] archs: tokens -> fixed
+        # pseudo-embeddings (the frontend is frozen & out of scope, DESIGN §4)
+        self._stub_embed = None
+        if not model_cfg.embed_inputs:
+            rng = np.random.default_rng(tcfg.seed)
+            self._stub_embed = rng.standard_normal(
+                (512, model_cfg.d_model)).astype(np.float32) * 0.02
+
+    # ------------------------------------------------------------------ build
+    def _build_step(self):
+        base = make_train_step(self.cfg, self.opt)
+        if not self.tcfg.grad_compress:
+            return base
+
+        cfg, opt = self.cfg, self.opt
+
+        def step_with_compression(state, batch):
+            params = state["params"]
+            loss, grads = jax.value_and_grad(
+                lambda p: loss_fn(p, cfg, batch))(params)
+            grads, err = compress_decompress(grads, state["err"])
+            new_params, new_opt = opt.update(grads, state["opt"], params)
+            new_state = {"params": new_params, "opt": new_opt,
+                         "step": state["step"] + 1, "err": err}
+            return new_state, {"loss": loss}
+
+        return step_with_compression
+
+    def init_state(self, key=None) -> Dict[str, Any]:
+        key = jax.random.PRNGKey(self.tcfg.seed) if key is None else key
+        params = init_params(self.cfg, key)
+        state = {"params": params, "opt": self.opt.init(params),
+                 "step": jnp.zeros((), jnp.int32)}
+        if self.tcfg.grad_compress:
+            state["err"] = init_error_feedback(params)
+        return state
+
+    # ------------------------------------------------------------------- run
+    def fit(self, state: Optional[Dict[str, Any]] = None,
+            shardings: Any = None,
+            guard: Optional[PreemptionGuard] = None) -> Dict[str, Any]:
+        start_step = 0
+        if state is None:
+            if self.ckpt is not None:
+                try:
+                    start_step, host_tree, _ = self.ckpt.restore_latest()
+                    state = restore_sharded(host_tree, shardings)
+                    self.log(f"[trainer] resumed from step {start_step}")
+                except FileNotFoundError:
+                    state = self.init_state()
+            else:
+                state = self.init_state()
+
+        stream = self.loader.iterate(start_step)
+        with (guard or PreemptionGuard()) as guard:
+            for step in range(start_step, self.tcfg.total_steps):
+                batch = next(stream)
+                if self._stub_embed is not None:
+                    batch = {"embeddings":
+                             self._stub_embed[batch["tokens"] % 512],
+                             "labels": batch["labels"]}
+                t0 = time.perf_counter()
+                state, metrics = self._step_fn(
+                    state, jax.tree.map(jnp.asarray, batch))
+                loss = float(metrics["loss"])
+                dt = time.perf_counter() - t0
+                self.history.append({"step": step + 1, "loss": loss,
+                                     "time_s": dt})
+                if self.hb:
+                    self.hb.beat(step + 1, dt, loss=loss)
+                if (step + 1) % self.tcfg.log_interval == 0:
+                    self.log(f"[trainer] step {step + 1} "
+                             f"loss {loss:.4f} ({dt * 1e3:.0f} ms)")
+                if self.ckpt and (self.ckpt.should_save(step + 1)
+                                  or guard.preempted):
+                    self.ckpt.save(step + 1, state)
+                    self.log(f"[trainer] checkpoint @ {step + 1}")
+                if guard.preempted:
+                    self.log("[trainer] preempted: exiting cleanly")
+                    break
+        self.loader.close()
+        if self.ckpt and not guard.preempted:
+            self.ckpt.save(int(state["step"]), state)
+        return state

@@ -1,0 +1,104 @@
+"""Baseline PTQ methods (RTN/GPTQ/AWQ/BiLLM-style) sanity + ordering.
+
+The paper's central comparison (Tables 1/2/9): PTQTP at 1.58 bit should land
+between binary PTQ and 3-bit grouped methods in reconstruction quality.
+"""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.baselines.awq import awq_quantize
+from repro.core.baselines.billm import billm_quantize
+from repro.core.baselines.gptq import gptq_quantize
+from repro.core.baselines.rtn import rtn_quantize
+from repro.core.ptqtp import PTQTPConfig, ptqtp_dequantize, ptqtp_quantize
+
+
+def _w(shape=(64, 512), seed=0):
+    # heavy-tailed, per-column scaled — LLM-like weight statistics
+    r = np.random.default_rng(seed)
+    w = r.standard_t(4, size=shape).astype(np.float32)
+    w *= np.exp(r.normal(0, 0.5, size=(1, shape[1]))).astype(np.float32)
+    return jnp.asarray(w * 0.02)
+
+
+def _x(d, seed=1):
+    return jnp.asarray(np.random.default_rng(seed)
+                       .standard_normal((256, d), dtype=np.float32))
+
+
+def _rel(w, w_hat):
+    return float(jnp.linalg.norm(w - w_hat) / jnp.linalg.norm(w))
+
+
+class TestEachBaselineRuns:
+    def test_rtn(self):
+        w = _w()
+        for bits in (2, 3, 4):
+            w_hat, meta = rtn_quantize(w, bits=bits, group_size=128)
+            assert w_hat.shape == w.shape
+            assert _rel(w, w_hat) < 1.0
+            assert int(meta["q"].max()) <= 2 ** bits - 1
+
+    def test_gptq(self):
+        """GPTQ optimizes the x-weighted error ‖x(W-Ŵ)ᵀ‖, not plain ‖W-Ŵ‖ —
+        assert in its own metric."""
+        w = _w()
+        x = _x(512)
+        w_hat, _ = gptq_quantize(w, x, bits=3, group_size=128)
+        assert w_hat.shape == w.shape
+        w_rtn, _ = rtn_quantize(w, bits=3, group_size=128)
+        err_g = float(jnp.linalg.norm(x @ (w - w_hat).T))
+        err_r = float(jnp.linalg.norm(x @ (w - w_rtn).T))
+        assert np.isfinite(err_g) and err_g <= err_r * 1.02, (err_g, err_r)
+
+    def test_awq(self):
+        w = _w()
+        w_hat, meta = awq_quantize(w, _x(512), bits=3, group_size=128)
+        assert w_hat.shape == w.shape
+        assert _rel(w, w_hat) < 0.5
+
+    def test_billm(self):
+        w = _w()
+        w_hat, meta = billm_quantize(w, _x(512))
+        assert w_hat.shape == w.shape
+        assert _rel(w, w_hat) < 1.0
+
+
+class TestOrdering:
+    """Reconstruction-error ordering on LLM-like weights (Table 1 ordering,
+    reproduced at the matrix level)."""
+
+    def test_ptqtp_between_binary_and_4bit(self):
+        w = _w(seed=7)
+        q = ptqtp_quantize(w, PTQTPConfig(t_max=30))
+        e_ptqtp = _rel(w, ptqtp_dequantize(q))
+        e_billm = _rel(w, billm_quantize(w)[0])
+        e_rtn4 = _rel(w, rtn_quantize(w, bits=4, group_size=128)[0])
+        e_rtn2 = _rel(w, rtn_quantize(w, bits=2, group_size=128)[0])
+        # PTQTP (1.58 b) beats binary-residual and 2-bit RTN ...
+        assert e_ptqtp < e_billm, (e_ptqtp, e_billm)
+        assert e_ptqtp < e_rtn2, (e_ptqtp, e_rtn2)
+        # ... and 4-bit keeps an edge (sanity that we don't overclaim)
+        assert e_rtn4 < e_ptqtp, (e_rtn4, e_ptqtp)
+
+    def test_ptqtp_competitive_with_3bit(self):
+        """Paper: PTQTP ≈ grouped 3-bit quality at 1.58 bits of storage."""
+        errs_p, errs_3 = [], []
+        for seed in range(3):
+            w = _w(seed=seed)
+            q = ptqtp_quantize(w, PTQTPConfig(t_max=30))
+            errs_p.append(_rel(w, ptqtp_dequantize(q)))
+            errs_3.append(_rel(w, rtn_quantize(w, bits=3, group_size=128)[0]))
+        assert np.mean(errs_p) < 1.35 * np.mean(errs_3), (errs_p, errs_3)
+
+    def test_gptq_beats_rtn_weighted_error(self):
+        """GPTQ's Hessian compensation wins in the x-weighted metric."""
+        w = _w(seed=9)
+        x = _x(512, seed=10)
+        w_rtn, _ = rtn_quantize(w, bits=3, group_size=128)
+        w_gptq, _ = gptq_quantize(w, x, bits=3, group_size=128)
+        err_rtn = float(jnp.linalg.norm(x @ (w - w_rtn).T))
+        err_gptq = float(jnp.linalg.norm(x @ (w - w_gptq).T))
+        assert err_gptq <= err_rtn * 1.02, (err_gptq, err_rtn)

@@ -1,0 +1,77 @@
+"""Data pipeline: determinism, host-sharding disjointness, resume addressing."""
+
+import numpy as np
+
+from repro.data.pipeline import DataConfig, ShardedLoader
+from repro.data.synthetic import synthetic_corpus
+from repro.data.tokenizer import ByteTokenizer
+
+
+class TestTokenizer:
+    def test_roundtrip(self):
+        tok = ByteTokenizer()
+        s = "ternary trit-planes, 1.58 bits!"
+        assert tok.decode(tok.encode(s)) == s
+
+    def test_batch_padding(self):
+        tok = ByteTokenizer()
+        b = tok.encode_batch(["ab", "cdef"], seq_len=8)
+        assert b.shape == (2, 8)
+        assert b[0, -1] == ByteTokenizer.PAD
+
+
+class TestSynthetic:
+    def test_deterministic(self):
+        assert synthetic_corpus(4096, seed=1) == synthetic_corpus(4096, seed=1)
+        assert synthetic_corpus(4096, seed=1) != synthetic_corpus(4096, seed=2)
+
+    def test_has_structure(self):
+        text = synthetic_corpus(1 << 16, seed=0).decode("utf-8")
+        assert "equals" in text and "recall slot" in text
+
+
+class TestLoader:
+    def test_batch_shapes_and_labels_shift(self):
+        cfg = DataConfig(seq_len=32, global_batch=4)
+        loader = ShardedLoader(cfg)
+        b = loader.batch_at(0)
+        assert b["tokens"].shape == (4, 32)
+        np.testing.assert_array_equal(b["tokens"][:, 1:], b["labels"][:, :-1])
+
+    def test_deterministic_addressing(self):
+        cfg = DataConfig(seq_len=16, global_batch=4, seed=3)
+        l1, l2 = ShardedLoader(cfg), ShardedLoader(cfg)
+        for step in (0, 1, 17, 12345):
+            np.testing.assert_array_equal(l1.batch_at(step)["tokens"],
+                                          l2.batch_at(step)["tokens"])
+
+    def test_host_shards_partition_global_batch(self):
+        """Union of host slices == the single-host global batch, in order."""
+        g = DataConfig(seq_len=16, global_batch=8, n_hosts=1)
+        full = ShardedLoader(g).batch_at(5)["tokens"]
+        parts = []
+        for h in range(4):
+            cfg = DataConfig(seq_len=16, global_batch=8, n_hosts=4, host_id=h)
+            parts.append(ShardedLoader(cfg).batch_at(5)["tokens"])
+        np.testing.assert_array_equal(np.concatenate(parts), full)
+
+    def test_prefetch_stream_matches_addressing(self):
+        cfg = DataConfig(seq_len=16, global_batch=2)
+        loader = ShardedLoader(cfg)
+        it = loader.iterate(start_step=7)
+        got = [next(it) for _ in range(3)]
+        loader.close()
+        for i, b in enumerate(got):
+            np.testing.assert_array_equal(
+                b["tokens"], loader.batch_at(7 + i)["tokens"])
+
+    def test_producer_errors_propagate(self):
+        """A failing producer must raise in the consumer, never deadlock."""
+        import pytest
+
+        cfg = DataConfig(seq_len=16, global_batch=2)
+        loader = ShardedLoader(cfg)
+        loader._ids = None  # corrupt the corpus → producer throws on slice
+        it = loader.iterate(start_step=0)
+        with pytest.raises(Exception):
+            next(it)

@@ -1,0 +1,205 @@
+"""Core PTQTP quantizer: paper Alg. 1/2 invariants, unit + property tests."""
+
+import hypothesis
+import hypothesis.extra.numpy as hnp
+import hypothesis.strategies as st
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.ptqtp import (CANDIDATES, PTQTPConfig, ptqtp_dequantize,
+                              ptqtp_error, ptqtp_quantize,
+                              quantize_with_history)
+
+jax.config.update("jax_enable_x64", False)
+
+
+def _randw(shape, seed=0, scale=1.0):
+    return jnp.asarray(
+        np.random.default_rng(seed).standard_normal(shape, dtype=np.float32)
+        * scale)
+
+
+# ---------------------------------------------------------------------------
+# unit
+# ---------------------------------------------------------------------------
+
+class TestBasics:
+    def test_shapes_and_ternary_domain(self):
+        w = _randw((16, 256))
+        q = ptqtp_quantize(w, PTQTPConfig(group_size=128, t_max=10))
+        assert q.t1.shape == w.shape and q.t2.shape == w.shape
+        assert q.alpha.shape == (16, 2, 2)  # (n, d//G, 2)
+        for t in (q.t1, q.t2):
+            vals = np.unique(np.asarray(t))
+            assert set(vals.tolist()) <= {-1, 0, 1}
+
+    def test_reconstruction_beats_sign_init(self):
+        """Progressive optimization must improve on the α=[1,1]·sign init."""
+        w = _randw((8, 256))
+        q = ptqtp_quantize(w, PTQTPConfig(t_max=30))
+        err = float(ptqtp_error(w, q))
+        sgn = jnp.sign(w) + (w == 0)
+        init_err = float(jnp.linalg.norm(w - 2 * sgn) / jnp.linalg.norm(w))
+        assert err < init_err
+        assert err < 0.5  # gaussian weights: two planes explain most mass
+
+    def test_two_planes_beat_one_plane(self):
+        """The 2nd trit-plane must add representational power (paper's core
+        claim vs binary/ternary-1-plane PTQ)."""
+        w = _randw((8, 256))
+        q2 = ptqtp_quantize(w, PTQTPConfig(t_max=30))
+        # best rank-1 ternary plane w/ optimal per-group scale (RTN-ternary)
+        wg = np.asarray(w).reshape(-1, 128)
+        t = np.sign(wg) * (np.abs(wg) > 0.6745 * np.abs(wg).mean(-1, keepdims=True))
+        num = (t * wg).sum(-1)
+        den = np.maximum((t * t).sum(-1), 1e-9)
+        a = num / den
+        err1 = np.linalg.norm(wg - a[:, None] * t) / np.linalg.norm(wg)
+        assert float(ptqtp_error(w, q2)) < err1
+
+    def test_group_wise_beats_row_wise_on_heterogeneous_weights(self):
+        """G=128 grouping beats one α pair per whole row when weight scale
+        varies across the row (paper Table 8). Real LLM rows are
+        heterogeneous — grouping exploits that locality; on iid Gaussian
+        weights the effect vanishes, so the test builds LLM-like rows with
+        per-group scale variation."""
+        eg, er = [], []
+        for seed in range(3):
+            r = np.random.default_rng(seed)
+            base = r.standard_normal((8, 512), dtype=np.float32)
+            scales = np.exp(r.normal(0, 1.2, size=(1, 4)).astype(np.float32))
+            w = jnp.asarray((base.reshape(8, 4, 128)
+                             * scales[..., None]).reshape(8, 512))
+            qg = ptqtp_quantize(w, PTQTPConfig(group_size=128, t_max=30))
+            qr = ptqtp_quantize(w, PTQTPConfig(group_size=512, t_max=30))
+            eg.append(float(ptqtp_error(w, qg)))
+            er.append(float(ptqtp_error(w, qr)))
+        assert np.mean(eg) < np.mean(er), (eg, er)
+
+    def test_convergence_within_tmax(self):
+        w = _randw((8, 256))
+        q = ptqtp_quantize(w, PTQTPConfig(t_max=50, eps=1e-4))
+        assert int(q.iters) <= 50  # paper: "always converges within 50"
+
+    def test_dequantize_matches_planes(self):
+        w = _randw((4, 256))
+        q = ptqtp_quantize(w, PTQTPConfig(t_max=5))
+        what = ptqtp_dequantize(q)
+        n, d = w.shape
+        g = q.group_size
+        t1 = np.asarray(q.t1, np.float32).reshape(n, d // g, g)
+        t2 = np.asarray(q.t2, np.float32).reshape(n, d // g, g)
+        a = np.asarray(q.alpha, np.float32)
+        manual = (t1 * a[..., :1] + t2 * a[..., 1:]).reshape(n, d)
+        np.testing.assert_allclose(np.asarray(what), manual, rtol=1e-6)
+
+    def test_bad_shapes_rejected(self):
+        with pytest.raises(ValueError):
+            ptqtp_quantize(_randw((4, 100)), PTQTPConfig(group_size=128))
+        with pytest.raises(ValueError):
+            ptqtp_quantize(_randw((4, 4, 128)))
+
+    def test_candidates_cover_all_nine(self):
+        assert CANDIDATES.shape == (9, 2)
+        assert len({tuple(c) for c in CANDIDATES.tolist()}) == 9
+
+
+# ---------------------------------------------------------------------------
+# paper-claim properties
+# ---------------------------------------------------------------------------
+
+class TestPaperClaims:
+    def test_error_monotonically_non_increasing(self):
+        """App. C: each iteration must not increase ||W - Ŵ||_F."""
+        w = _randw((8, 256), seed=3)
+        _, errors = quantize_with_history(w, PTQTPConfig(t_max=30))
+        e = np.asarray(errors)
+        assert np.all(e[1:] <= e[:-1] + 1e-4 * e[0]), e
+
+    def test_tighter_eps_not_worse(self):
+        """Fig. 4: tighter tolerance → equal-or-better reconstruction."""
+        w = _randw((8, 256), seed=4)
+        e_loose = float(ptqtp_error(w, ptqtp_quantize(
+            w, PTQTPConfig(t_max=50, eps=1e-1))))
+        e_tight = float(ptqtp_error(w, ptqtp_quantize(
+            w, PTQTPConfig(t_max=50, eps=1e-5))))
+        assert e_tight <= e_loose + 1e-6
+
+    def test_more_iterations_not_worse(self):
+        """Fig. 3: more progressive iterations → equal-or-better error."""
+        w = _randw((8, 256), seed=5)
+        e1 = float(ptqtp_error(w, ptqtp_quantize(w, PTQTPConfig(t_max=1))))
+        e30 = float(ptqtp_error(w, ptqtp_quantize(w, PTQTPConfig(t_max=30))))
+        assert e30 <= e1 + 1e-6
+
+    def test_outlier_robustness(self):
+        """§D.1: group-wise localizes outliers — error stays bounded when one
+        group carries a 100× outlier."""
+        w = np.asarray(_randw((4, 512), seed=6)).copy()
+        w[0, 5] = 100.0
+        q = ptqtp_quantize(jnp.asarray(w), PTQTPConfig(t_max=30))
+        werr = np.asarray(ptqtp_dequantize(q)) - w
+        # groups that do NOT contain the outlier are unaffected
+        clean = np.linalg.norm(werr[:, 128:]) / np.linalg.norm(w[:, 128:])
+        assert clean < 0.5
+
+    def test_lambda_adaptation_stabilizes_degenerate_rows(self):
+        """Eq. 3: a constant row makes S rank-1 (t1 == t2) — the adaptive λ
+        must keep α finite and the approximation sane."""
+        w = jnp.ones((2, 256), jnp.float32) * 0.7
+        q = ptqtp_quantize(w, PTQTPConfig(t_max=20))
+        assert np.all(np.isfinite(np.asarray(q.alpha)))
+        assert float(ptqtp_error(w, q)) < 0.05
+
+
+# ---------------------------------------------------------------------------
+# hypothesis properties
+# ---------------------------------------------------------------------------
+
+w_strat = hnp.arrays(
+    np.float32, st.tuples(st.integers(1, 4), st.just(128)),
+    elements=st.floats(-4, 4, width=32, allow_nan=False),
+)
+
+
+class TestHypothesis:
+    @hypothesis.given(w=w_strat)
+    @hypothesis.settings(max_examples=25, deadline=None)
+    def test_error_never_exceeds_norm(self, w):
+        """α=0 is in the feasible set, so ||W-Ŵ|| ≤ ~||W||."""
+        q = ptqtp_quantize(jnp.asarray(w), PTQTPConfig(group_size=128,
+                                                       t_max=10))
+        err = np.linalg.norm(np.asarray(ptqtp_dequantize(q)) - w)
+        assert err <= np.linalg.norm(w) * (1 + 1e-3) + 1e-3
+
+    @hypothesis.given(w=w_strat, c=st.floats(0.125, 8.0, width=32))
+    @hypothesis.settings(max_examples=15, deadline=None)
+    def test_positive_scale_equivariance(self, w, c):
+        """err(ptqtp(c·W)) ≈ c·err(ptqtp(W)) for c > 0. The *error* is the
+        scale-covariant quantity; elementwise trits may differ — an element
+        sitting exactly on an argmin tie can flip when scaling moves fp
+        rounding across the boundary (observed via hypothesis)."""
+        hypothesis.assume(np.linalg.norm(w) > 1e-2)
+        q1 = ptqtp_quantize(jnp.asarray(w), PTQTPConfig(t_max=10))
+        q2 = ptqtp_quantize(jnp.asarray(w * c), PTQTPConfig(t_max=10))
+        e1 = np.linalg.norm(w * c - np.asarray(ptqtp_dequantize(q1)) * c)
+        e2 = np.linalg.norm(w * c - np.asarray(ptqtp_dequantize(q2)))
+        tol = 5e-2 * c * (np.linalg.norm(w) + 1e-3)
+        assert abs(e1 - e2) <= tol, (e1, e2, tol)
+
+    @hypothesis.given(w=w_strat)
+    @hypothesis.settings(max_examples=15, deadline=None)
+    def test_monotone_error_property(self, w):
+        """Error is monotone up to the regularization bias: on degenerate
+        inputs (constant rows / one dominant element + near-zero tail) the
+        adaptive-λ refit trades a λ·‖α‖² bias for stability, so the
+        unregularized error can tick up by a few percent of ‖W‖ (hypothesis
+        measured ≈2% worst-case); we bound the slack at 5%·‖W‖."""
+        hypothesis.assume(np.linalg.norm(w) > 1e-3)
+        _, errors = quantize_with_history(jnp.asarray(w),
+                                          PTQTPConfig(t_max=10))
+        e = np.asarray(errors)
+        tol = 5e-2 * (np.linalg.norm(w) + 1e-6)
+        assert np.all(e[1:] <= e[:-1] + tol)

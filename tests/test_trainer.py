@@ -1,0 +1,85 @@
+"""Trainer integration: convergence, resume-after-preemption, compression."""
+
+import jax
+import numpy as np
+import pytest
+
+from repro import configs
+from repro.data.pipeline import DataConfig
+from repro.optim.adamw import AdamW, cosine_schedule
+from repro.training.trainer import Trainer, TrainerConfig
+
+
+def _trainer(tmp=None, steps=20, grad_compress=False, arch="qwen2-1.5b",
+             **tkw):
+    cfg = configs.get_smoke_config(arch)
+    dcfg = DataConfig(seq_len=32, global_batch=4)
+    tcfg = TrainerConfig(total_steps=steps, log_interval=1000,
+                         ckpt_dir=str(tmp) if tmp else None,
+                         grad_compress=grad_compress, **tkw)
+    return Trainer(cfg, AdamW(lr=3e-3), dcfg, tcfg)
+
+
+class TestTraining:
+    def test_loss_decreases(self):
+        t = _trainer(steps=25)
+        t.fit()
+        first = np.mean([h["loss"] for h in t.history[:5]])
+        last = np.mean([h["loss"] for h in t.history[-5:]])
+        assert last < first, (first, last)
+
+    def test_grad_compression_still_learns(self):
+        """int8 + error feedback must not break optimization."""
+        t = _trainer(steps=25, grad_compress=True)
+        t.fit()
+        first = np.mean([h["loss"] for h in t.history[:5]])
+        last = np.mean([h["loss"] for h in t.history[-5:]])
+        assert last < first, (first, last)
+
+    def test_stub_frontend_arch_trains(self):
+        t = _trainer(steps=6, arch="musicgen-large")
+        t.fit()
+        assert all(np.isfinite(h["loss"]) for h in t.history)
+
+
+class TestFaultTolerance:
+    def test_checkpoint_resume_continues_step_count(self, tmp_path):
+        t1 = _trainer(tmp_path, steps=10, ckpt_interval=5)
+        t1.fit()
+        # second trainer resumes from step 10 checkpoint and runs to 15
+        t2 = _trainer(tmp_path, steps=15, ckpt_interval=5)
+        t2.fit()
+        assert t2.history[0]["step"] == 11
+        assert t2.history[-1]["step"] == 15
+
+    def test_resume_deterministic_data(self, tmp_path):
+        """Resumed run must see exactly the batches of an uninterrupted run."""
+        t = _trainer(steps=1)
+        b_direct = t.loader.batch_at(12)
+        t2 = _trainer(steps=1)
+        it = t2.loader.iterate(start_step=12)
+        b_stream = next(it)
+        t2.loader.close()
+        np.testing.assert_array_equal(b_direct["tokens"], b_stream["tokens"])
+
+    def test_preemption_checkpoints_and_exits(self, tmp_path):
+        from repro.runtime.checkpoint import latest_step
+        from repro.runtime.preempt import PreemptionGuard
+
+        guard = PreemptionGuard(signals=())
+
+        # deliver "SIGTERM" once step 5 is logged (log_interval=1)
+        def log_hook(msg):
+            if "step 5 " in msg:
+                guard.request()
+
+        cfg = configs.get_smoke_config("qwen2-1.5b")
+        t = Trainer(cfg, AdamW(lr=3e-3),
+                    DataConfig(seq_len=32, global_batch=4),
+                    TrainerConfig(total_steps=500, log_interval=1,
+                                  ckpt_dir=str(tmp_path),
+                                  ckpt_interval=1000),
+                    log_fn=log_hook)
+        t.fit(guard=guard)
+        assert len(t.history) <= 8  # exited promptly, not after 500 steps
+        assert latest_step(tmp_path) is not None  # final ckpt written
