@@ -13,15 +13,17 @@ import sys
 import time
 import traceback
 
-from benchmarks import (bench_condition, bench_groupwise, bench_iterations,
-                        bench_latency, bench_memory, bench_perplexity,
-                        bench_roofline, bench_runtime, bench_tolerance)
+from benchmarks import (bench_condition, bench_decode, bench_groupwise,
+                        bench_iterations, bench_latency, bench_memory,
+                        bench_perplexity, bench_roofline, bench_runtime,
+                        bench_tolerance)
 
 SUITES = {
     "perplexity": bench_perplexity.run,    # Table 1/2/9
     "runtime": bench_runtime.run,          # Fig. 1(b), App. A.2
     "memory": bench_memory.run,            # Table 4, Eq. 9-13
     "latency": bench_latency.run,          # Tables 5/6
+    "decode": bench_decode.run,            # decode fast path (tok/s trajectory)
     "iterations": bench_iterations.run,    # Fig. 3
     "tolerance": bench_tolerance.run,      # Fig. 4
     "condition": bench_condition.run,      # Table 7

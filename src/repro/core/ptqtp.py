@@ -30,7 +30,6 @@ import numpy as np
 
 __all__ = [
     "PTQTPConfig",
-    "PTQTPResult",
     "ptqtp_quantize",
     "ptqtp_dequantize",
     "ptqtp_error",
@@ -70,10 +69,6 @@ class PTQTPConfig:
     def __post_init__(self):
         assert self.group_size >= 2
         assert self.t_max >= 1
-
-
-class PTQTPResult(Tuple):
-    """(t1, t2, alpha) named access — kept as a plain pytree-friendly tuple."""
 
 
 @jax.tree_util.register_pytree_node_class

@@ -35,9 +35,9 @@ def _kernel(q_ref, k8_ref, ks_ref, v8_ref, vs_ref, posb_ref, pos_ref,
     def body(i, carry):
         m, l, acc = carry
         off = i * chunk
-        k8 = pl.load(k8_ref, (0, pl.dslice(off, chunk), 0, slice(None)))
-        ks = pl.load(ks_ref, (0, pl.dslice(off, chunk), 0))
-        pb = pl.load(posb_ref, (0, pl.dslice(off, chunk)))
+        k8 = k8_ref[0, pl.dslice(off, chunk), 0, :]
+        ks = ks_ref[0, pl.dslice(off, chunk), 0]
+        pb = posb_ref[0, pl.dslice(off, chunk)]
         k = k8.astype(jnp.float32) * ks[:, None]        # (C, hd) dequant
         logits = q @ k.T                                # (G, C)
         valid = (pb >= 0) & (pb <= pos) & (pos - pb < w_eff)
@@ -46,8 +46,8 @@ def _kernel(q_ref, k8_ref, ks_ref, v8_ref, vs_ref, posb_ref, pos_ref,
         m_new = jnp.maximum(m, jnp.max(logits, axis=-1))     # (G,)
         alpha = jnp.exp(m - m_new)
         p = jnp.exp(logits - m_new[:, None])                 # (G, C)
-        v8 = pl.load(v8_ref, (0, pl.dslice(off, chunk), 0, slice(None)))
-        vs = pl.load(vs_ref, (0, pl.dslice(off, chunk), 0))
+        v8 = v8_ref[0, pl.dslice(off, chunk), 0, :]
+        vs = vs_ref[0, pl.dslice(off, chunk), 0]
         v = v8.astype(jnp.float32) * vs[:, None]             # (C, hd)
         acc = acc * alpha[:, None] + p @ v
         l = l * alpha + jnp.sum(p, axis=-1)

@@ -1,11 +1,14 @@
-"""Pallas TPU kernel: fused unpack + grouped ternary matmul + per-group scale.
+"""Pallas TPU kernels: fused unpack + grouped ternary matmul + per-group scale.
 
 TPU adaptation of PTQTP's multiplication-free inference (DESIGN.md §2):
 packed 2-bit trit-planes stream HBM→VMEM (0.5 B/weight instead of 2 B),
 are unpacked with shifts/masks on the VPU, promoted to the activation dtype
-and fed to the MXU in 128-aligned tiles; the per-group α pair scales the
-128-wide partial sums before accumulation.
+and fed to the MXU; the per-group α pair scales the partial sums before
+accumulation.
 
+Two variants share the unpack helper:
+
+``ternary_matmul_pallas`` — the prefill/training tile kernel.
 Grid layout: (M // bm, N // bn, D // G)  — the k axis steps one weight group
 (G = 128 = MXU tile edge) at a time, so each k step is exactly one scaled
 MXU pass per plane:
@@ -17,6 +20,23 @@ BlockSpecs keep the working set in VMEM:
   t1p/t2p(bn, G // 4)   packed trits (uint8)
   alpha  (bn, 1, 2)     group scales
   out    (bm, bn)       f32 accumulator (revisited across k steps)
+
+``ternary_matvec_pallas`` — the decode fast path (m < 128).  Decode batches
+are a handful of rows, so padding m to a 128-row tile wastes ≥ 96% of every
+MXU pass and the two-passes-per-plane schedule doubles the weight traffic's
+compute shadow.  The small-m kernel instead:
+
+  * keeps all m rows resident in VMEM for the whole kernel (no m padding,
+    no m grid axis);
+  * fuses both trit-planes into a *single* MXU pass per k step by
+    concatenating T¹/T² along the n axis and folding the α pair into one
+    (2·bn,) scale vector:
+
+        p = x_g @ [T¹_g ; T²_g]ᵀ            # one (m, 2·bn) pass
+        acc += (p ∘ [α¹ ; α²])[:, :bn] + (p ∘ [α¹ ; α²])[:, bn:]
+
+  * accumulates in a VMEM scratch ref and writes the output block exactly
+    once (the tile kernel revisits its HBM-backed output block every k step).
 """
 
 from __future__ import annotations
@@ -26,6 +46,7 @@ import functools
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
 
 
 def _unpack_block(packed_i32, bn: int, g: int):
@@ -114,5 +135,86 @@ def ternary_matmul_pallas(
         ],
         out_specs=pl.BlockSpec((bm, bn), lambda i, j, k: (i, j)),
         out_shape=jax.ShapeDtypeStruct((m, n), jnp.float32),
+        interpret=interpret,
+    )(x, t1p, t2p, alpha)
+
+
+# ---------------------------------------------------------------------------
+# decode fast path: small-m fused kernel
+# ---------------------------------------------------------------------------
+
+def _ternary_matvec_kernel(x_ref, t1_ref, t2_ref, a_ref, o_ref, acc_ref, *,
+                           bn, g):
+    k = pl.program_id(1)
+
+    @pl.when(k == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    x = x_ref[...].astype(jnp.float32)                       # (m, G)
+    t1 = _unpack_block(t1_ref[...].astype(jnp.int32), bn, g)
+    t2 = _unpack_block(t2_ref[...].astype(jnp.int32), bn, g)
+    tcat = jnp.concatenate([t1, t2], axis=0)                 # (2·bn, G)
+    a = a_ref[...].astype(jnp.float32)                       # (bn, 1, 2)
+    scale = jnp.concatenate([a[:, 0, 0], a[:, 0, 1]], axis=0)  # (2·bn,)
+
+    # One MXU pass covers both planes; α folds in on the VPU afterwards.
+    p = jax.lax.dot_general(
+        x, tcat, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+    ) * scale[None, :]                                       # (m, 2·bn)
+    acc_ref[...] += p[:, :bn] + p[:, bn:]
+
+    @pl.when(k == pl.num_programs(1) - 1)
+    def _flush():
+        o_ref[...] = acc_ref[...]
+
+
+@functools.partial(
+    jax.jit, static_argnames=("group_size", "block_n", "interpret")
+)
+def ternary_matvec_pallas(
+    x: jax.Array,
+    t1p: jax.Array,
+    t2p: jax.Array,
+    alpha: jax.Array,
+    *,
+    group_size: int = 128,
+    block_n: int = 128,
+    interpret: bool = False,
+) -> jax.Array:
+    """Decode-shape y = x @ Ŵᵀ for small m (no padding of m to MXU tiles).
+
+    Args:
+      x:     (m, d) activations, m < 128 (decode batch).
+      t1p:   (n, d // 4) uint8 packed plane 1.
+      t2p:   (n, d // 4) uint8 packed plane 2.
+      alpha: (n, d // group_size, 2) f32.
+    Returns:
+      (m, n) f32.
+    """
+    m, d = x.shape
+    n = t1p.shape[0]
+    g = group_size
+    assert d % g == 0, (d, g)
+    assert t1p.shape == (n, d // 4)
+    assert alpha.shape == (n, d // g, 2)
+
+    bn = min(block_n, n)
+    assert n % bn == 0, (n, bn)
+
+    grid = (n // bn, d // g)  # k innermost: the scratch acc stays live per j
+    kernel = functools.partial(_ternary_matvec_kernel, bn=bn, g=g)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((m, g), lambda j, k: (0, k)),
+            pl.BlockSpec((bn, g // 4), lambda j, k: (j, k)),
+            pl.BlockSpec((bn, g // 4), lambda j, k: (j, k)),
+            pl.BlockSpec((bn, 1, 2), lambda j, k: (j, k, 0)),
+        ],
+        out_specs=pl.BlockSpec((m, bn), lambda j, k: (0, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), jnp.float32),
+        scratch_shapes=[pltpu.VMEM((m, bn), jnp.float32)],
         interpret=interpret,
     )(x, t1p, t2p, alpha)

@@ -1,32 +1,97 @@
 """Jitted public wrapper for the PTQTP ternary matmul.
 
 Backends:
-  * ``pallas``  — the fused TPU kernel (interpret=True on CPU for validation).
+  * ``auto``    — platform-aware selection (the default): the Pallas hand
+                  kernel compiled on TPU, the XLA ``grouped`` path elsewhere
+                  (Pallas cannot lower for the CPU host platform; interpret
+                  mode is for validation only, never for serving).
+  * ``pallas``  — the fused TPU kernels.  Decode batches (m < 128) take the
+                  small-m fast path (`ternary_matvec_pallas`): no padding of
+                  m to MXU tiles, both trit-planes fused into a single MXU
+                  pass per k step, VMEM scratch accumulation.  Larger m uses
+                  the 128-aligned tile kernel.
   * ``grouped`` — XLA path over *packed* planes: unpack + grouped einsum.
-                  This is what the multi-pod dry-run lowers (Pallas cannot
-                  lower for the CPU host platform), and is what XLA itself
-                  would fuse on TPU absent the hand kernel.
+                  This is what the multi-pod dry-run lowers, and is what XLA
+                  itself would fuse on TPU absent the hand kernel.
   * ``ref``     — full-dequant oracle (testing only).
 
 The grouped einsum applies α to per-group partial sums, never materializing
 the dequantized Ŵ at matmul precision for the whole matrix at once:
 
   y[b, n] = Σ_g α¹[n,g]·(Σ_{j∈g} x[b,j]·T¹[n,j]) + α²[...]·(...)
+
+Tile selection is shape-cached (`_select_tiles`): block sizes are pure
+functions of (m, n) and the per-shape answer is memoized so the dispatch
+adds no per-call Python cost on the decode hot path.
 """
 
 from __future__ import annotations
 
 import functools
-from typing import Optional
+import math
 
 import jax
 import jax.numpy as jnp
 
 from repro.core.packing import pack_trits, unpack_trits
 from repro.kernels.ternary_matmul import ref as _ref
-from repro.kernels.ternary_matmul.kernel import ternary_matmul_pallas
+from repro.kernels.ternary_matmul.kernel import (
+    ternary_matmul_pallas,
+    ternary_matvec_pallas,
+)
 
-DEFAULT_BACKEND = "grouped"
+DEFAULT_BACKEND = "auto"
+# Below this m the batch is decode-shaped: padding to a 128-row MXU tile
+# would waste > (1 - m/128) of every pass, so take the matvec fast path.
+SMALL_M_THRESHOLD = 128
+
+
+def resolve_backend(backend: str | None = None, platform: str | None = None) -> str:
+    """Map 'auto'/None to the fastest backend for the current platform."""
+    if backend in (None, "auto"):
+        platform = platform or jax.default_backend()
+        return "pallas" if platform == "tpu" else "grouped"
+    return backend
+
+
+@functools.lru_cache(maxsize=None)
+def _largest_divisor_at_most(n: int, cap: int) -> int:
+    """Largest divisor of n that is <= cap.
+
+    Fast paths: gcd catches every n with a divisor structure aligned to cap
+    (cap itself, and — cap being a power of two — the full 2-adic part of n
+    via the n & -n bit trick folded into gcd).  The general case enumerates
+    divisor pairs in O(√n) instead of the seed's linear countdown scan.
+    Memoized: tile selection asks once per weight shape.
+    """
+    if n <= cap:
+        return n
+    g = math.gcd(n, cap)
+    if g == cap:
+        return cap
+    best = g  # gcd(n, pow2-cap) == min(n & -n, cap): the bit-trick lower bound
+    i = 1
+    while i * i <= n:
+        if n % i == 0:
+            for d in (i, n // i):
+                if best < d <= cap:
+                    best = d
+        i += 1
+    return best
+
+
+@functools.lru_cache(maxsize=None)
+def _select_tiles(m: int, n: int) -> tuple:
+    """Per-shape (small_m, block_m, block_n) choice, memoized.
+
+    block_n divides n exactly (Pallas grids need exact tiling on the weight
+    axis); block_m is the MXU tile for the large-m kernel, with the residual
+    rows handled by padding in the caller.
+    """
+    small = m < SMALL_M_THRESHOLD
+    bm = m if small else 128
+    bn = _largest_divisor_at_most(n, 128)
+    return small, bm, bn
 
 
 def _grouped(x, t1p, t2p, alpha, group_size):
@@ -35,8 +100,12 @@ def _grouped(x, t1p, t2p, alpha, group_size):
     g = group_size
     ng = d // g
     xf = x.reshape(-1, ng, g)
-    t1 = unpack_trits(t1p).reshape(n, ng, g).astype(x.dtype)
-    t2 = unpack_trits(t2p).reshape(n, ng, g).astype(x.dtype)
+    if t1p.dtype == jnp.uint8:  # packed: 4 trits / byte
+        t1, t2 = unpack_trits(t1p), unpack_trits(t2p)
+    else:  # pre-unpacked int8 planes (the decode loop hoists the unpack)
+        t1, t2 = t1p, t2p
+    t1 = t1.reshape(n, ng, g).astype(x.dtype)
+    t2 = t2.reshape(n, ng, g).astype(x.dtype)
     # (B, ng, g) x (n, ng, g) -> (B, ng, n) partial sums per group
     p1 = jnp.einsum("bgk,ngk->bgn", xf, t1, preferred_element_type=jnp.float32)
     p2 = jnp.einsum("bgk,ngk->bgn", xf, t2, preferred_element_type=jnp.float32)
@@ -44,6 +113,30 @@ def _grouped(x, t1p, t2p, alpha, group_size):
     y = jnp.einsum("bgn,ng->bn", p1, a[..., 0]) + jnp.einsum(
         "bgn,ng->bn", p2, a[..., 1]
     )
+    return y.reshape(*lead, n)
+
+
+def _pallas(x, t1p, t2p, alpha, group_size, interpret):
+    *lead, d = x.shape
+    x2 = x.reshape(-1, d)
+    m = x2.shape[0]
+    n = t1p.shape[0]
+    small, bm, bn = _select_tiles(m, n)
+    if small:
+        y = ternary_matvec_pallas(
+            x2, t1p, t2p, alpha,
+            group_size=group_size, block_n=bn, interpret=interpret,
+        )
+    else:
+        pad = (-m) % bm
+        if pad:
+            x2 = jnp.pad(x2, ((0, pad), (0, 0)))
+        y = ternary_matmul_pallas(
+            x2, t1p, t2p, alpha,
+            group_size=group_size, block_m=bm, block_n=bn, interpret=interpret,
+        )
+        if pad:
+            y = y[:m]
     return y.reshape(*lead, n)
 
 
@@ -55,49 +148,43 @@ def ternary_matmul(
     *,
     group_size: int = 128,
     backend: str = DEFAULT_BACKEND,
-    interpret: bool = True,
+    interpret: bool | None = None,
     out_dtype=None,
 ) -> jax.Array:
-    """y = x @ Ŵᵀ. x: (..., d); packed planes (n, d//4); alpha (n, d//G, 2)."""
+    """y = x @ Ŵᵀ. x: (..., d); packed planes (n, d//4); alpha (n, d//G, 2).
+
+    ``backend='auto'`` selects Pallas (compiled) on TPU and the grouped XLA
+    path elsewhere.  ``interpret=None`` likewise resolves per platform, so an
+    explicit ``backend='pallas'`` still validates on CPU via the interpreter.
+
+    Plane dtype doubles as the storage tag: uint8 means packed (4 trits per
+    byte, what every backend expects), int8 means raw ±1/0 trits that a
+    caller already unpacked (the serving decode loop hoists the unpack out
+    of its scan) — only the grouped einsum consumes those directly.
+    """
+    if t1p.dtype != jnp.uint8:
+        # Raw planes: only the grouped einsum consumes them. 'auto' adapts;
+        # an explicit ask for another backend is a misconfiguration (e.g.
+        # preunpack_decode=True on TPU would silently bypass the hand
+        # kernel), so fail loudly instead of overriding the choice.
+        if backend not in (None, "auto", "grouped"):
+            raise ValueError(
+                f"backend {backend!r} requires packed uint8 trit-planes; "
+                "pre-unpacked int8 planes are served by the grouped backend")
+        backend = "grouped"
+    else:
+        backend = resolve_backend(backend)
     if backend == "ref":
         y = _ref.ternary_matmul_packed_ref(x, t1p, t2p, alpha, group_size)
     elif backend == "grouped":
         y = _grouped(x, t1p, t2p, alpha, group_size)
     elif backend == "pallas":
-        *lead, d = x.shape
-        x2 = x.reshape(-1, d)
-        m = x2.shape[0]
-        n = t1p.shape[0]
-        # pad m to a tile multiple
-        bm = 128 if m >= 128 else _pow2_at_most(m)
-        pad = (-m) % bm
-        if pad:
-            x2 = jnp.pad(x2, ((0, pad), (0, 0)))
-        bn = 128 if n % 128 == 0 else _largest_divisor_at_most(n, 128)
-        y = ternary_matmul_pallas(
-            x2, t1p, t2p, alpha,
-            group_size=group_size, block_m=bm, block_n=bn, interpret=interpret,
-        )
-        if pad:
-            y = y[:m]
-        y = y.reshape(*lead, n)
+        if interpret is None:
+            interpret = jax.default_backend() != "tpu"
+        y = _pallas(x, t1p, t2p, alpha, group_size, interpret)
     else:
         raise ValueError(f"unknown backend {backend!r}")
     return y.astype(out_dtype) if out_dtype is not None else y
-
-
-def _pow2_at_most(m: int) -> int:
-    b = 1
-    while b * 2 <= m:
-        b *= 2
-    return b
-
-
-def _largest_divisor_at_most(n: int, cap: int) -> int:
-    for b in range(min(cap, n), 0, -1):
-        if n % b == 0:
-            return b
-    return 1
 
 
 def quantized_from_dense(w_t: jax.Array, alpha: jax.Array):

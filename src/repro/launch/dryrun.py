@@ -260,9 +260,18 @@ def _traffic_bytes(compiled, promo: float = 1.0):
         return 0.0, 0.0
 
 
+def _cost_analysis(compiled):
+    """compiled.cost_analysis() as a flat dict — newer jax returns a
+    one-element list of per-computation dicts, older jax the dict itself."""
+    cost = compiled.cost_analysis() or {}
+    if isinstance(cost, (list, tuple)):
+        cost = cost[0] if cost else {}
+    return cost
+
+
 def _cell_costs(compiled, promo: float = 1.0):
     """(flops, op-bytes, (traffic, interface)-bytes, per-op coll bytes)."""
-    cost = compiled.cost_analysis() or {}
+    cost = _cost_analysis(compiled)
     coll = roofline.parse_collectives(compiled.as_text())
     return (float(cost.get("flops", 0.0)),
             float(cost.get("bytes accessed", 0.0)),
@@ -319,7 +328,7 @@ def analyze(arch, shape_name, cfg, mesh, lowered, compiled, *, quantized,
             lower_s, compile_s, corrected=None, extras=None):
     info = SHAPES[shape_name]
     n_chips = mesh.size
-    cost = compiled.cost_analysis() or {}
+    cost = _cost_analysis(compiled)
     try:
         mem = compiled.memory_analysis()
         mem_d = {

@@ -24,12 +24,14 @@ _state = threading.local()
 
 
 def matmul_backend() -> str:
-    return getattr(_state, "backend", "grouped")
+    """Active quantized-matmul backend. Defaults to 'auto': the Pallas hand
+    kernels (small-m decode fast path included) on TPU, XLA grouped on CPU."""
+    return getattr(_state, "backend", "auto")
 
 
 @contextlib.contextmanager
 def use_matmul_backend(backend: str):
-    """Select the quantized-matmul backend ('grouped'|'pallas'|'ref')."""
+    """Select the quantized-matmul backend ('auto'|'grouped'|'pallas'|'ref')."""
     prev = matmul_backend()
     _state.backend = backend
     try:

@@ -1,14 +1,28 @@
-"""Continuous-batching serving engine.
+"""Continuous-batching serving engine with a fused multi-step decode loop.
 
 Slot-based continuous batching (vLLM-style, adapted to fixed-shape JAX):
 
-  * the decode batch has `max_slots` fixed slots → one jit'd `decode_step`
+  * the decode batch has `max_slots` fixed slots → one jit'd decode loop
     for the whole fleet of in-flight requests (no recompilation as requests
     come and go);
-  * an arriving request is prefilled alone (prompt lengths bucketed to powers
-    of two to bound compile count) and its state is *merged* into a free slot;
+  * an arriving request is prefilled alone (one cached jit per prompt
+    length, bounded by `capacity`) and its state is *merged* into a free
+    slot;
   * finished slots (EOS / max_tokens) are freed immediately and refilled from
     the wait queue on the next step — decode never stalls on stragglers.
+
+Decode fast path (the paper's 4.63× end-to-end claim only materializes if the
+serving loop keeps the accelerator busy):
+
+  * ``decode_chunk`` tokens are generated per host round-trip by a single
+    jitted ``lax.scan`` that fuses decode_step + on-device sampling — one
+    dispatch and one host sync per K tokens instead of per token;
+  * the decode state is donated to the loop (``donate_argnums``), so XLA
+    writes KV-cache updates in place instead of copying the caches each step;
+  * temperature and EOS handling are vectorized per slot *on device*: each
+    slot samples with its own temperature (greedy where 0), and a slot that
+    emits EOS is frozen for the rest of the chunk (its token repeats; the
+    host discards everything after the EOS when collecting).
 
 Works identically for dense and PTQTP-quantized params (`dense` dispatches on
 the kernel leaf type), which is the paper's deployment story.
@@ -25,8 +39,12 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core.packing import unpack_trits
+from repro.core.quantize_model import QuantizedKernel
+from repro.kernels.ternary_matmul.ops import resolve_backend
 from repro.models import decode_step, init_decode_state, prefill
-from repro.serving.sampling import sample_token
+from repro.models.common import matmul_backend
+from repro.serving.sampling import sample_token, sample_tokens
 
 
 @dataclasses.dataclass
@@ -46,10 +64,45 @@ class EngineConfig:
     capacity: int = 256          # KV-cache length per slot
     eos_id: Optional[int] = None
     seed: int = 0
+    decode_chunk: int = 8        # tokens per jitted decode dispatch (K)
+    # Pre-unpack trit-planes for the decode loop (None → auto: only when the
+    # grouped XLA backend serves the quantized matmuls; the Pallas TPU kernel
+    # unpacks in-kernel, where streaming packed planes IS the win). Trades
+    # 4x plane bytes (int8 trits vs 2-bit fields, still 2x under fp16) for
+    # not re-unpacking every weight at every decode step.
+    preunpack_decode: Optional[bool] = None
+
+    def __post_init__(self):
+        assert self.max_slots >= 1 and self.capacity >= 1
+        assert self.decode_chunk >= 1, "decode_chunk=0 would never emit"
 
 
-def _merge_slot(batch_state, one_state, slot: int):
-    """Write a batch=1 decode state into slot `slot` of the batch state."""
+def _preunpack_params(params):
+    """Replace packed QuantizedKernel planes with raw int8 trit-planes.
+
+    The unpack is exact and the grouped einsum consumes either form with the
+    identical contraction order, so decode outputs are bit-identical — the
+    unpack work just moves from every decode step to engine init.
+    """
+
+    def unpack(leaf):
+        if isinstance(leaf, QuantizedKernel):
+            return dataclasses.replace(
+                leaf, t1p=unpack_trits(leaf.t1p), t2p=unpack_trits(leaf.t2p))
+        return leaf
+
+    return jax.tree.map(unpack, params,
+                        is_leaf=lambda x: isinstance(x, QuantizedKernel))
+
+
+def _merge_slot_impl(batch_state, one_state, slot):
+    """Write a batch=1 decode state into slot `slot` of the batch state.
+
+    Jitted (slot is a traced scalar): one dispatch per admit instead of one
+    per state leaf — the leaf-by-leaf eager version dominated admit latency.
+    The batch state is donated on accelerators so the one-slot write never
+    copies the other slots' KV caches.
+    """
 
     def walk(dst, src, path):
         if isinstance(dst, dict):
@@ -63,6 +116,49 @@ def _merge_slot(batch_state, one_state, slot: int):
     return walk(batch_state, one_state, "")
 
 
+_merge_jit = None
+
+
+def _merge_slot(batch_state, one_state, slot):
+    """Jitted merge, donation decided lazily (first call, not import time —
+    importing this module must not initialize the JAX platform)."""
+    global _merge_jit
+    if _merge_jit is None:
+        donate = (0,) if jax.default_backend() != "cpu" else ()
+        _merge_jit = jax.jit(_merge_slot_impl, donate_argnums=donate)
+    return _merge_jit(batch_state, one_state, slot)
+
+
+def _decode_loop(params, state, tokens, temps, active, key, *,
+                 cfg, n_steps, eos_id):
+    """K fused decode steps with on-device per-slot sampling.
+
+    Args:
+      tokens: (B,) int32 last token per slot.
+      temps:  (B,) f32 per-slot temperature (0 → greedy for that slot).
+      active: (B,) bool — occupied slots; inactive slots repeat their token.
+    Returns:
+      (new_state, toks) with toks (n_steps, B) — the sampled token per step.
+    """
+
+    def body(carry, _):
+        state, tok, active, key = carry
+        logits, state = decode_step(params, cfg, state, tok)
+        key, sub = jax.random.split(key)
+        nxt = sample_tokens(logits, sub, temps)
+        nxt = jnp.where(active, nxt, tok)  # frozen slots repeat (host drops)
+        if eos_id is not None:
+            active = jnp.logical_and(active, nxt != eos_id)
+        return (state, nxt, active, key), nxt
+
+    # Full unroll: the scan body is op-overhead-bound at decode shapes, and
+    # unrolling lets XLA fuse across steps (measured ~40% per-token on CPU).
+    (state, _, _, _), toks = jax.lax.scan(
+        body, (state, tokens, active, key), None, length=n_steps,
+        unroll=min(n_steps, 16))
+    return state, toks
+
+
 class ServingEngine:
     def __init__(self, params, model_cfg, engine_cfg: EngineConfig):
         self.params = params
@@ -74,10 +170,16 @@ class ServingEngine:
         self.state = init_decode_state(model_cfg, engine_cfg.max_slots,
                                        engine_cfg.capacity)
         self.last_tokens = np.zeros((engine_cfg.max_slots,), np.int32)
-        self._decode = jax.jit(
-            functools.partial(decode_step, cfg=self.cfg))
+        pre = engine_cfg.preunpack_decode
+        if pre is None:
+            pre = resolve_backend(matmul_backend()) == "grouped"
+        # serve-side params: prefill and decode both read these, so the
+        # unpack is paid once per engine, not once per dispatch
+        self._serve_params = _preunpack_params(params) if pre else params
+        self._loop_cache: Dict[int, Any] = {}
         self._prefill_cache: Dict[int, Any] = {}
         self._admit_finished: List[Request] = []
+        self._slot_arrays = None  # (temps, active) cache; None → slots dirty
         self.steps = 0
 
     # ------------------------------------------------------------------ API
@@ -95,29 +197,54 @@ class ServingEngine:
 
     # ----------------------------------------------------------------- step
     def step(self) -> List[Request]:
+        """Admit waiting requests, then decode one chunk of up to K tokens.
+
+        The chunk length adapts to the largest remaining token budget among
+        active slots, rounded up to a power of two (compile count stays
+        O(log K)) — a fleet that only needs 3 more tokens never pays for a
+        16-step dispatch.
+        """
         self._admit()
         done_now = self._admit_finished
         self._admit_finished = []
         if all(s is None for s in self.slots):
             return done_now
-        tokens = jnp.asarray(self.last_tokens)
-        logits, self.state = self._decode(
-            params=self.params, state=self.state, tokens=tokens)
+        remaining = max(s.max_new_tokens - len(s.output)
+                        for s in self.slots if s is not None)
+        n_steps = min(self.ecfg.decode_chunk,
+                      1 << max(remaining - 1, 0).bit_length())
         self.key, sub = jax.random.split(self.key)
-        temps = [s.temperature if s else 0.0 for s in self.slots]
-        temp = max(temps)  # per-engine temperature (slots share a sampler)
-        next_tok = np.asarray(sample_token(logits, sub, temperature=temp))
-        self.steps += 1
-        return done_now + self._collect(next_tok)
+        if self._slot_arrays is None:  # rebuilt only when slots changed
+            self._slot_arrays = (
+                jnp.asarray([s.temperature if s else 0.0
+                             for s in self.slots], jnp.float32),
+                jnp.asarray([s is not None for s in self.slots]))
+        temps, active = self._slot_arrays
+        self.state, toks = self._loop_fn(n_steps)(
+            self._serve_params, self.state, jnp.asarray(self.last_tokens),
+            temps, active, sub)
+        self.steps += n_steps
+        return done_now + self._collect(np.asarray(toks))
 
     # ------------------------------------------------------------- internals
-    def _bucket(self, n: int) -> int:
-        b = 8
-        while b < n:
-            b *= 2
-        return min(b, self.ecfg.capacity)
+    def _merge(self, batch_state, one_state, slot):
+        return _merge_slot(batch_state, one_state, slot)
+
+    def _loop_fn(self, n_steps: int):
+        if n_steps not in self._loop_cache:
+            # Donating the decode state lets XLA update the KV caches in
+            # place; CPU has no donation support and would warn per dispatch.
+            donate = (1,) if jax.default_backend() != "cpu" else ()
+            self._loop_cache[n_steps] = jax.jit(
+                functools.partial(_decode_loop, cfg=self.cfg,
+                                  n_steps=n_steps,
+                                  eos_id=self.ecfg.eos_id),
+                donate_argnums=donate)
+        return self._loop_cache[n_steps]
 
     def _prefill_fn(self, length: int):
+        # one jit per distinct prompt length; prompts are clipped to
+        # `capacity` on admit, so the cache is bounded by capacity entries
         if length not in self._prefill_cache:
             cfg, cap = self.cfg, self.ecfg.capacity
 
@@ -135,9 +262,9 @@ class ServingEngine:
             req = self.queue.popleft()
             prompt = req.prompt[-self.ecfg.capacity:]
             fn = self._prefill_fn(len(prompt))
-            logits, one_state = fn(self.params,
+            logits, one_state = fn(self._serve_params,
                                    jnp.asarray([prompt], jnp.int32))
-            self.state = _merge_slot(self.state, one_state, slot)
+            self.state = self._merge(self.state, one_state, slot)
             self.key, sub = jax.random.split(self.key)
             tok = int(np.asarray(
                 sample_token(logits, sub, temperature=req.temperature))[0])
@@ -151,18 +278,29 @@ class ServingEngine:
                 continue
             self.last_tokens[slot] = tok
             self.slots[slot] = req
+            self._slot_arrays = None
 
-    def _collect(self, next_tok: np.ndarray) -> List[Request]:
+    def _collect(self, toks: np.ndarray) -> List[Request]:
+        """Fold a (K, B) chunk of tokens into the per-slot requests.
+
+        A slot stops at its first EOS or at its token budget; anything the
+        device generated past that point within the chunk is discarded (the
+        slot's cache is overwritten by the next prefill merge).
+        """
         finished = []
         for slot, req in enumerate(self.slots):
             if req is None:
                 continue
-            tok = int(next_tok[slot])
-            req.output.append(tok)
-            self.last_tokens[slot] = tok
-            hit_eos = self.ecfg.eos_id is not None and tok == self.ecfg.eos_id
-            if hit_eos or len(req.output) >= req.max_new_tokens:
-                req.done = True
-                finished.append(req)
-                self.slots[slot] = None
+            for k in range(toks.shape[0]):
+                tok = int(toks[k, slot])
+                req.output.append(tok)
+                self.last_tokens[slot] = tok
+                hit_eos = (self.ecfg.eos_id is not None
+                           and tok == self.ecfg.eos_id)
+                if hit_eos or len(req.output) >= req.max_new_tokens:
+                    req.done = True
+                    finished.append(req)
+                    self.slots[slot] = None
+                    self._slot_arrays = None
+                    break
         return finished

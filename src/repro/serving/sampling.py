@@ -1,4 +1,10 @@
-"""Token sampling: greedy / temperature / top-k, jit-friendly."""
+"""Token sampling: greedy / temperature / top-k, jit-friendly.
+
+``sample_token`` is the scalar-temperature form (host-side prefill path);
+``sample_tokens`` is the vectorized per-slot form the fused decode loop jits:
+each batch row carries its own temperature, with temperature 0 meaning greedy
+for that row only — slots never share a sampler.
+"""
 
 from __future__ import annotations
 
@@ -16,3 +22,21 @@ def sample_token(logits: jax.Array, key: jax.Array, *,
         kth = jax.lax.top_k(logits, top_k)[0][..., -1:]
         logits = jnp.where(logits < kth, -jnp.inf, logits)
     return jax.random.categorical(key, logits, axis=-1).astype(jnp.int32)
+
+
+def sample_tokens(logits: jax.Array, key: jax.Array,
+                  temperatures: jax.Array, *, top_k: int = 0) -> jax.Array:
+    """Per-row sampling: logits (B, V), temperatures (B,) -> tokens (B,).
+
+    Rows with temperature <= 0 take the argmax; the rest sample from
+    logits / temperature (optionally top-k-truncated). Fully vectorized so
+    it fuses into the jitted decode loop — no host branching per slot.
+    """
+    greedy = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+    t = jnp.maximum(temperatures.astype(jnp.float32), 1e-6)[:, None]
+    scaled = logits.astype(jnp.float32) / t
+    if top_k > 0:
+        kth = jax.lax.top_k(scaled, top_k)[0][..., -1:]
+        scaled = jnp.where(scaled < kth, -jnp.inf, scaled)
+    sampled = jax.random.categorical(key, scaled, axis=-1).astype(jnp.int32)
+    return jnp.where(temperatures <= 0.0, greedy, sampled)

@@ -81,6 +81,107 @@ class TestTernaryMatmul:
                                    rtol=1e-4, atol=1e-4)
 
 
+class TestSmallMFastPath:
+    """Decode fast path: the small-m fused kernel vs the ref oracle."""
+
+    @pytest.mark.parametrize("m", [1, 3, 5])
+    @pytest.mark.parametrize("n,d", [
+        (128, 256),     # aligned n
+        (96, 256),      # n < 128, not divisible by 128
+        (192, 128),     # n > 128, not divisible by 128 (bn = 96)
+    ])
+    def test_small_m_parity(self, m, n, d):
+        q, t1p, t2p = _quantized(n, d, seed=m)
+        x = jnp.asarray(np.random.default_rng(m + 10)
+                        .standard_normal((m, d), dtype=np.float32))
+        y = tm_ops.ternary_matmul(x, t1p, t2p, q.alpha, group_size=128,
+                                  backend="pallas")
+        y_r = tm_ops.ternary_matmul(x, t1p, t2p, q.alpha, group_size=128,
+                                    backend="ref")
+        np.testing.assert_allclose(np.asarray(y), np.asarray(y_r),
+                                   rtol=1e-4, atol=1e-4)
+
+    def test_small_m_kernel_direct(self):
+        """The matvec kernel entry point itself, bypassing dispatch."""
+        from repro.kernels.ternary_matmul.kernel import ternary_matvec_pallas
+
+        q, t1p, t2p = _quantized(256, 384, seed=21)
+        x = jnp.asarray(np.random.default_rng(22)
+                        .standard_normal((4, 384), dtype=np.float32))
+        y = ternary_matvec_pallas(x, t1p, t2p, q.alpha, group_size=128,
+                                  block_n=128, interpret=True)
+        y_r = tm_ref.ternary_matmul_ref(x, q.t1, q.t2, q.alpha, group_size=128)
+        np.testing.assert_allclose(np.asarray(y), np.asarray(y_r),
+                                   rtol=1e-4, atol=1e-4)
+
+    def test_bf16_activation(self):
+        q, t1p, t2p = _quantized(128, 256, seed=31)
+        x = jnp.asarray(np.random.default_rng(32)
+                        .standard_normal((2, 256), dtype=np.float32)
+                        ).astype(jnp.bfloat16)
+        y = tm_ops.ternary_matmul(x, t1p, t2p, q.alpha, group_size=128,
+                                  backend="pallas")
+        y_r = tm_ref.ternary_matmul_ref(x.astype(jnp.float32), q.t1, q.t2,
+                                        q.alpha, group_size=128)
+        np.testing.assert_allclose(np.asarray(y, np.float32), np.asarray(y_r),
+                                   rtol=2e-2, atol=2e-1)
+
+
+class TestBackendSelection:
+    def test_auto_resolves_per_platform(self):
+        # this suite runs on CPU: auto must pick the XLA grouped path
+        assert tm_ops.resolve_backend("auto") == "grouped"
+        assert tm_ops.resolve_backend(None) == "grouped"
+        assert tm_ops.resolve_backend("auto", platform="tpu") == "pallas"
+        assert tm_ops.resolve_backend("ref") == "ref"
+
+    def test_auto_backend_matches_ref(self):
+        q, t1p, t2p = _quantized(128, 256, seed=41)
+        x = jnp.asarray(np.random.default_rng(42)
+                        .standard_normal((3, 256), dtype=np.float32))
+        y = tm_ops.ternary_matmul(x, t1p, t2p, q.alpha, group_size=128,
+                                  backend="auto")
+        y_r = tm_ref.ternary_matmul_ref(x, q.t1, q.t2, q.alpha, group_size=128)
+        np.testing.assert_allclose(np.asarray(y), np.asarray(y_r),
+                                   rtol=1e-4, atol=1e-4)
+
+    @pytest.mark.parametrize("n,cap,want", [
+        (128, 128, 128), (256, 128, 128), (96, 128, 96), (192, 128, 96),
+        (384, 128, 128), (259, 128, 37), (127, 128, 127), (97, 32, 1),
+        (5504, 128, 128),
+    ])
+    def test_largest_divisor(self, n, cap, want):
+        got = tm_ops._largest_divisor_at_most(n, cap)
+        assert got == want
+        assert n % got == 0 and got <= cap
+
+    def test_unpacked_planes_dispatch(self):
+        """int8 (pre-unpacked) planes: 'auto' adapts to grouped; an explicit
+        ask for another backend fails loudly instead of being overridden."""
+        from repro.core.packing import unpack_trits
+
+        q, t1p, t2p = _quantized(128, 256, seed=51)
+        t1, t2 = unpack_trits(t1p), unpack_trits(t2p)
+        x = jnp.asarray(np.random.default_rng(52)
+                        .standard_normal((2, 256), dtype=np.float32))
+        y = tm_ops.ternary_matmul(x, t1, t2, q.alpha, group_size=128,
+                                  backend="auto")
+        y_r = tm_ref.ternary_matmul_ref(x, q.t1, q.t2, q.alpha, group_size=128)
+        np.testing.assert_allclose(np.asarray(y), np.asarray(y_r),
+                                   rtol=1e-4, atol=1e-4)
+        with pytest.raises(ValueError, match="packed uint8"):
+            tm_ops.ternary_matmul(x, t1, t2, q.alpha, group_size=128,
+                                  backend="pallas")
+
+    def test_tile_selection_cached(self):
+        tm_ops._select_tiles(7, 4096)
+        hits_before = tm_ops._select_tiles.cache_info().hits
+        tm_ops._select_tiles(7, 4096)  # identical call must hit the cache
+        assert tm_ops._select_tiles.cache_info().hits == hits_before + 1
+        assert tm_ops._select_tiles(7, 4096) == (True, 7, 128)
+        assert tm_ops._select_tiles(256, 384) == (False, 128, 128)
+
+
 class TestPTQTPSearchKernel:
     @pytest.mark.parametrize("r,g", [(8, 128), (32, 128), (128, 128),
                                      (16, 256)])

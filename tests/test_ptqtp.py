@@ -1,12 +1,16 @@
 """Core PTQTP quantizer: paper Alg. 1/2 invariants, unit + property tests."""
 
-import hypothesis
-import hypothesis.extra.numpy as hnp
-import hypothesis.strategies as st
 import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
+
+try:  # property tests need hypothesis; the rest of the module runs without
+    import hypothesis
+    import hypothesis.extra.numpy as hnp
+    import hypothesis.strategies as st
+except ImportError:
+    hypothesis = None
 
 from repro.core.ptqtp import (CANDIDATES, PTQTPConfig, ptqtp_dequantize,
                               ptqtp_error, ptqtp_quantize,
@@ -155,51 +159,52 @@ class TestPaperClaims:
 
 
 # ---------------------------------------------------------------------------
-# hypothesis properties
+# hypothesis properties (defined only when hypothesis is installed)
 # ---------------------------------------------------------------------------
 
-w_strat = hnp.arrays(
-    np.float32, st.tuples(st.integers(1, 4), st.just(128)),
-    elements=st.floats(-4, 4, width=32, allow_nan=False),
-)
+if hypothesis is not None:
+    w_strat = hnp.arrays(
+        np.float32, st.tuples(st.integers(1, 4), st.just(128)),
+        elements=st.floats(-4, 4, width=32, allow_nan=False),
+    )
 
+    class TestHypothesis:
+        @hypothesis.given(w=w_strat)
+        @hypothesis.settings(max_examples=25, deadline=None)
+        def test_error_never_exceeds_norm(self, w):
+            """α=0 is in the feasible set, so ||W-Ŵ|| ≤ ~||W||."""
+            q = ptqtp_quantize(jnp.asarray(w), PTQTPConfig(group_size=128,
+                                                           t_max=10))
+            err = np.linalg.norm(np.asarray(ptqtp_dequantize(q)) - w)
+            assert err <= np.linalg.norm(w) * (1 + 1e-3) + 1e-3
 
-class TestHypothesis:
-    @hypothesis.given(w=w_strat)
-    @hypothesis.settings(max_examples=25, deadline=None)
-    def test_error_never_exceeds_norm(self, w):
-        """α=0 is in the feasible set, so ||W-Ŵ|| ≤ ~||W||."""
-        q = ptqtp_quantize(jnp.asarray(w), PTQTPConfig(group_size=128,
-                                                       t_max=10))
-        err = np.linalg.norm(np.asarray(ptqtp_dequantize(q)) - w)
-        assert err <= np.linalg.norm(w) * (1 + 1e-3) + 1e-3
+        @hypothesis.given(w=w_strat, c=st.floats(0.125, 8.0, width=32))
+        @hypothesis.settings(max_examples=15, deadline=None)
+        def test_positive_scale_equivariance(self, w, c):
+            """err(ptqtp(c·W)) ≈ c·err(ptqtp(W)) for c > 0. The *error* is the
+            scale-covariant quantity; elementwise trits may differ — an element
+            sitting exactly on an argmin tie can flip when scaling moves fp
+            rounding across the boundary (observed via hypothesis)."""
+            hypothesis.assume(np.linalg.norm(w) > 1e-2)
+            q1 = ptqtp_quantize(jnp.asarray(w), PTQTPConfig(t_max=10))
+            q2 = ptqtp_quantize(jnp.asarray(w * c), PTQTPConfig(t_max=10))
+            e1 = np.linalg.norm(w * c - np.asarray(ptqtp_dequantize(q1)) * c)
+            e2 = np.linalg.norm(w * c - np.asarray(ptqtp_dequantize(q2)))
+            tol = 5e-2 * c * (np.linalg.norm(w) + 1e-3)
+            assert abs(e1 - e2) <= tol, (e1, e2, tol)
 
-    @hypothesis.given(w=w_strat, c=st.floats(0.125, 8.0, width=32))
-    @hypothesis.settings(max_examples=15, deadline=None)
-    def test_positive_scale_equivariance(self, w, c):
-        """err(ptqtp(c·W)) ≈ c·err(ptqtp(W)) for c > 0. The *error* is the
-        scale-covariant quantity; elementwise trits may differ — an element
-        sitting exactly on an argmin tie can flip when scaling moves fp
-        rounding across the boundary (observed via hypothesis)."""
-        hypothesis.assume(np.linalg.norm(w) > 1e-2)
-        q1 = ptqtp_quantize(jnp.asarray(w), PTQTPConfig(t_max=10))
-        q2 = ptqtp_quantize(jnp.asarray(w * c), PTQTPConfig(t_max=10))
-        e1 = np.linalg.norm(w * c - np.asarray(ptqtp_dequantize(q1)) * c)
-        e2 = np.linalg.norm(w * c - np.asarray(ptqtp_dequantize(q2)))
-        tol = 5e-2 * c * (np.linalg.norm(w) + 1e-3)
-        assert abs(e1 - e2) <= tol, (e1, e2, tol)
-
-    @hypothesis.given(w=w_strat)
-    @hypothesis.settings(max_examples=15, deadline=None)
-    def test_monotone_error_property(self, w):
-        """Error is monotone up to the regularization bias: on degenerate
-        inputs (constant rows / one dominant element + near-zero tail) the
-        adaptive-λ refit trades a λ·‖α‖² bias for stability, so the
-        unregularized error can tick up by a few percent of ‖W‖ (hypothesis
-        measured ≈2% worst-case); we bound the slack at 5%·‖W‖."""
-        hypothesis.assume(np.linalg.norm(w) > 1e-3)
-        _, errors = quantize_with_history(jnp.asarray(w),
-                                          PTQTPConfig(t_max=10))
-        e = np.asarray(errors)
-        tol = 5e-2 * (np.linalg.norm(w) + 1e-6)
-        assert np.all(e[1:] <= e[:-1] + tol)
+        @hypothesis.given(w=w_strat)
+        @hypothesis.settings(max_examples=15, deadline=None)
+        def test_monotone_error_property(self, w):
+            """Error is monotone up to the regularization bias: on degenerate
+            inputs (constant rows / one dominant element + near-zero tail) the
+            adaptive-λ refit trades a λ·‖α‖² bias for stability, so the
+            unregularized error can tick up by a few percent of ‖W‖
+            (hypothesis measured ≈2% worst-case); we bound the slack at
+            5%·‖W‖."""
+            hypothesis.assume(np.linalg.norm(w) > 1e-3)
+            _, errors = quantize_with_history(jnp.asarray(w),
+                                              PTQTPConfig(t_max=10))
+            e = np.asarray(errors)
+            tol = 5e-2 * (np.linalg.norm(w) + 1e-6)
+            assert np.all(e[1:] <= e[:-1] + tol)

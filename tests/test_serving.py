@@ -10,7 +10,7 @@ from repro.core.ptqtp import PTQTPConfig
 from repro.core.quantize_model import quantize_tree
 from repro.models import forward, init_params
 from repro.serving.engine import EngineConfig, Request, ServingEngine
-from repro.serving.sampling import sample_token
+from repro.serving.sampling import sample_token, sample_tokens
 
 
 @pytest.fixture(scope="module")
@@ -31,6 +31,22 @@ class TestSampling:
         toks = sample_token(logits, jax.random.PRNGKey(1),
                             temperature=1.0, top_k=2)
         assert set(np.asarray(toks).tolist()) <= {1, 2}
+
+    def test_per_row_temperatures(self):
+        """Row 0 (temp 0) must be the argmax even when other rows sample."""
+        logits = jnp.asarray([[0.1, 5.0, -2.0],
+                              [1.0, 1.1, 0.9],
+                              [3.0, 0.0, 1.0]])
+        temps = jnp.asarray([0.0, 2.0, 0.0])
+        toks = np.asarray(sample_tokens(logits, jax.random.PRNGKey(2), temps))
+        assert toks[0] == 1 and toks[2] == 0
+
+    def test_vectorized_matches_scalar_greedy(self):
+        logits = jnp.asarray(np.random.default_rng(3)
+                             .standard_normal((8, 17), dtype=np.float32))
+        a = sample_token(logits, jax.random.PRNGKey(0), temperature=0.0)
+        b = sample_tokens(logits, jax.random.PRNGKey(0), jnp.zeros((8,)))
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
 
 
 class TestEngine:
@@ -86,6 +102,57 @@ class TestEngine:
         done = eng.run()
         assert len(done) == 3
         assert all(len(r.output) == 3 for r in done)
+
+    def test_fused_chunk_matches_per_step(self, small_model):
+        """K-token fused decode must be bit-identical to per-token decode
+        at temperature 0 (same requests, chunk=8 vs chunk=1)."""
+        cfg, params = small_model
+        reqs = [([5, 9, 17, 2], 6), ([1, 2, 3], 5), ([7], 4)]
+        outs = {}
+        for chunk in (1, 8):
+            eng = ServingEngine(params, cfg,
+                                EngineConfig(max_slots=2, capacity=32,
+                                             decode_chunk=chunk))
+            for i, (prompt, mnt) in enumerate(reqs):
+                eng.submit(Request(uid=i, prompt=prompt, max_new_tokens=mnt))
+            outs[chunk] = {r.uid: r.output for r in eng.run()}
+        assert outs[1] == outs[8]
+
+    def test_fused_chunk_respects_eos(self, small_model):
+        """EOS inside a chunk must truncate the output mid-chunk."""
+        cfg, params = small_model
+        # find the 2nd greedy continuation token, use it as EOS
+        eng = ServingEngine(params, cfg, EngineConfig(max_slots=1,
+                                                      capacity=32))
+        eng.submit(Request(uid=0, prompt=[5, 9, 17, 2], max_new_tokens=8))
+        free_run = eng.run()[0].output
+        eos = free_run[2]
+        eng2 = ServingEngine(params, cfg,
+                             EngineConfig(max_slots=1, capacity=32,
+                                          eos_id=eos, decode_chunk=8))
+        eng2.submit(Request(uid=0, prompt=[5, 9, 17, 2], max_new_tokens=8))
+        out = eng2.run()[0].output
+        # stops at (and includes) the *first* occurrence of the EOS token
+        first = free_run.index(eos)
+        assert out == free_run[:first + 1]
+
+    def test_per_slot_temperature_isolation(self, small_model):
+        """A greedy slot must stay greedy while a co-batched slot samples at
+        high temperature (regression: engine used max over slot temps)."""
+        cfg, params = small_model
+        solo = ServingEngine(params, cfg, EngineConfig(max_slots=1,
+                                                       capacity=32))
+        solo.submit(Request(uid=0, prompt=[7, 8, 9], max_new_tokens=5))
+        ref = solo.run()[0].output
+
+        mixed = ServingEngine(params, cfg, EngineConfig(max_slots=2,
+                                                        capacity=32))
+        mixed.submit(Request(uid=0, prompt=[7, 8, 9], max_new_tokens=5,
+                             temperature=0.0))
+        mixed.submit(Request(uid=1, prompt=[1, 2], max_new_tokens=5,
+                             temperature=8.0))
+        outs = {r.uid: r.output for r in mixed.run()}
+        assert outs[0] == ref
 
     def test_slot_isolation(self, small_model):
         """A request's outputs must not depend on its co-batched neighbors."""
