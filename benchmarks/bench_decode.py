@@ -42,18 +42,19 @@ from repro.core.ptqtp import PTQTPConfig, ptqtp_quantize
 from repro.core.quantize_model import quantize_tree
 from repro.kernels.ternary_matmul.ops import ternary_matmul
 from repro.models import decode_step, init_params
-from repro.serving.engine import (EngineConfig, Request, ServingEngine,
-                                  _merge_slot_impl)
+from repro.serving.engine import (EngineConfig, Request, SerialAdmitEngine,
+                                  ServingEngine, _merge_slot_impl)
 from repro.serving.sampling import sample_token
 
 ROOT = Path(__file__).resolve().parents[1]
 
 
-class SeedPerStepEngine(ServingEngine):
-    """The seed engine, kept verbatim as the benchmark baseline: one jitted
-    decode_step per token, sampling on host with a single engine-wide
-    temperature (max over slots), one host round-trip per token, eager
-    leaf-by-leaf slot merge, packed planes re-unpacked at every dispatch."""
+class SeedPerStepEngine(SerialAdmitEngine):
+    """The seed engine, kept verbatim as the benchmark baseline: serial
+    per-length prefill + merge admission, one jitted decode_step per token,
+    sampling on host with a single engine-wide temperature (max over slots),
+    one host round-trip per token, eager leaf-by-leaf slot merge, packed
+    planes re-unpacked at every dispatch."""
 
     def __init__(self, params, model_cfg, engine_cfg):
         super().__init__(params, model_cfg, engine_cfg)

@@ -1,0 +1,189 @@
+"""Prefill/admission benchmark: TTFT + mixed throughput on a bursty trace.
+
+Compares the two admission schedulers end to end on the same arrival traces
+(fp32 and PTQTP params), checking outputs stay bit-identical at temp 0:
+
+  * **serial** — the seeded PR-1 path (`SerialAdmitEngine`): each arriving
+    request is prefilled alone through a jit cached per *exact* prompt
+    length, then merged into its slot; the decode fleet stalls while a
+    burst's prompts are consumed one by one.
+  * **bucketed** — the chunked scheduler (`ServingEngine`): every step all
+    free slots admit at once, all mid-prompt rows advance one power-of-two
+    prefill chunk in a single fixed-shape dispatch, and long prompts
+    interleave with (shortened) decode chunks instead of blocking them.
+    Prefill compiles are O(log prefill_chunk), recorded via
+    `compile_stats()`.
+
+Both engines get the same `warmup()` before measurement. The headline trace
+is **bursty with novel prompt lengths** (every wave's lengths are lengths
+neither engine has served before — the realistic regime, since production
+prompt lengths are effectively arbitrary): the serial engine's per-length
+jit cache forces an XLA compile on the admission path, which is precisely
+the TTFT pathology length-bucketing removes. A **steady** pass (identical
+trace replayed, so even the serial engine's cache is hot) is also reported:
+at smoke-model scale, where a whole prefill costs less than one dispatch,
+serial admission stays competitive there — the honest baseline; the
+bucketed win in steady state is the O(log) compile bound plus batched
+admission, not raw dispatch latency.
+
+TTFT = submit() → first generated token, per request; mixed tok/s counts
+every generated token over the wall clock of the whole trace.
+
+``PYTHONPATH=src python benchmarks/bench_prefill.py [--quick]``
+
+Writes benchmarks/results/BENCH_prefill.json and mirrors it to
+BENCH_prefill.json at the repo root (the trajectory point ROADMAP.md quotes).
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+import time
+from pathlib import Path
+
+import jax
+import numpy as np
+
+sys.path.insert(0, str(Path(__file__).resolve().parents[1]))  # script mode
+
+from benchmarks.common import save_result
+from repro import configs
+from repro.core.ptqtp import PTQTPConfig
+from repro.core.quantize_model import quantize_tree
+from repro.models import init_params
+from repro.serving.engine import (EngineConfig, Request, SerialAdmitEngine,
+                                  ServingEngine)
+
+ROOT = Path(__file__).resolve().parents[1]
+
+
+def _trace(quick: bool, shift: int):
+    """Bursty arrival trace: [(engine_step, prompt), ...].
+
+    Waves land while the previous wave is still decoding; each wave mixes
+    short prompts with one long prompt (longer than prefill_chunk, so the
+    bucketed engine must chunk it across steps). `shift` offsets every
+    length so each rep presents prompt lengths no engine has seen before
+    (the bands are spaced so shifted reps never collide).
+    """
+    rng = np.random.default_rng(shift)
+    mk = lambda n: rng.integers(1, 500, size=n).tolist()
+    if quick:
+        waves = [(0, [3, 5, 4]), (2, [40, 6, 7]), (4, [30, 9])]
+    else:
+        waves = [(0, [3, 5, 4, 11]), (3, [90, 6, 7, 9]),
+                 (6, [48, 10, 12]), (9, [8, 70, 13, 14])]
+    return [(step, mk(n + shift)) for step, lens in waves for n in lens]
+
+
+def _drive(eng, trace, max_new):
+    """Submit per the trace's step schedule, step until drained."""
+    arrivals = list(trace)
+    done, it, uid = [], 0, 0
+    t0 = time.perf_counter()
+    while arrivals or eng.queue or any(s is not None for s in eng.slots):
+        while arrivals and arrivals[0][0] <= it:
+            _, prompt = arrivals.pop(0)
+            eng.submit(Request(uid=uid, prompt=prompt, max_new_tokens=max_new))
+            uid += 1
+        done.extend(eng.step())
+        it += 1
+    wall = time.perf_counter() - t0
+    n_tok = sum(len(r.output) for r in done)
+    ttft = [r.t_first - r.t_submit for r in done]
+    outs = {r.uid: tuple(r.output) for r in done}
+    return {"tokps": n_tok / wall, "ttft_mean_ms": 1e3 * float(np.mean(ttft)),
+            "ttft_p90_ms": 1e3 * float(np.quantile(ttft, 0.9)),
+            "outputs": outs}
+
+
+def _bench(rows, log, quick):
+    cfg = configs.get_smoke_config("qwen2-1.5b")
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    qparams, _ = quantize_tree(params, PTQTPConfig(group_size=32, t_max=5))
+
+    max_new = 12 if quick else 24
+    reps = 2 if quick else 3
+    ecfg = EngineConfig(max_slots=4, capacity=128, decode_chunk=8,
+                        prefill_chunk=16, seed=0)
+    variants = (("serial", SerialAdmitEngine), ("bucketed", ServingEngine))
+
+    for tag, p in (("fp32", params), ("ptqtp", qparams)):
+        engines = {name: cls(p, cfg, ecfg) for name, cls in variants}
+        for eng in engines.values():
+            eng.warmup()
+        # --- bursty, novel lengths (headline): serial compiles on admission
+        cold = {name: [] for name, _ in variants}
+        identical = True
+        for rep in range(reps):
+            trace = _trace(quick, shift=17 * rep)
+            rep_out = {}
+            for name, _ in variants:
+                r = _drive(engines[name], trace, max_new)
+                cold[name].append(r)
+                rep_out[name] = r.pop("outputs")
+            identical &= rep_out["serial"] == rep_out["bucketed"]
+        for name, _ in variants:
+            rows[f"{tag}_ttft_mean_ms_{name}"] = float(
+                np.mean([r["ttft_mean_ms"] for r in cold[name]]))
+            rows[f"{tag}_ttft_p90_ms_{name}"] = float(
+                np.mean([r["ttft_p90_ms"] for r in cold[name]]))
+            rows[f"{tag}_mixed_tokps_{name}"] = float(
+                np.mean([r["tokps"] for r in cold[name]]))
+            log(f"bench_prefill,{tag}_ttft_mean_ms_{name},"
+                f"{rows[f'{tag}_ttft_mean_ms_{name}']:.2f}")
+        rows[f"{tag}_ttft_speedup"] = (rows[f"{tag}_ttft_mean_ms_serial"]
+                                       / rows[f"{tag}_ttft_mean_ms_bucketed"])
+        rows[f"{tag}_mixed_tokps_speedup"] = (
+            rows[f"{tag}_mixed_tokps_bucketed"]
+            / rows[f"{tag}_mixed_tokps_serial"])
+        rows[f"{tag}_outputs_identical"] = identical
+        log(f"bench_prefill,{tag}_ttft_speedup,"
+            f"{rows[f'{tag}_ttft_speedup']:.2f}")
+        # --- steady state: replay a now-hot trace (serial cache warmed too)
+        steady_trace = _trace(quick, shift=0)
+        for name, _ in variants:
+            _drive(engines[name], steady_trace, max_new)  # heat
+            r = _drive(engines[name], steady_trace, max_new)
+            rows[f"{tag}_steady_ttft_mean_ms_{name}"] = r["ttft_mean_ms"]
+            rows[f"{tag}_steady_tokps_{name}"] = r["tokps"]
+        rows[f"{tag}_steady_ttft_ratio"] = (
+            rows[f"{tag}_steady_ttft_mean_ms_serial"]
+            / rows[f"{tag}_steady_ttft_mean_ms_bucketed"])
+        # --- compile accounting
+        for name, _ in variants:
+            stats = engines[name].compile_stats()
+            rows[f"{tag}_prefill_compiles_{name}"] = stats["n_prefill_compiles"]
+            log(f"bench_prefill,{tag}_prefill_compiles_{name},"
+                f"{stats['n_prefill_compiles']}")
+        rows[f"{tag}_prefill_bucket_bound"] = (
+            engines["bucketed"].compile_stats()["prefill_bucket_bound"])
+    rows["n_requests_per_trace"] = len(_trace(quick, 0))
+    rows["reps"] = reps
+    rows["max_new_tokens"] = max_new
+    rows["prefill_chunk"] = ecfg.prefill_chunk
+    rows["capacity"] = ecfg.capacity
+
+
+def run(log=print, quick=False):
+    rows = {}
+    _bench(rows, log, quick)
+    # headline = the deployment config (PTQTP serving is the repo's story)
+    rows["headline_ttft_speedup"] = rows["ptqtp_ttft_speedup"]
+    rows["headline_mixed_tokps_speedup"] = rows["ptqtp_mixed_tokps_speedup"]
+    log(f"bench_prefill,headline_ttft_speedup,"
+        f"{rows['headline_ttft_speedup']:.2f}")
+    save_result("BENCH_prefill", rows)
+    (ROOT / "BENCH_prefill.json").write_text(
+        json.dumps(rows, indent=1, default=float))
+    return rows
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--quick", action="store_true",
+                    help="CI smoke sizes (seconds, not minutes)")
+    args = ap.parse_args()
+    run(quick=args.quick)

@@ -4,7 +4,9 @@
 
 Pipeline: init (or load) weights → PTQTP-quantize every linear (the paper's
 single-pass, calibration-free recipe) → continuous-batching engine drives
-prefill + decode with the multiplication-free ternary representation.
+bucketed/chunked prefill + fused decode with the multiplication-free ternary
+representation. ``--scheduler serial`` selects the PR-1 serial-admit
+baseline (one jit per prompt length) for A/B comparison.
 """
 
 from __future__ import annotations
@@ -19,7 +21,8 @@ from repro.core.ptqtp import PTQTPConfig
 from repro.core.quantize_model import quantize_tree
 from repro.data.tokenizer import ByteTokenizer
 from repro.models import init_params
-from repro.serving.engine import EngineConfig, Request, ServingEngine
+from repro.serving.engine import (EngineConfig, Request, SerialAdmitEngine,
+                                  ServingEngine)
 
 PROMPTS = [
     "the model computes two trit planes",
@@ -36,6 +39,14 @@ def main(argv=None):
     ap.add_argument("--max-new", type=int, default=16)
     ap.add_argument("--slots", type=int, default=4)
     ap.add_argument("--capacity", type=int, default=128)
+    ap.add_argument("--prefill-chunk", type=int, default=32,
+                    help="prompt tokens consumed per slot per engine step")
+    ap.add_argument("--scheduler", choices=("bucketed", "serial"),
+                    default="bucketed",
+                    help="bucketed/chunked admission (default) or the "
+                         "serial per-length-jit baseline")
+    ap.add_argument("--warmup", action="store_true",
+                    help="precompile every dispatch bucket before serving")
     ap.add_argument("--no-quantize", action="store_true",
                     help="serve FP weights (baseline)")
     ap.add_argument("--t-max", type=int, default=20)
@@ -59,8 +70,15 @@ def main(argv=None):
               f"{time.time() - t0:.1f}s")
 
     tok = ByteTokenizer()
-    engine = ServingEngine(params, cfg, EngineConfig(
-        max_slots=args.slots, capacity=args.capacity, seed=args.seed))
+    cls = ServingEngine if args.scheduler == "bucketed" else SerialAdmitEngine
+    engine = cls(params, cfg, EngineConfig(
+        max_slots=args.slots, capacity=args.capacity, seed=args.seed,
+        prefill_chunk=args.prefill_chunk))
+    if args.warmup:
+        t0 = time.time()
+        engine.warmup()
+        print(f"[serve] warmup: {engine.compile_stats()['n_prefill_compiles']}"
+              f" prefill programs in {time.time() - t0:.1f}s")
     for i in range(args.requests):
         prompt = PROMPTS[i % len(PROMPTS)]
         engine.submit(Request(uid=i, prompt=tok.encode(prompt, eos=False),
@@ -69,8 +87,15 @@ def main(argv=None):
     done = engine.run()
     dt = time.time() - t0
     n_tok = sum(len(r.output) for r in done)
+    ttft = sorted(1e3 * (r.t_first - r.t_submit) for r in done)
+    stats = engine.compile_stats()
     print(f"[serve] {len(done)} requests, {n_tok} tokens in {dt:.2f}s "
-          f"({n_tok / max(dt, 1e-9):.1f} tok/s, {engine.steps} engine steps)")
+          f"({n_tok / max(dt, 1e-9):.1f} tok/s, {engine.steps} decode steps, "
+          f"{engine.prefill_steps} prefill steps)")
+    print(f"[serve] ttft ms: median {ttft[len(ttft) // 2]:.1f} "
+          f"max {ttft[-1]:.1f}; compiles: {stats['n_prefill_compiles']} "
+          f"prefill {sorted(stats['prefill_bucket_lengths'])} "
+          f"+ {stats['n_decode_compiles']} decode {stats['decode_chunk_lengths']}")
     for r in sorted(done, key=lambda r: r.uid)[:4]:
         print(f"  [{r.uid}] -> {tok.decode(r.output)!r}")
     return done

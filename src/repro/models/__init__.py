@@ -7,10 +7,11 @@ from repro.models.transformer import (
     init_params,
     loss_fn,
     prefill,
+    prefill_chunk,
 )
 from repro.models.common import use_matmul_backend
 
 __all__ = [
-    "init_params", "forward", "loss_fn", "prefill", "decode_step",
-    "init_decode_state", "use_matmul_backend",
+    "init_params", "forward", "loss_fn", "prefill", "prefill_chunk",
+    "decode_step", "init_decode_state", "use_matmul_backend",
 ]

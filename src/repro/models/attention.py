@@ -207,11 +207,99 @@ def cache_prefill(cfg, cache: Dict[str, Any], k, v, positions) -> Dict[str, Any]
 
 
 def _scatter_slots(buf, slots, vals):
-    """buf: (B, cap, ...), slots: (B, S), vals: (B, S, ...)."""
+    """buf: (B, cap, ...), slots: (B, S), vals: (B, S, ...).
+
+    Slot index == cap (one past the ring) means "drop this entry" — used by
+    the chunked-prefill path to skip right-padding and stale wrap-around
+    writes without a select over the whole cache.
+    """
     def per_batch(bf, sl, vl):
-        return bf.at[sl].set(vl)
+        return bf.at[sl].set(vl, mode="drop")
 
     return jax.vmap(per_batch)(buf, slots, vals)
+
+
+def attention_prefill_chunk(
+    params: Dict[str, Any],
+    cfg,
+    cache: Dict[str, Any],
+    x: jax.Array,
+    positions: jax.Array,
+    lengths: jax.Array,
+    *,
+    window: Optional[int] = None,
+) -> Tuple[jax.Array, Dict[str, Any]]:
+    """Padded-batch chunk prefill: attend to (ring cache ∪ chunk), then write.
+
+    Args:
+      x: (B, L, D) right-padded chunk; positions: (B, L) absolute positions
+      (row r valid through positions[r, lengths[r]-1]); lengths: (B,) valid
+      token counts — 0 makes the row a complete no-op (its cache survives
+      untouched, so decoding/free rows can ride along in a fixed-shape
+      dispatch).
+
+    The chunk queries score against the *pre-write* ring (history from
+    earlier chunks — for sliding-window layers the ring holds exactly the
+    last `cap` positions, which covers every in-chunk query's window) and
+    against the in-chunk keys, in one softmax. Afterwards the chunk k/v are
+    scattered into the ring; padding and entries a row's own chunk tail
+    would immediately overwrite (length > cap) are dropped. L is the
+    engine's prefill-chunk bucket, so the (L, cap+L) score block stays small
+    by construction.
+    """
+    b, L, _ = x.shape
+    hd = cfg.head_dim
+    kv, g = cfg.n_kv_heads, cfg.n_heads // cfg.n_kv_heads
+    cap = cache["k"].shape[1]
+    scale = hd ** -0.5
+
+    q, k, v = _qkv(params, cfg, x, positions)
+    qh = q.reshape(b, L, kv, g, hd)
+
+    valid = jnp.arange(L)[None, :] < lengths[:, None]        # (B, L)
+    qpos = positions[:, :, None]                             # (B, L, 1)
+    w_eff = window if window else cap + L + 1
+
+    # history: the ring before this chunk is written
+    pc = cache["pos"]                                        # (B, cap)
+    if "k_scale" in cache:
+        kc = _deq8(cache["k"], cache["k_scale"], x.dtype)
+        vc = _deq8(cache["v"], cache["v_scale"], x.dtype)
+    else:
+        kc, vc = cache["k"], cache["v"]
+    s_hist = _gqa_scores(qh, kc) * scale                     # (B,KV,G,L,cap)
+    m_hist = (pc[:, None, :] >= 0) & (pc[:, None, :] <= qpos) & (
+        qpos - pc[:, None, :] < w_eff)                       # (B, L, cap)
+    s_hist = jnp.where(m_hist[:, None, None], s_hist, NEG_INF)
+
+    # in-chunk: fresh keys, causal + window + padding mask
+    kpos = positions[:, None, :]                             # (B, 1, L)
+    s_self = _gqa_scores(qh, k) * scale                      # (B,KV,G,L,L)
+    m_self = valid[:, None, :] & (kpos <= qpos) & (qpos - kpos < w_eff)
+    s_self = jnp.where(m_self[:, None, None], s_self, NEG_INF)
+
+    p = jax.nn.softmax(jnp.concatenate([s_hist, s_self], axis=-1), axis=-1)
+    y = _gqa_out(p, jnp.concatenate([vc.astype(v.dtype), v], axis=1))
+    y = y.reshape(b, L, cfg.n_heads * hd).astype(x.dtype)
+    y = dense(params["wo"], y)
+
+    # write the chunk into the ring (drop padding + beyond-ring tail)
+    row_end = positions[:, :1] + lengths[:, None]            # (B, 1)
+    keep = valid & (positions >= row_end - cap)
+    slots = jnp.where(keep, positions % cap, cap).astype(jnp.int32)
+    out = {"pos": _scatter_slots(cache["pos"], slots,
+                                 positions.astype(jnp.int32))}
+    if "k_scale" in cache:
+        kq, ks = _q8(k)
+        vq, vs = _q8(v)
+        out["k"] = _scatter_slots(cache["k"], slots, kq)
+        out["v"] = _scatter_slots(cache["v"], slots, vq)
+        out["k_scale"] = _scatter_slots(cache["k_scale"], slots, ks)
+        out["v_scale"] = _scatter_slots(cache["v_scale"], slots, vs)
+    else:
+        out["k"] = _scatter_slots(cache["k"], slots, k.astype(cache["k"].dtype))
+        out["v"] = _scatter_slots(cache["v"], slots, v.astype(cache["v"].dtype))
+    return y, out
 
 
 def attention_decode(
@@ -222,8 +310,14 @@ def attention_decode(
     pos: jax.Array,
     *,
     window: Optional[int] = None,
+    active: Optional[jax.Array] = None,
 ) -> Tuple[jax.Array, Dict[str, Any]]:
-    """One-token decode. x_t: (B, D); pos: (B,) absolute position of x_t."""
+    """One-token decode. x_t: (B, D); pos: (B,) absolute position of x_t.
+
+    active (B,) bool: rows with active=False leave the ring untouched (their
+    write is dropped) — required when decode shares the batch state with
+    rows that are still mid-prefill (their caches must not be corrupted).
+    """
     b, _ = x_t.shape
     hd = cfg.head_dim
     kv, g = cfg.n_kv_heads, cfg.n_heads // cfg.n_kv_heads
@@ -237,7 +331,9 @@ def attention_decode(
     k_t = apply_rope(k_t, pos, cfg.rope_theta)
 
     slot = (pos % cap).astype(jnp.int32)  # (B,)
-    upd = lambda bf, s_, v_: bf.at[s_].set(v_)
+    if active is not None:
+        slot = jnp.where(active, slot, cap)  # cap = out of ring → dropped
+    upd = lambda bf, s_, v_: bf.at[s_].set(v_, mode="drop")
     pc = jax.vmap(upd)(cache["pos"], slot, pos.astype(jnp.int32))
     new_cache = {"pos": pc}
     if "k_scale" in cache:  # int8 cache: quantize the new token, dequant read

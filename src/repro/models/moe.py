@@ -77,8 +77,15 @@ def _expert_ffn(experts: Dict[str, Any], xe: jax.Array) -> jax.Array:
 
 
 def moe_forward(params: Dict[str, Any], x: jax.Array, moe: MoEConfig,
-                mlp_type: str = "swiglu") -> jax.Array:
-    """x: (B, S, D) -> (B, S, D)."""
+                mlp_type: str = "swiglu", valid: Optional[jax.Array] = None
+                ) -> jax.Array:
+    """x: (B, S, D) -> (B, S, D).
+
+    valid (B, S) bool: padding tokens of a bucketed/chunked prefill batch.
+    Invalid tokens are routed to the overflow slot so they can never
+    displace a real token from expert capacity (their output rows are
+    garbage either way, but cross-row contamination would not be).
+    """
     b, s, d = x.shape
     t = b * s
     e, k = moe.n_experts, moe.top_k
@@ -93,18 +100,22 @@ def moe_forward(params: Dict[str, Any], x: jax.Array, moe: MoEConfig,
     flat_e = top_e.reshape(-1)                      # (T*k,)
     flat_p = top_p.reshape(-1)
     flat_tok = jnp.repeat(jnp.arange(t), k)
+    if valid is not None:
+        # expert id `e` = overflow: sorts after every real expert, so ranks
+        # of valid assignments are exactly what they'd be without padding
+        flat_e = jnp.where(jnp.repeat(valid.reshape(t), k), flat_e, e)
     order = jnp.argsort(flat_e, stable=True)
     se, sp, stok = flat_e[order], flat_p[order], flat_tok[order]
 
-    counts = jnp.bincount(se, length=e)             # (E,)
+    counts = jnp.bincount(se, length=e)             # (E,) — id e dropped
     starts = jnp.cumsum(counts) - counts            # exclusive prefix
-    rank = jnp.arange(t * k) - starts[se]           # rank within expert
+    rank = jnp.arange(t * k) - starts[jnp.minimum(se, e - 1)]
 
     if moe.capacity_factor <= 0:
         cap = t * k  # exact no-drop mode (tests / tiny decode batches)
     else:
         cap = int(max(1, round(t * k / e * moe.capacity_factor)))
-    keep = rank < cap
+    keep = (rank < cap) & (se < e)
     dst = jnp.where(keep, se * cap + jnp.clip(rank, 0, cap - 1), e * cap)
 
     # scatter tokens into (E*C (+1 overflow), D)

@@ -58,30 +58,44 @@ def _block_diag(gate, x, n_blocks: int):
 
 
 def _conv1d(p, x, conv_state=None):
-    """Causal depthwise conv. x: (B, S, R); conv_state: (B, W-1, R)."""
+    """Causal depthwise conv. x: (B, S, R); conv_state: (B, W-1, R).
+
+    Returns (y, xp) where xp is the full padded input (B, W-1+S, R) — the
+    caller extracts the next conv state (per-row for masked chunks).
+    """
     w = p["w"].astype(x.dtype)  # (W, R)
     width = w.shape[0]
     if conv_state is None:
         conv_state = jnp.zeros((x.shape[0], width - 1, x.shape[-1]), x.dtype)
     xp = jnp.concatenate([conv_state, x], axis=1)
     y = sum(xp[:, i:i + x.shape[1]] * w[i] for i in range(width))
-    return y + p["b"].astype(x.dtype), xp[:, -(width - 1):]
+    return y + p["b"].astype(x.dtype), xp
 
 
-def _lru_scan(a, gx, h0):
-    """h_t = a_t ⊙ h_{t−1} + gx_t ; all (B, S, R) f32; h0 (B, R)."""
+def _lru_scan(a, gx, h0, mask=None):
+    """h_t = a_t ⊙ h_{t−1} + gx_t ; all (B, S, R) f32; h0 (B, R).
+
+    mask (B, S): masked-out steps carry h_{t−1} through unchanged.
+    """
     def step(h, inp):
-        at, gt = inp
-        h = at * h + gt
+        at, gt, mt = inp
+        h = jnp.where(mt[:, None], at * h + gt, h)
         return h, h
 
-    xs = (jnp.moveaxis(a, 1, 0), jnp.moveaxis(gx, 1, 0))
+    mk = mask if mask is not None else jnp.ones(a.shape[:2], bool)
+    xs = (jnp.moveaxis(a, 1, 0), jnp.moveaxis(gx, 1, 0),
+          jnp.moveaxis(mk, 1, 0))
     h_last, hs = jax.lax.scan(step, h0, xs)
     return jnp.moveaxis(hs, 0, 1), h_last
 
 
-def rglru_forward(p, x, n_blocks: int, state: Tuple | None = None):
-    """x: (B, S, D) -> (y, (h_last, conv_state))."""
+def rglru_forward(p, x, n_blocks: int, state: Tuple | None = None, mask=None):
+    """x: (B, S, D) -> (y, (h_last, conv_state)).
+
+    mask (B, S) marks the valid timesteps of a right-padded chunk: the LRU
+    state freezes on padded steps and the conv tail is gathered at each
+    row's valid length (chunked/bucketed prefill support).
+    """
     b, s, d = x.shape
     conv_state = state[1] if state is not None else None
     h0 = (state[0] if state is not None
@@ -89,7 +103,16 @@ def rglru_forward(p, x, n_blocks: int, state: Tuple | None = None):
 
     xb = dense(p["wx"], x)
     gb = jax.nn.gelu(dense(p["wgate"], x))
-    c, conv_state = _conv1d(p["conv"], xb, conv_state)
+    c, xp = _conv1d(p["conv"], xb, conv_state)
+    width = p["conv"]["w"].shape[0]
+    if mask is None:
+        conv_state = xp[:, -(width - 1):]
+    else:
+        # per-row tail: the W-1 inputs ending at each row's valid length
+        # (lengths == 0 reduces to xp[:, :W-1] — the untouched prior state)
+        lengths = jnp.sum(mask.astype(jnp.int32), axis=1)
+        idx = lengths[:, None] + jnp.arange(width - 1)[None, :]
+        conv_state = jnp.take_along_axis(xp, idx[..., None], axis=1)
 
     rt = jax.nn.sigmoid(_block_diag(p["gate_a"], c, n_blocks)).astype(jnp.float32)
     it = jax.nn.sigmoid(_block_diag(p["gate_x"], c, n_blocks)).astype(jnp.float32)
@@ -97,7 +120,7 @@ def rglru_forward(p, x, n_blocks: int, state: Tuple | None = None):
     a = jnp.exp(log_a)
     gated_x = jnp.sqrt(jnp.maximum(1.0 - jnp.exp(2.0 * log_a), 1e-12)) * (
         it * c.astype(jnp.float32))
-    h, h_last = _lru_scan(a, gated_x, h0)
+    h, h_last = _lru_scan(a, gated_x, h0, mask)
     y = dense(p["wo"], (gb.astype(jnp.float32) * h).astype(x.dtype))
     return y, (h_last, conv_state)
 

@@ -89,8 +89,26 @@ def _group_norm(scale, x, h):
     return (xg.reshape(*b, d) * scale.astype(jnp.float32)).astype(x.dtype)
 
 
-def rwkv_time_forward(p, x, head_dim: int, state=None):
-    """x: (B, S, D). Returns (y, (x_last, S_last)) for cache handoff."""
+def _masked_last(x, state_prev, mask):
+    """Per-row last *valid* timestep of x (B, S, ...); rows with no valid
+    step keep their prior state (chunked prefill: a length-0 row is a no-op).
+    """
+    lengths = jnp.sum(mask.astype(jnp.int32), axis=1)
+    idx = jnp.maximum(lengths - 1, 0)
+    last = jnp.take_along_axis(
+        x, idx.reshape((-1,) + (1,) * (x.ndim - 1)), axis=1)[:, 0]
+    prev = state_prev if state_prev is not None else jnp.zeros_like(last)
+    live = (lengths > 0).reshape((-1,) + (1,) * (last.ndim - 1))
+    return jnp.where(live, last, prev)
+
+
+def rwkv_time_forward(p, x, head_dim: int, state=None, mask=None):
+    """x: (B, S, D). Returns (y, (x_last, S_last)) for cache handoff.
+
+    mask (B, S) bool selects the valid timesteps of a right-padded chunk:
+    masked-out steps leave the WKV state untouched and the handoff state is
+    taken at each row's last valid step (chunked/bucketed prefill).
+    """
     bsz, s, d = x.shape
     h = d // head_dim
     x_prev = jnp.concatenate(
@@ -109,22 +127,30 @@ def rwkv_time_forward(p, x, head_dim: int, state=None):
 
     def step(carry, inp):
         st = carry  # (B, H, hd, hd)
-        rt, kt, vt, wt = inp  # (B, H, hd) each
+        rt, kt, vt, wt, mt = inp  # (B, H, hd) each; mt (B,)
         kv = jnp.einsum("bhi,bhj->bhij", kt, vt)
         yt = jnp.einsum("bhi,bhij->bhj", rt, st + u[None, :, :, None] * kv)
-        st = wt[..., None] * st + kv
+        st_new = wt[..., None] * st + kv
+        st = jnp.where(mt[:, None, None, None], st_new, st)
         return st, yt
 
+    mk = (mask if mask is not None
+          else jnp.ones((bsz, s), bool))
     xs = (
         jnp.moveaxis(r, 1, 0).astype(jnp.float32),
         jnp.moveaxis(k, 1, 0).astype(jnp.float32),
         jnp.moveaxis(v, 1, 0).astype(jnp.float32),
         jnp.moveaxis(w, 1, 0),
+        jnp.moveaxis(mk, 1, 0),
     )
     s_last, ys = jax.lax.scan(step, s0, xs)
     y = jnp.moveaxis(ys, 0, 1).reshape(bsz, s, d).astype(x.dtype)
     y = _group_norm(p["ln_x"]["scale"], y, h) * g
-    return dense(p["wo"], y), (x[:, -1], s_last)
+    if mask is None:
+        x_last = x[:, -1]
+    else:
+        x_last = _masked_last(x, state[0] if state is not None else None, mask)
+    return dense(p["wo"], y), (x_last, s_last)
 
 
 def rwkv_time_decode(p, x_t, head_dim: int, state):
@@ -144,8 +170,8 @@ def rwkv_channel_init(key, d: int, d_ff: int, dtype) -> Dict[str, Any]:
     }
 
 
-def rwkv_channel_forward(p, x, state=None):
-    """x: (B, S, D) -> (y, x_last)."""
+def rwkv_channel_forward(p, x, state=None, mask=None):
+    """x: (B, S, D) -> (y, x_last). mask as in ``rwkv_time_forward``."""
     x_prev = jnp.concatenate(
         [state[:, None] if state is not None else jnp.zeros_like(x[:, :1]),
          x[:, :-1]], axis=1)
@@ -154,7 +180,8 @@ def rwkv_channel_forward(p, x, state=None):
     xr = x + sx * p["mu_r"].astype(x.dtype)
     k = jnp.square(jax.nn.relu(dense(p["wk"], xk)))
     y = jax.nn.sigmoid(dense(p["wr"], xr)) * dense(p["wv"], k)
-    return y, x[:, -1]
+    x_last = x[:, -1] if mask is None else _masked_last(x, state, mask)
+    return y, x_last
 
 
 def rwkv_channel_decode(p, x_t, state):

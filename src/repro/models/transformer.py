@@ -158,7 +158,16 @@ def _block_prefill(kind: str, p, cfg, x, positions, cache):
     return x + y, cache
 
 
-def _block_decode(kind: str, p, cfg, cache, x_t, pos):
+def _freeze_rows(active, new, old):
+    """Per-row select: rows with active=False keep their old cache leaves."""
+    if active is None:
+        return new
+    sel = lambda n, o: jnp.where(
+        active.reshape((-1,) + (1,) * (n.ndim - 1)), n, o)
+    return jax.tree.map(sel, new, old)
+
+
+def _block_decode(kind: str, p, cfg, cache, x_t, pos, active=None):
     if kind == "rwkv":
         h = rms_norm(p["time_norm"], x_t, cfg.norm_eps)
         y, (x_last, wkv) = rwkv_mod.rwkv_time_decode(
@@ -166,7 +175,8 @@ def _block_decode(kind: str, p, cfg, cache, x_t, pos):
         x_t = x_t + y
         h = rms_norm(p["chan_norm"], x_t, cfg.norm_eps)
         y, xc_last = rwkv_mod.rwkv_channel_decode(p["chan"], h, cache["x_chan"])
-        return x_t + y, {"x_time": x_last, "wkv": wkv, "x_chan": xc_last}
+        new = {"x_time": x_last, "wkv": wkv, "x_chan": xc_last}
+        return x_t + y, _freeze_rows(active, new, cache)
     if kind.startswith("rglru"):
         h = rms_norm(p["rec_norm"], x_t, cfg.norm_eps)
         y, (h_last, conv_state) = rglru_mod.rglru_decode(
@@ -176,10 +186,12 @@ def _block_decode(kind: str, p, cfg, cache, x_t, pos):
         y = mlp_mod.mlp_forward(p["mlp"],
                                 rms_norm(p["mlp_norm"], x_t, cfg.norm_eps),
                                 cfg.mlp_type)
-        return x_t + y, {"h": h_last, "conv": conv_state}
+        new = {"h": h_last, "conv": conv_state}
+        return x_t + y, _freeze_rows(active, new, cache)
     h = rms_norm(p["attn_norm"], x_t, cfg.norm_eps)
     y, cache = attn.attention_decode(p["attn"], cfg, cache, h, pos,
-                                     window=_mixer_window(kind, cfg))
+                                     window=_mixer_window(kind, cfg),
+                                     active=active)
     x_t = x_t + y
     h = rms_norm(p["mlp_norm"], x_t, cfg.norm_eps)
     if "moe" in p:
@@ -357,8 +369,122 @@ def prefill(params, cfg, batch, capacity: int) -> Tuple[jax.Array, Dict]:
     return constrain(logits, "decode_logits"), state
 
 
-def decode_step(params, cfg, state, tokens) -> Tuple[jax.Array, Dict]:
-    """One decode step. tokens: (B,) int32 (or (B, D) embeddings if stub)."""
+def _block_prefill_chunk(kind: str, p, cfg, x, positions, lengths, valid,
+                         cache):
+    """Chunk forward that continues from and updates an existing cache.
+
+    x: (B, L, D) right-padded; positions: (B, L) absolute per row;
+    lengths: (B,) valid counts (0 = no-op row); valid: (B, L) bool.
+    """
+    if kind == "rwkv":
+        h = rms_norm(p["time_norm"], x, cfg.norm_eps)
+        y, (x_last, wkv) = rwkv_mod.rwkv_time_forward(
+            p["time"], h, cfg.rwkv_head_dim,
+            state=(cache["x_time"], cache["wkv"]), mask=valid)
+        x = x + y
+        h = rms_norm(p["chan_norm"], x, cfg.norm_eps)
+        y, xc_last = rwkv_mod.rwkv_channel_forward(
+            p["chan"], h, state=cache["x_chan"], mask=valid)
+        return x + y, {"x_time": x_last, "wkv": wkv, "x_chan": xc_last}
+    if kind.startswith("rglru"):
+        h = rms_norm(p["rec_norm"], x, cfg.norm_eps)
+        y, (h_last, conv_state) = rglru_mod.rglru_forward(
+            p["rec"], h, cfg.rglru_blocks or cfg.n_heads,
+            state=(cache["h"], cache["conv"]), mask=valid)
+        x = x + y
+        y = mlp_mod.mlp_forward(p["mlp"],
+                                rms_norm(p["mlp_norm"], x, cfg.norm_eps),
+                                cfg.mlp_type)
+        return x + y, {"h": h_last, "conv": conv_state}
+    # attention blocks
+    h = rms_norm(p["attn_norm"], x, cfg.norm_eps)
+    y, cache = attn.attention_prefill_chunk(
+        p["attn"], cfg, cache, h, positions, lengths,
+        window=_mixer_window(kind, cfg))
+    x = x + y
+    h = rms_norm(p["mlp_norm"], x, cfg.norm_eps)
+    if "moe" in p:
+        y = moe_mod.moe_forward(p["moe"], h, cfg.moe, cfg.mlp_type,
+                                valid=valid)
+    else:
+        y = mlp_mod.mlp_forward(p["mlp"], h, cfg.mlp_type)
+    return x + y, cache
+
+
+def prefill_chunk(params, cfg, state, batch, lengths) -> Tuple[jax.Array, Dict]:
+    """Padded-batch / chunked prefill through one fixed-shape compiled fn.
+
+    batch: {"tokens": (B, L)} right-padded to the bucket length L;
+    lengths: (B,) int32 — row r consumes positions ``state['pos'][r] ..
+    state['pos'][r]+lengths[r]-1`` of its prompt (lengths[r]=0 makes the row
+    a complete no-op, so free/decoding rows ride along untouched).
+
+    One compiled function serves every (admission batch, chunk offset) at a
+    given bucket L — the serving engine's prefill compile cache becomes
+    O(log capacity) instead of one entry per distinct prompt length. A long
+    prompt is fed through repeated calls (cache write offset = state pos),
+    interleaving with decode chunks instead of blocking them.
+
+    Returns (logits at each row's last valid token (B, V), updated state).
+    Logits of rows with lengths[r] == 0 are garbage — callers ignore them.
+    """
+    x = _embed(params, cfg, batch)
+    b, L, _ = x.shape
+    pos0 = state["pos"]
+    positions = pos0[:, None] + jnp.arange(L)[None, :]
+    valid = jnp.arange(L)[None, :] < lengths[:, None]
+    new_state = {"pos": pos0 + lengths.astype(jnp.int32),
+                 "prefix": {}, "blocks": None, "suffix": {}}
+
+    for i, kind in enumerate(cfg.prefix_pattern):
+        x, new_state["prefix"][f"p{i}"] = _block_prefill_chunk(
+            kind, params["prefix"][f"p{i}"], cfg, x, positions, lengths,
+            valid, state["prefix"][f"p{i}"])
+
+    if cfg.n_periods:
+        def period_fn(x, xs):
+            period_params, cache_p = xs
+            new_caches = {}
+            for pidx, kind in enumerate(cfg.block_pattern):
+                x, new_caches[f"b{pidx}"] = _block_prefill_chunk(
+                    kind, period_params[f"b{pidx}"], cfg, x, positions,
+                    lengths, valid, cache_p[f"b{pidx}"])
+            return constrain(x, "hidden"), new_caches
+
+        if cfg.remat == "full":
+            period_fn = jax.checkpoint(period_fn)
+        if cfg.scan_layers:
+            x, new_blocks = jax.lax.scan(period_fn, x,
+                                         (params["blocks"], state["blocks"]))
+        else:
+            outs = []
+            for i in range(cfg.n_periods):
+                sl = lambda a: a[i]
+                x, nc = period_fn(x, (jax.tree.map(sl, params["blocks"]),
+                                      jax.tree.map(sl, state["blocks"])))
+                outs.append(nc)
+            new_blocks = jax.tree.map(lambda *xs: jnp.stack(xs), *outs)
+        new_state["blocks"] = new_blocks
+
+    for i, kind in enumerate(cfg.remainder_pattern):
+        x, new_state["suffix"][f"s{i}"] = _block_prefill_chunk(
+            kind, params["suffix"][f"s{i}"], cfg, x, positions, lengths,
+            valid, state["suffix"][f"s{i}"])
+
+    x = rms_norm(params["final_norm"], x, cfg.norm_eps)
+    idx = jnp.maximum(lengths - 1, 0).astype(jnp.int32)
+    x_last = jnp.take_along_axis(x, idx[:, None, None], axis=1)[:, 0]
+    logits = dense(params["lm_head"], x_last)
+    return constrain(logits, "decode_logits"), new_state
+
+
+def decode_step(params, cfg, state, tokens, active=None) -> Tuple[jax.Array, Dict]:
+    """One decode step. tokens: (B,) int32 (or (B, D) embeddings if stub).
+
+    active (B,) bool: rows with active=False are frozen — position and every
+    cache leaf pass through unchanged, so a decode dispatch can share the
+    batch state with rows that are mid-(chunked-)prefill or already free.
+    """
     adt = dtype_of(cfg.activation_dtype)
     if cfg.embed_inputs:
         x = jnp.take(params["embed"]["embedding"], tokens, axis=0)
@@ -366,12 +492,13 @@ def decode_step(params, cfg, state, tokens) -> Tuple[jax.Array, Dict]:
         x = tokens
     x = x.astype(adt)
     pos = state["pos"]
-    new_state = {"pos": pos + 1, "prefix": {}, "blocks": None, "suffix": {}}
+    new_pos = pos + (active.astype(jnp.int32) if active is not None else 1)
+    new_state = {"pos": new_pos, "prefix": {}, "blocks": None, "suffix": {}}
 
     for i, kind in enumerate(cfg.prefix_pattern):
         x, new_state["prefix"][f"p{i}"] = _block_decode(
             kind, params["prefix"][f"p{i}"], cfg, state["prefix"][f"p{i}"],
-            x, pos)
+            x, pos, active)
 
     if cfg.n_periods:
         def period_fn(x, xs):
@@ -380,7 +507,7 @@ def decode_step(params, cfg, state, tokens) -> Tuple[jax.Array, Dict]:
             for pidx, kind in enumerate(cfg.block_pattern):
                 x, new_caches[f"b{pidx}"] = _block_decode(
                     kind, period_params[f"b{pidx}"], cfg, cache_p[f"b{pidx}"],
-                    x, pos)
+                    x, pos, active)
             return x, new_caches
 
         if cfg.scan_layers:
@@ -399,7 +526,7 @@ def decode_step(params, cfg, state, tokens) -> Tuple[jax.Array, Dict]:
     for i, kind in enumerate(cfg.remainder_pattern):
         x, new_state["suffix"][f"s{i}"] = _block_decode(
             kind, params["suffix"][f"s{i}"], cfg, state["suffix"][f"s{i}"],
-            x, pos)
+            x, pos, active)
 
     x = rms_norm(params["final_norm"], x, cfg.norm_eps)
     logits = dense(params["lm_head"], x)

@@ -1,4 +1,6 @@
-from repro.serving.engine import EngineConfig, Request, ServingEngine
-from repro.serving.sampling import sample_token
+from repro.serving.engine import (EngineConfig, Request, SerialAdmitEngine,
+                                  ServingEngine)
+from repro.serving.sampling import sample_token, sample_tokens
 
-__all__ = ["ServingEngine", "EngineConfig", "Request", "sample_token"]
+__all__ = ["ServingEngine", "SerialAdmitEngine", "EngineConfig", "Request",
+           "sample_token", "sample_tokens"]

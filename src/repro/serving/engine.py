@@ -1,37 +1,44 @@
-"""Continuous-batching serving engine with a fused multi-step decode loop.
+"""Continuous-batching serving engine: bucketed batched prefill, chunked
+prefill interleaved with a fused multi-step decode loop.
 
 Slot-based continuous batching (vLLM-style, adapted to fixed-shape JAX):
 
-  * the decode batch has `max_slots` fixed slots → one jit'd decode loop
-    for the whole fleet of in-flight requests (no recompilation as requests
-    come and go);
-  * an arriving request is prefilled alone (one cached jit per prompt
-    length, bounded by `capacity`) and its state is *merged* into a free
-    slot;
-  * finished slots (EOS / max_tokens) are freed immediately and refilled from
-    the wait queue on the next step — decode never stalls on stragglers.
+  * the batch has `max_slots` fixed slots → one jit'd decode loop for the
+    whole fleet of in-flight requests (no recompilation as requests come
+    and go);
+  * **bucketed admission** — each step the wait queue drains into *all*
+    free slots at once; the newly admitted rows (plus any rows still
+    consuming their prompt) advance through one `prefill_chunk` dispatch
+    whose length is the power-of-two bucket of the longest remaining need,
+    capped at ``prefill_chunk``. One compiled function serves every
+    admission batch at a given bucket, so the prefill compile cache is
+    O(log prefill_chunk) ⊆ O(log capacity) — not one entry per distinct
+    prompt length (the PR-1 behavior, kept as `SerialAdmitEngine`);
+  * **chunked prefill** — a prompt longer than ``prefill_chunk`` is
+    consumed across successive steps, each interleaved with a decode chunk
+    for the rows that are already generating: a long prompt no longer
+    stalls the in-flight decode fleet. Rows mid-prefill ride through the
+    decode dispatch with ``active=False`` (state frozen, cache writes
+    dropped), and free/decoding rows ride through the prefill dispatch with
+    ``lengths=0`` (complete no-op) — both dispatches keep one fixed shape;
+  * finished slots (EOS / max_tokens) are freed immediately and refilled
+    from the wait queue on the next step — decode never stalls on
+    stragglers.
 
-Decode fast path (the paper's 4.63× end-to-end claim only materializes if the
-serving loop keeps the accelerator busy):
+Decode fast path (PR 1, unchanged): ``decode_chunk`` tokens per host
+round-trip via one jitted ``lax.scan`` fusing decode_step + on-device
+per-slot sampling, state donated on accelerators, per-slot temperature and
+EOS freezing on device.
 
-  * ``decode_chunk`` tokens are generated per host round-trip by a single
-    jitted ``lax.scan`` that fuses decode_step + on-device sampling — one
-    dispatch and one host sync per K tokens instead of per token;
-  * the decode state is donated to the loop (``donate_argnums``), so XLA
-    writes KV-cache updates in place instead of copying the caches each step;
-  * temperature and EOS handling are vectorized per slot *on device*: each
-    slot samples with its own temperature (greedy where 0), and a slot that
-    emits EOS is frozen for the rest of the chunk (its token repeats; the
-    host discards everything after the EOS when collecting).
-
-Works identically for dense and PTQTP-quantized params (`dense` dispatches on
-the kernel leaf type), which is the paper's deployment story.
+Works identically for dense and PTQTP-quantized params (`dense` dispatches
+on the kernel leaf type), which is the paper's deployment story.
 """
 
 from __future__ import annotations
 
 import dataclasses
 import functools
+import time
 from collections import deque
 from typing import Any, Dict, List, Optional
 
@@ -42,7 +49,8 @@ import numpy as np
 from repro.core.packing import unpack_trits
 from repro.core.quantize_model import QuantizedKernel
 from repro.kernels.ternary_matmul.ops import resolve_backend
-from repro.models import decode_step, init_decode_state, prefill
+from repro.models import (decode_step, init_decode_state, prefill,
+                          prefill_chunk)
 from repro.models.common import matmul_backend
 from repro.serving.sampling import sample_token, sample_tokens
 
@@ -56,6 +64,8 @@ class Request:
     # filled by the engine:
     output: List[int] = dataclasses.field(default_factory=list)
     done: bool = False
+    t_submit: float = 0.0        # perf_counter at submit()
+    t_first: float = 0.0         # perf_counter at first output token (TTFT)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -65,6 +75,12 @@ class EngineConfig:
     eos_id: Optional[int] = None
     seed: int = 0
     decode_chunk: int = 8        # tokens per jitted decode dispatch (K)
+    prefill_chunk: int = 64      # max prompt tokens consumed per slot per step
+    # decode chunk cap while any slot is mid-prefill: a long prompt reaches
+    # its first token in ~L/prefill_chunk short engine steps instead of
+    # waiting a full decode chunk between each of its prefill chunks
+    # (TTFT-vs-TPOT balance, the chunked-prefill token-budget idea)
+    decode_chunk_prefilling: int = 2
     # Pre-unpack trit-planes for the decode loop (None → auto: only when the
     # grouped XLA backend serves the quantized matmuls; the Pallas TPU kernel
     # unpacks in-kernel, where streaming packed planes IS the win). Trades
@@ -75,6 +91,12 @@ class EngineConfig:
     def __post_init__(self):
         assert self.max_slots >= 1 and self.capacity >= 1
         assert self.decode_chunk >= 1, "decode_chunk=0 would never emit"
+        assert self.prefill_chunk >= 1, "prefill_chunk=0 would never admit"
+        assert self.decode_chunk_prefilling >= 1
+
+
+def _pow2ceil(n: int) -> int:
+    return 1 << max(n - 1, 0).bit_length()
 
 
 def _preunpack_params(params):
@@ -101,7 +123,8 @@ def _merge_slot_impl(batch_state, one_state, slot):
     Jitted (slot is a traced scalar): one dispatch per admit instead of one
     per state leaf — the leaf-by-leaf eager version dominated admit latency.
     The batch state is donated on accelerators so the one-slot write never
-    copies the other slots' KV caches.
+    copies the other slots' KV caches. (Serial-admit path only; the bucketed
+    scheduler prefills straight into the batch state and never merges.)
     """
 
     def walk(dst, src, path):
@@ -129,6 +152,27 @@ def _merge_slot(batch_state, one_state, slot):
     return _merge_jit(batch_state, one_state, slot)
 
 
+def _reset_rows_impl(state, mask):
+    """Clear the per-row decode state for rows in `mask` (new admissions).
+
+    Ring-cache position leaves reset to -1 (nothing valid), everything else
+    (KV, recurrent states, absolute pos) to zero — one fused dispatch no
+    matter how many rows reset, so a burst of admits costs one round-trip.
+    """
+
+    def walk(node, path):
+        if isinstance(node, dict):
+            return {k: walk(v, f"{path}/{k}") for k, v in node.items()}
+        axis = 1 if "/blocks/" in path else 0  # stacked caches: (L, B, ...)
+        shape = [1] * node.ndim
+        shape[axis] = node.shape[axis]
+        reset = -1 if (path.endswith("/pos") and path != "/pos") else 0
+        return jnp.where(mask.reshape(shape),
+                         jnp.asarray(reset, node.dtype), node)
+
+    return walk(state, "")
+
+
 def _decode_loop(params, state, tokens, temps, active, key, *,
                  cfg, n_steps, eos_id):
     """K fused decode steps with on-device per-slot sampling.
@@ -136,14 +180,15 @@ def _decode_loop(params, state, tokens, temps, active, key, *,
     Args:
       tokens: (B,) int32 last token per slot.
       temps:  (B,) f32 per-slot temperature (0 → greedy for that slot).
-      active: (B,) bool — occupied slots; inactive slots repeat their token.
+      active: (B,) bool — decoding slots; inactive slots (free, mid-prefill,
+        or EOS-frozen) repeat their token and their state is left untouched.
     Returns:
       (new_state, toks) with toks (n_steps, B) — the sampled token per step.
     """
 
     def body(carry, _):
         state, tok, active, key = carry
-        logits, state = decode_step(params, cfg, state, tok)
+        logits, state = decode_step(params, cfg, state, tok, active)
         key, sub = jax.random.split(key)
         nxt = sample_tokens(logits, sub, temps)
         nxt = jnp.where(active, nxt, tok)  # frozen slots repeat (host drops)
@@ -160,6 +205,8 @@ def _decode_loop(params, state, tokens, temps, active, key, *,
 
 
 class ServingEngine:
+    """Bucketed/chunked-prefill scheduler (see module docstring)."""
+
     def __init__(self, params, model_cfg, engine_cfg: EngineConfig):
         self.params = params
         self.cfg = model_cfg
@@ -178,12 +225,21 @@ class ServingEngine:
         self._serve_params = _preunpack_params(params) if pre else params
         self._loop_cache: Dict[int, Any] = {}
         self._prefill_cache: Dict[int, Any] = {}
+        self._reset_jit = None
+        # per-slot prompt progress: clipped prompt + tokens already consumed
+        self._prompts: List[Optional[List[int]]] = [None] * engine_cfg.max_slots
+        self._cursor: List[int] = [0] * engine_cfg.max_slots
         self._admit_finished: List[Request] = []
         self._slot_arrays = None  # (temps, active) cache; None → slots dirty
-        self.steps = 0
+        self.steps = 0           # decode steps dispatched (tokens per slot)
+        self.prefill_steps = 0   # prefill_chunk dispatches
+        self.admits = 0
 
     # ------------------------------------------------------------------ API
     def submit(self, req: Request):
+        if not req.prompt:
+            raise ValueError("empty prompt")
+        req.t_submit = time.perf_counter()
         self.queue.append(req)
 
     def run(self, max_steps: int = 10_000) -> List[Request]:
@@ -195,30 +251,98 @@ class ServingEngine:
             finished.extend(self.step())
         return finished
 
+    def warmup(self):
+        """Precompile every dispatch the engine can ever need.
+
+        Feasible *because* the dispatch set is bounded: prefill buckets are
+        the powers of two up to prefill_chunk and decode chunks the powers
+        of two up to decode_chunk — a dozen programs, not one per prompt
+        length. Every warm call is a semantic no-op on the live state
+        (lengths=0 rows / active=False rows / empty reset mask), so warmup
+        can run at any point in the engine's life.
+        """
+        self._warm_prefill()
+        nb = len(self.slots)
+        chunks = {min(self.ecfg.decode_chunk, n)
+                  for n in self._bucket_lengths(self.ecfg.decode_chunk)}
+        chunks.add(min(self.ecfg.decode_chunk,
+                       self.ecfg.decode_chunk_prefilling))
+        idle = jnp.zeros((nb,), bool)
+        for n in sorted(chunks):
+            self.key, sub = jax.random.split(self.key)
+            self.state, _ = self._loop_fn(n)(
+                self._serve_params, self.state,
+                jnp.asarray(self.last_tokens),
+                jnp.zeros((nb,), jnp.float32), idle, sub)
+        self._reset_rows(np.zeros((nb,), bool))
+
+    def _warm_prefill(self):
+        nb = len(self.slots)
+        for length in self._bucket_lengths(self.ecfg.prefill_chunk):
+            _, self.state = self._prefill_fn(length)(
+                self._serve_params, self.state,
+                jnp.zeros((nb, length), jnp.int32),
+                jnp.zeros((nb,), jnp.int32))
+
+    @staticmethod
+    def _bucket_lengths(top: int) -> List[int]:
+        out = [1]
+        while out[-1] < _pow2ceil(top):
+            out.append(out[-1] * 2)
+        return out
+
+    def compile_stats(self) -> Dict[str, Any]:
+        """Jit-cache occupancy — the compile-bound story, made observable.
+
+        The bucketed scheduler's prefill entries are power-of-two chunk
+        lengths ≤ prefill_chunk, so ``n_prefill_compiles`` is bounded by
+        ``prefill_bucket_bound`` = log2(next_pow2(prefill_chunk)) + 1; the
+        decode entries are power-of-two chunk lengths ≤ decode_chunk. The
+        serial-admit baseline instead caches one prefill entry per distinct
+        prompt length (up to `capacity` of them).
+        """
+        return {
+            "prefill_bucket_lengths": sorted(self._prefill_cache),
+            "n_prefill_compiles": len(self._prefill_cache),
+            "prefill_bucket_bound":
+                _pow2ceil(self.ecfg.prefill_chunk).bit_length(),
+            "decode_chunk_lengths": sorted(self._loop_cache),
+            "n_decode_compiles": len(self._loop_cache),
+            "admits": self.admits,
+            "prefill_steps": self.prefill_steps,
+        }
+
     # ----------------------------------------------------------------- step
     def step(self) -> List[Request]:
-        """Admit waiting requests, then decode one chunk of up to K tokens.
+        """Admit into all free slots, advance prefill one chunk, decode one
+        chunk.
 
-        The chunk length adapts to the largest remaining token budget among
-        active slots, rounded up to a power of two (compile count stays
-        O(log K)) — a fleet that only needs 3 more tokens never pays for a
-        16-step dispatch.
+        The decode chunk length adapts to the largest remaining token budget
+        among decoding slots, rounded up to a power of two (compile count
+        stays O(log K)) — a fleet that only needs 3 more tokens never pays
+        for a 16-step dispatch.
         """
         self._admit()
         done_now = self._admit_finished
         self._admit_finished = []
-        if all(s is None for s in self.slots):
+        done_now = done_now + self._prefill_step()
+        dec = [i for i in range(len(self.slots)) if self._decoding(i)]
+        if not dec:
             return done_now
-        remaining = max(s.max_new_tokens - len(s.output)
-                        for s in self.slots if s is not None)
-        n_steps = min(self.ecfg.decode_chunk,
-                      1 << max(remaining - 1, 0).bit_length())
+        remaining = max(self.slots[i].max_new_tokens
+                        - len(self.slots[i].output) for i in dec)
+        chunk = self.ecfg.decode_chunk
+        if any(self._prefilling(i) for i in range(len(self.slots))):
+            chunk = min(chunk, self.ecfg.decode_chunk_prefilling)
+        n_steps = min(chunk, _pow2ceil(remaining))
         self.key, sub = jax.random.split(self.key)
         if self._slot_arrays is None:  # rebuilt only when slots changed
             self._slot_arrays = (
-                jnp.asarray([s.temperature if s else 0.0
-                             for s in self.slots], jnp.float32),
-                jnp.asarray([s is not None for s in self.slots]))
+                jnp.asarray([self.slots[i].temperature
+                             if self._decoding(i) else 0.0
+                             for i in range(len(self.slots))], jnp.float32),
+                jnp.asarray([self._decoding(i)
+                             for i in range(len(self.slots))]))
         temps, active = self._slot_arrays
         self.state, toks = self._loop_fn(n_steps)(
             self._serve_params, self.state, jnp.asarray(self.last_tokens),
@@ -227,8 +351,19 @@ class ServingEngine:
         return done_now + self._collect(np.asarray(toks))
 
     # ------------------------------------------------------------- internals
-    def _merge(self, batch_state, one_state, slot):
-        return _merge_slot(batch_state, one_state, slot)
+    def _prefilling(self, slot: int) -> bool:
+        return (self.slots[slot] is not None
+                and self._cursor[slot] < len(self._prompts[slot]))
+
+    def _decoding(self, slot: int) -> bool:
+        return (self.slots[slot] is not None
+                and self._cursor[slot] >= len(self._prompts[slot]))
+
+    def _free_slot(self, slot: int):
+        self.slots[slot] = None
+        self._prompts[slot] = None
+        self._cursor[slot] = 0
+        self._slot_arrays = None
 
     def _loop_fn(self, n_steps: int):
         if n_steps not in self._loop_cache:
@@ -243,6 +378,159 @@ class ServingEngine:
         return self._loop_cache[n_steps]
 
     def _prefill_fn(self, length: int):
+        """One jit per power-of-two chunk bucket (O(log prefill_chunk))."""
+        if length not in self._prefill_cache:
+            cfg = self.cfg
+            donate = (1,) if jax.default_backend() != "cpu" else ()
+
+            def impl(params, state, tokens, lengths):
+                return prefill_chunk(params, cfg, state, {"tokens": tokens},
+                                     lengths)
+
+            self._prefill_cache[length] = jax.jit(impl, donate_argnums=donate)
+        return self._prefill_cache[length]
+
+    def _reset_rows(self, mask: np.ndarray):
+        if self._reset_jit is None:
+            donate = (0,) if jax.default_backend() != "cpu" else ()
+            self._reset_jit = jax.jit(_reset_rows_impl, donate_argnums=donate)
+        self.state = self._reset_jit(self.state, jnp.asarray(mask))
+
+    def _admit(self):
+        """Drain the wait queue into *all* free slots in one go."""
+        fresh = []
+        for slot in range(len(self.slots)):
+            if self.slots[slot] is not None or not self.queue:
+                continue
+            req = self.queue.popleft()
+            self.slots[slot] = req
+            self._prompts[slot] = list(req.prompt[-self.ecfg.capacity:])
+            self._cursor[slot] = 0
+            fresh.append(slot)
+            self.admits += 1
+        if fresh:
+            mask = np.zeros((len(self.slots),), bool)
+            mask[fresh] = True
+            self._reset_rows(mask)
+            self._slot_arrays = None
+
+    def _prefill_step(self) -> List[Request]:
+        """Advance every mid-prompt slot by one bucketed chunk.
+
+        All prefilling rows share one fixed-(B, L) dispatch: L is the
+        power-of-two bucket of the longest remaining need this step (capped
+        at prefill_chunk); rows with shorter remainders right-pad, rows not
+        prefilling ride along with length 0 (no-op). Rows whose prompt
+        completes sample their first token here and join the decode fleet
+        in the same engine step.
+        """
+        pf = [i for i in range(len(self.slots)) if self._prefilling(i)]
+        if not pf:
+            return []
+        nb = len(self.slots)
+        need = max(min(len(self._prompts[i]) - self._cursor[i],
+                       self.ecfg.prefill_chunk) for i in pf)
+        length = _pow2ceil(need)
+        tokens = np.zeros((nb, length), np.int32)
+        lengths = np.zeros((nb,), np.int32)
+        for i in pf:
+            # never consume more than prefill_chunk per step, even when the
+            # pow2 bucket rounds past it (non-pow2 prefill_chunk configs)
+            take = min(len(self._prompts[i]) - self._cursor[i],
+                       self.ecfg.prefill_chunk)
+            tokens[i, :take] = self._prompts[i][
+                self._cursor[i]:self._cursor[i] + take]
+            lengths[i] = take
+        logits, self.state = self._prefill_fn(length)(
+            self._serve_params, self.state, jnp.asarray(tokens),
+            jnp.asarray(lengths))
+        self.prefill_steps += 1
+        finishers = [i for i in pf
+                     if self._cursor[i] + int(lengths[i])
+                     >= len(self._prompts[i])]
+        for i in pf:
+            self._cursor[i] += int(lengths[i])
+        if not finishers:
+            return []
+        # the prompt's last logits yield the first generated token; one
+        # vectorized sample covers every finishing row (per-row temperature)
+        self.key, sub = jax.random.split(self.key)
+        fin = set(finishers)
+        temps = jnp.asarray([self.slots[i].temperature if i in fin else 0.0
+                             for i in range(nb)], jnp.float32)
+        toks = np.asarray(sample_tokens(logits, sub, temps))
+        now = time.perf_counter()
+        finished: List[Request] = []
+        for i in finishers:
+            req = self.slots[i]
+            tok = int(toks[i])
+            req.output.append(tok)
+            req.t_first = req.t_first or now
+            # the prefill-sampled token may already terminate the request
+            hit_eos = (self.ecfg.eos_id is not None
+                       and tok == self.ecfg.eos_id)
+            if hit_eos or len(req.output) >= req.max_new_tokens:
+                req.done = True
+                finished.append(req)
+                self._free_slot(i)
+            else:
+                self.last_tokens[i] = tok
+                self._slot_arrays = None
+        return finished
+
+    def _collect(self, toks: np.ndarray) -> List[Request]:
+        """Fold a (K, B) chunk of tokens into the per-slot requests.
+
+        A slot stops at its first EOS or at its token budget; anything the
+        device generated past that point within the chunk is discarded (the
+        slot's state is reset by the next admission). Slots still mid-prefill
+        took no decode step — their repeated tokens are skipped entirely.
+        """
+        finished = []
+        now = time.perf_counter()
+        for slot, req in enumerate(self.slots):
+            if req is None or not self._decoding(slot):
+                continue
+            for k in range(toks.shape[0]):
+                tok = int(toks[k, slot])
+                req.output.append(tok)
+                req.t_first = req.t_first or now
+                self.last_tokens[slot] = tok
+                hit_eos = (self.ecfg.eos_id is not None
+                           and tok == self.ecfg.eos_id)
+                if hit_eos or len(req.output) >= req.max_new_tokens:
+                    req.done = True
+                    finished.append(req)
+                    self._free_slot(slot)
+                    break
+        return finished
+
+
+class SerialAdmitEngine(ServingEngine):
+    """The PR-1 admission path, kept as the measured baseline: each arriving
+    request is prefilled *alone* through a jit cached per distinct prompt
+    length (up to `capacity` compilations) and merged into its slot — the
+    whole decode fleet stalls while the queue's prompts are consumed one by
+    one. Decode itself is the same fused loop as `ServingEngine`.
+    """
+
+    def _warm_prefill(self):
+        # Best effort only: compiles the power-of-two prompt lengths, but
+        # this engine's jit cache is keyed by *exact* prompt length — any
+        # other arriving length still compiles at admission time, which is
+        # exactly the TTFT pathology the bucketed scheduler removes.
+        for length in self._bucket_lengths(self.ecfg.capacity):
+            if length > self.ecfg.capacity:
+                break
+            self._prefill_len_fn(length)(
+                self._serve_params, jnp.zeros((1, length), jnp.int32))
+
+    def _merge(self, batch_state, one_state, slot):
+        # hook: the decode benchmark's seed baseline overrides this with the
+        # eager leaf-by-leaf merge it measures against
+        return _merge_slot(batch_state, one_state, slot)
+
+    def _prefill_len_fn(self, length: int):
         # one jit per distinct prompt length; prompts are clipped to
         # `capacity` on admit, so the cache is bounded by capacity entries
         if length not in self._prefill_cache:
@@ -260,15 +548,18 @@ class ServingEngine:
             if self.slots[slot] is not None or not self.queue:
                 continue
             req = self.queue.popleft()
+            self.admits += 1
             prompt = req.prompt[-self.ecfg.capacity:]
-            fn = self._prefill_fn(len(prompt))
+            fn = self._prefill_len_fn(len(prompt))
             logits, one_state = fn(self._serve_params,
                                    jnp.asarray([prompt], jnp.int32))
             self.state = self._merge(self.state, one_state, slot)
+            self.prefill_steps += 1
             self.key, sub = jax.random.split(self.key)
             tok = int(np.asarray(
                 sample_token(logits, sub, temperature=req.temperature))[0])
             req.output.append(tok)
+            req.t_first = req.t_first or time.perf_counter()
             # the prefill-sampled token may already terminate the request
             hit_eos = (self.ecfg.eos_id is not None
                        and tok == self.ecfg.eos_id)
@@ -278,29 +569,7 @@ class ServingEngine:
                 continue
             self.last_tokens[slot] = tok
             self.slots[slot] = req
+            # mark the whole prompt consumed → base class sees a decoding row
+            self._prompts[slot] = list(prompt)
+            self._cursor[slot] = len(prompt)
             self._slot_arrays = None
-
-    def _collect(self, toks: np.ndarray) -> List[Request]:
-        """Fold a (K, B) chunk of tokens into the per-slot requests.
-
-        A slot stops at its first EOS or at its token budget; anything the
-        device generated past that point within the chunk is discarded (the
-        slot's cache is overwritten by the next prefill merge).
-        """
-        finished = []
-        for slot, req in enumerate(self.slots):
-            if req is None:
-                continue
-            for k in range(toks.shape[0]):
-                tok = int(toks[k, slot])
-                req.output.append(tok)
-                self.last_tokens[slot] = tok
-                hit_eos = (self.ecfg.eos_id is not None
-                           and tok == self.ecfg.eos_id)
-                if hit_eos or len(req.output) >= req.max_new_tokens:
-                    req.done = True
-                    finished.append(req)
-                    self.slots[slot] = None
-                    self._slot_arrays = None
-                    break
-        return finished

@@ -1,9 +1,13 @@
 """Token sampling: greedy / temperature / top-k, jit-friendly.
 
-``sample_token`` is the scalar-temperature form (host-side prefill path);
-``sample_tokens`` is the vectorized per-slot form the fused decode loop jits:
-each batch row carries its own temperature, with temperature 0 meaning greedy
-for that row only — slots never share a sampler.
+``sample_token`` is the scalar-temperature form (the serial-admit engine's
+per-request prefill path); ``sample_tokens`` is the vectorized per-slot form
+used both inside the jitted fused decode loop and for the bucketed
+scheduler's prefill finishers (every row whose prompt completed this step
+samples its first token in one call): each batch row carries its own
+temperature, with temperature 0 meaning greedy for that row only — slots
+never share a sampler, and `jax.random.categorical` draws independently per
+row from a single key.
 """
 
 from __future__ import annotations
