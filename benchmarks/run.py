@@ -13,10 +13,10 @@ import sys
 import time
 import traceback
 
-from benchmarks import (bench_condition, bench_decode, bench_groupwise,
-                        bench_iterations, bench_latency, bench_memory,
-                        bench_perplexity, bench_prefill, bench_roofline,
-                        bench_runtime, bench_tolerance)
+from benchmarks import (bench_artifacts, bench_condition, bench_decode,
+                        bench_groupwise, bench_iterations, bench_latency,
+                        bench_memory, bench_perplexity, bench_prefill,
+                        bench_roofline, bench_runtime, bench_tolerance)
 from benchmarks.common import RESULTS
 
 SUITES = {
@@ -26,6 +26,8 @@ SUITES = {
     "latency": bench_latency.run,          # Tables 5/6
     "decode": bench_decode.run,            # decode fast path (tok/s trajectory)
     "prefill": bench_prefill.run,          # bucketed/chunked admission (TTFT)
+    "artifacts": bench_artifacts.run,      # quantize-once/serve-many boot
+
     "iterations": bench_iterations.run,    # Fig. 3
     "tolerance": bench_tolerance.run,      # Fig. 4
     "condition": bench_condition.run,      # Table 7

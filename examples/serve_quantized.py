@@ -1,22 +1,27 @@
-"""End-to-end driver: train a byte LM → PTQTP-quantize → serve batched
-requests, comparing FP and 1.58-bit generations.
+"""End-to-end driver: train a byte LM → stream-quantize into a trit-plane
+artifact → boot the server from the artifact, comparing FP and 1.58-bit
+generations.
 
     PYTHONPATH=src python examples/serve_quantized.py [--steps 300]
 
 This is the paper's deployment story in one script: post-training, zero
-calibration data, model-agnostic tree walk, multiplication-free serving.
+calibration data, model-agnostic tree walk, multiplication-free serving —
+with the quantized model persisted as a versioned on-disk artifact
+(quantize once) that server processes memory-map at boot (serve many,
+without ever touching the FP weights again).
 """
 
 import argparse
 import sys
+import tempfile
 import time
 from pathlib import Path
 
 sys.path.insert(0, str(Path(__file__).resolve().parents[1]))  # benchmarks/
 
 from benchmarks.common import perplexity, trained_eval_model
+from repro.artifacts import load_artifact, write_artifact
 from repro.core.ptqtp import PTQTPConfig
-from repro.core.quantize_model import quantize_tree
 from repro.data.tokenizer import ByteTokenizer
 from repro.serving.engine import EngineConfig, Request, ServingEngine
 
@@ -34,6 +39,8 @@ def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--steps", type=int, default=300)
     ap.add_argument("--max-new", type=int, default=24)
+    ap.add_argument("--artifact", default=None,
+                    help="artifact directory (default: a temp dir)")
     args = ap.parse_args()
 
     # --- 1. a trained model (cached under benchmarks/results) -------------
@@ -41,20 +48,29 @@ def main():
     print(f"[1] trained LM: {cfg.n_layers}L d={cfg.d_model} "
           f"ppl={perplexity(params, cfg, n_batches=4):.3f}")
 
-    # --- 2. PTQTP post-training quantization (single pass, no data) -------
+    # --- 2. PTQTP → on-disk artifact (single pass, no data, streamed) -----
+    out = args.artifact or tempfile.mkdtemp(prefix="ptqtp_artifact_") + "/lm"
     t0 = time.time()
-    qparams, report = quantize_tree(params, PTQTPConfig(group_size=128,
-                                                        t_max=50))
-    tot = report["__total__"]
-    print(f"[2] PTQTP: {tot['n_quantized']} kernels, "
-          f"{tot['compression']:.2f}x compression in {time.time() - t0:.1f}s; "
+    write_artifact(out, arch=cfg.name, model_cfg=cfg,
+                   ptqtp_cfg=PTQTPConfig(group_size=128, t_max=50),
+                   params=params, overwrite=True)
+    t_quant = time.time() - t0
+    t0 = time.time()
+    qparams, manifest = load_artifact(out)
+    t_load = time.time() - t0
+    stats = manifest["stats"]
+    print(f"[2] PTQTP: {stats['n_quantized']} kernels "
+          f"({stats['source_fp16_bytes'] / stats['quantized_bytes']:.2f}x vs "
+          f"fp16, {stats['bytes_per_weight']:.4f} B/weight) quantized+saved "
+          f"in {t_quant:.1f}s, memory-mapped back in {t_load * 1e3:.0f}ms; "
           f"ppl={perplexity(qparams, cfg, n_batches=4):.3f}")
 
     # --- 3. serve batched requests from both models -----------------------
-    # The bucketed scheduler admits the whole burst in one dispatch and its
-    # compile set is bounded, so it can be fully precompiled up front.
+    # FP32 serves from host memory; PTQTP boots straight off the artifact —
+    # the bucketed scheduler's bounded compile set is fully precompiled by
+    # warmup() in both cases.
     tok = ByteTokenizer()
-    for tag, p in (("fp32", params), ("ptqtp-1.58b", qparams)):
+    for tag, p in (("fp32", params), ("ptqtp-1.58b artifact", qparams)):
         eng = ServingEngine(p, cfg, EngineConfig(max_slots=4, capacity=128,
                                                  prefill_chunk=32))
         eng.warmup()

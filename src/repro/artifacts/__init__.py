@@ -1,0 +1,62 @@
+"""Trit-plane artifact store: quantize once, serve many.
+
+The deployable unit of a PTQTP model is a **versioned artifact directory**
+— the packed ternary checkpoint the paper's "single-hour quantization,
+model-agnostic deployment" story implies. Server processes boot from it with
+``np.memmap`` (no FP weights touched, no re-quantization, no second host
+copy), and the streaming writer produces it with peak incremental host
+memory O(largest kernel).
+
+Directory layout::
+
+    artifact/
+        manifest.json       the contract (schema below)
+        shard_00000.bin     raw little-endian tensor bytes, 64-byte aligned
+        shard_00001.bin     ... (rolled at shard_max_bytes boundaries)
+
+**Manifest schema (stable contract, format_version 1).** Top-level keys:
+
+  ``format``          literal ``"ptqtp-artifact"``
+  ``format_version``  integer; readers must reject other versions
+  ``complete``        bool; writers only publish ``true`` (atomic rename)
+  ``arch``            architecture identifier (the ``repro.configs``
+                      registry key for registry models; informational —
+                      readers rebuild the model from ``model_config``)
+  ``model_config``    ``ModelConfig`` as JSON (``dataclasses.asdict``)
+  ``ptqtp_config``    ``PTQTPConfig`` as JSON
+  ``shards``          ``[{"file", "nbytes"}]`` in creation order
+  ``tensors``         ``{tree_path: record}`` — tree_path is the params-tree
+                      path (``/blocks/b0/attn/q/kernel``); record is either
+
+                      * ``kind="fp"``: ``buffers={"data": buf}`` — an
+                        unquantized leaf (norms, embeddings, routers, ...);
+                      * ``kind="ptqtp"``: ``buffers={"t1p","t2p","alpha"}``
+                        (packed uint8 trit-planes + group scales),
+                        ``meta={"d_in","d_out","group_size"}``,
+                        ``source={"shape","dtype"}`` of the FP kernel, and
+                        ``error={"rel_fro_error"}`` — the progressive
+                        search's relative Frobenius approximation error;
+
+                      every ``buf`` is ``{"shard", "offset", "nbytes",
+                      "shape", "dtype", "crc32"}``
+  ``stats``           aggregate byte/tensor counts (``bytes_per_weight`` is
+                      the on-disk quantized bytes per source weight)
+
+Compatibility rules: additions land as new optional keys; any change to the
+meaning of existing keys or to the shard byte layout bumps
+``format_version``. ``runtime/checkpoint.py`` shares this package's
+``QuantizedKernel`` leaf codec, so checkpoint and artifact encodings of
+quantized kernels cannot drift.
+"""
+
+from repro.artifacts.format import ArtifactError
+from repro.artifacts.reader import (load_artifact, load_model_config,
+                                    read_manifest, verify_artifact)
+from repro.artifacts.writer import (ArtifactWriter, iter_checkpoint_leaves,
+                                    write_artifact)
+
+__all__ = [
+    "ArtifactError", "ArtifactWriter", "iter_checkpoint_leaves",
+    "load_artifact", "load_model_config", "read_manifest", "verify_artifact",
+    "write_artifact",
+]

@@ -1,0 +1,157 @@
+"""Artifact format: manifest schema, leaf codec, config (de)serialization.
+
+This module owns every byte-level and JSON-level convention of the artifact
+directory (see the package docstring in ``__init__`` for the layout). It is
+deliberately free of any quantization or serving logic so that the writer,
+the reader, *and* ``runtime/checkpoint.py`` (whose npz flatten routes its
+``QuantizedKernel`` handling through :func:`encode_quantized_kernel` /
+:func:`decode_quantized_kernel`) all share one codec — the two on-disk
+formats cannot drift.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import zlib
+from typing import Any, Dict, Iterator, Tuple
+
+import numpy as np
+
+from repro.core.quantize_model import QuantizedKernel
+
+FORMAT_NAME = "ptqtp-artifact"
+FORMAT_VERSION = 1
+MANIFEST_NAME = "manifest.json"
+SHARD_ALIGN = 64  # byte alignment of every tensor buffer inside a shard
+
+# QuantizedKernel buffer names, in canonical storage order.
+QK_BUFFERS = ("t1p", "t2p", "alpha")
+# Flat-key suffixes used by the npz checkpoint flatten (kept identical to the
+# pre-unification checkpoint format so old checkpoints still load).
+QK_KEY_PREFIX = "__qk_"
+QK_META_KEY = "__qk_meta"
+
+
+class ArtifactError(RuntimeError):
+    """Malformed, incomplete, or corrupt artifact."""
+
+
+# ---------------------------------------------------------------------------
+# QuantizedKernel leaf codec (shared with runtime/checkpoint.py)
+# ---------------------------------------------------------------------------
+
+def encode_quantized_kernel(qk: QuantizedKernel) -> Dict[str, np.ndarray]:
+    """QuantizedKernel -> flat field dict of host arrays.
+
+    Field names are the checkpoint npz suffixes (``__qk_t1p`` ...); the
+    static metadata rides along as one int64 vector so the whole kernel is
+    representable in any array container.
+    """
+    fields = {f"{QK_KEY_PREFIX}{name}": np.asarray(getattr(qk, name))
+              for name in QK_BUFFERS}
+    fields[QK_META_KEY] = np.asarray(
+        [qk.d_in, qk.d_out, qk.group_size], np.int64)
+    return fields
+
+
+def decode_quantized_kernel(fields: Dict[str, Any]) -> QuantizedKernel:
+    """Inverse of :func:`encode_quantized_kernel` (accepts np or jax arrays)."""
+    meta = np.asarray(fields[QK_META_KEY])
+    return QuantizedKernel(
+        fields[f"{QK_KEY_PREFIX}t1p"], fields[f"{QK_KEY_PREFIX}t2p"],
+        fields[f"{QK_KEY_PREFIX}alpha"],
+        int(meta[0]), int(meta[1]), int(meta[2]))
+
+
+# ---------------------------------------------------------------------------
+# params-tree walking (writer-side) / rebuilding (reader-side)
+# ---------------------------------------------------------------------------
+
+def iter_tree_leaves(tree: Any, path: str = "") -> Iterator[Tuple[str, Any]]:
+    """Yield (path, leaf) pairs in the same order and with the same ``/a/b``
+    path naming as ``quantize_tree``'s walk, one leaf at a time — the
+    streaming writer's traversal never holds more than the current leaf."""
+    if isinstance(tree, dict):
+        for k, v in tree.items():
+            yield from iter_tree_leaves(v, f"{path}/{k}")
+    elif isinstance(tree, (list, tuple)):
+        for i, v in enumerate(tree):
+            yield from iter_tree_leaves(v, f"{path}/{i}")
+    else:
+        yield path, tree
+
+
+def unflatten_paths(flat: Dict[str, Any]) -> Dict[str, Any]:
+    """{"/a/b": leaf} -> nested dict tree (model params are dict-only)."""
+    root: Dict[str, Any] = {}
+    for path, leaf in flat.items():
+        parts = [p for p in path.split("/") if p]
+        node = root
+        for p in parts[:-1]:
+            node = node.setdefault(p, {})
+        node[parts[-1]] = leaf
+    return root
+
+
+# ---------------------------------------------------------------------------
+# config (de)serialization
+# ---------------------------------------------------------------------------
+
+def ptqtp_config_to_json(cfg) -> Dict[str, Any]:
+    return dataclasses.asdict(cfg)
+
+
+def ptqtp_config_from_json(d: Dict[str, Any]):
+    from repro.core.ptqtp import PTQTPConfig
+
+    return PTQTPConfig(**d)
+
+
+def model_config_to_json(cfg) -> Dict[str, Any]:
+    return dataclasses.asdict(cfg)
+
+
+def model_config_from_json(d: Dict[str, Any]):
+    from repro.configs.base import ModelConfig
+    from repro.models.moe import MoEConfig
+
+    d = dict(d)
+    if d.get("moe") is not None:
+        d["moe"] = MoEConfig(**d["moe"])
+    for k in ("block_pattern", "prefix_pattern"):
+        if d.get(k) is not None:
+            d[k] = tuple(d[k])
+    return ModelConfig(**d)
+
+
+# ---------------------------------------------------------------------------
+# checksums / buffer records
+# ---------------------------------------------------------------------------
+
+def byte_view(arr) -> np.ndarray:
+    """Flat uint8 view of an array's raw bytes. ``memoryview(...).cast("B")``
+    rejects non-standard element formats (ml_dtypes bfloat16 etc.); a uint8
+    reinterpret-view is dtype-agnostic and still zero-copy for contiguous
+    input."""
+    return np.ascontiguousarray(np.atleast_1d(arr)).view(np.uint8).reshape(-1)
+
+
+def checksum(data) -> int:
+    """crc32 of a buffer's raw bytes (cheap, catches bit-flips/truncation)."""
+    return zlib.crc32(byte_view(data)) & 0xFFFFFFFF
+
+
+def buffer_record(shard: str, offset: int, arr: np.ndarray) -> Dict[str, Any]:
+    """Manifest entry for one raw buffer inside a shard file."""
+    return {
+        "shard": shard,
+        "offset": int(offset),
+        "nbytes": int(arr.nbytes),
+        "shape": list(arr.shape),
+        "dtype": str(arr.dtype),
+        "crc32": checksum(arr),
+    }
+
+
+def align_up(n: int, align: int = SHARD_ALIGN) -> int:
+    return (n + align - 1) // align * align

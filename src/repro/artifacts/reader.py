@@ -1,0 +1,107 @@
+"""Zero-copy artifact reader: memory-mapped boot of a quantized model.
+
+``load_artifact`` reconstructs the params pytree straight off the shard
+files: every tensor leaf — packed trit-planes, group scales, and the FP
+leaves — is an ``np.memmap`` view at its manifest byte-offset, so booting a
+server materializes *no* second host copy of the model. Pages fault in as
+the first dispatches touch them (and the OS page cache shares them across
+server processes on one host — quantize once, serve many).
+
+Integrity: the manifest must be ``complete`` (the writer only publishes
+complete artifacts, so an incomplete one means a torn copy), the format
+version must match, and ``verify=True`` (or :func:`verify_artifact`)
+re-checksums every buffer against its recorded crc32.
+"""
+
+from __future__ import annotations
+
+import json
+from pathlib import Path
+from typing import Any, Dict, Tuple
+
+import numpy as np
+
+from repro.artifacts import format as afmt
+from repro.artifacts.format import MANIFEST_NAME, ArtifactError
+
+
+def read_manifest(artifact_dir: str | Path) -> Dict[str, Any]:
+    """Load and sanity-check the manifest (no tensor data is touched)."""
+    artifact_dir = Path(artifact_dir)
+    p = artifact_dir / MANIFEST_NAME
+    if not p.exists():
+        raise ArtifactError(f"not an artifact directory (no {MANIFEST_NAME}): "
+                            f"{artifact_dir}")
+    with open(p) as f:
+        manifest = json.load(f)
+    if manifest.get("format") != afmt.FORMAT_NAME:
+        raise ArtifactError(f"{p}: format {manifest.get('format')!r} is not "
+                            f"{afmt.FORMAT_NAME!r}")
+    if manifest.get("format_version") != afmt.FORMAT_VERSION:
+        raise ArtifactError(
+            f"{p}: format_version {manifest.get('format_version')} != "
+            f"supported {afmt.FORMAT_VERSION}")
+    if not manifest.get("complete"):
+        raise ArtifactError(
+            f"{artifact_dir} is incomplete (interrupted write or torn copy); "
+            "re-run the quantize CLI to finish it")
+    return manifest
+
+
+def _buffer_view(mm: np.memmap, rec: Dict[str, Any], where: str) -> np.ndarray:
+    end = rec["offset"] + rec["nbytes"]
+    if end > mm.shape[0]:
+        raise ArtifactError(f"{where}: buffer [{rec['offset']}, {end}) "
+                            f"exceeds shard size {mm.shape[0]}")
+    view = mm[rec["offset"]:end].view(np.dtype(rec["dtype"]))
+    return view.reshape(rec["shape"])
+
+
+def load_artifact(artifact_dir: str | Path, *, verify: bool = False
+                  ) -> Tuple[Dict[str, Any], Dict[str, Any]]:
+    """-> (params_tree, manifest) with memmap-backed leaves.
+
+    ``verify=True`` eagerly re-checksums every buffer (reads the whole
+    artifact once); the default leaves pages untouched until first use.
+    """
+    artifact_dir = Path(artifact_dir)
+    manifest = read_manifest(artifact_dir)
+    mmaps: Dict[str, np.memmap] = {}
+    for shard in manifest["shards"]:
+        p = artifact_dir / shard["file"]
+        if not p.exists() or p.stat().st_size < shard["nbytes"]:
+            raise ArtifactError(f"shard {p} missing or truncated "
+                                f"(need {shard['nbytes']} bytes)")
+        mmaps[shard["file"]] = np.memmap(p, dtype=np.uint8, mode="r")
+
+    flat: Dict[str, Any] = {}
+    for path, rec in manifest["tensors"].items():
+        views = {}
+        for name, buf in rec["buffers"].items():
+            view = _buffer_view(mmaps[buf["shard"]], buf, f"{path}:{name}")
+            if verify and afmt.checksum(view) != buf["crc32"]:
+                raise ArtifactError(
+                    f"checksum mismatch for tensor {path!r} buffer {name!r} "
+                    f"in {artifact_dir / buf['shard']} — artifact is corrupt; "
+                    "re-run the quantize CLI with --overwrite")
+            views[name] = view
+        if rec["kind"] == "ptqtp":
+            m = rec["meta"]
+            fields = {f"{afmt.QK_KEY_PREFIX}{k}": v for k, v in views.items()}
+            fields[afmt.QK_META_KEY] = np.asarray(
+                [m["d_in"], m["d_out"], m["group_size"]], np.int64)
+            flat[path] = afmt.decode_quantized_kernel(fields)
+        else:
+            flat[path] = views["data"]
+    return afmt.unflatten_paths(flat), manifest
+
+
+def load_model_config(manifest: Dict[str, Any]):
+    """ModelConfig the artifact's params were built for."""
+    return afmt.model_config_from_json(manifest["model_config"])
+
+
+def verify_artifact(artifact_dir: str | Path) -> Dict[str, Any]:
+    """Full integrity pass; returns the manifest stats on success."""
+    _, manifest = load_artifact(artifact_dir, verify=True)
+    return manifest.get("stats", {})

@@ -130,10 +130,10 @@ def quantize_tree(
     cfg = cfg or ptqtp.PTQTPConfig()
     predicate = predicate or default_predicate
     report: Dict[str, Any] = {}
-    tot_before = tot_after = 0
+    tot_before = tot_after = tot_eq13 = 0
 
     def walk(node, path):
-        nonlocal tot_before, tot_after
+        nonlocal tot_before, tot_after, tot_eq13
         if isinstance(node, dict):
             return {k: walk(v, f"{path}/{k}") for k, v in node.items()}
         if isinstance(node, (list, tuple)):
@@ -141,13 +141,22 @@ def quantize_tree(
         if predicate(path, node, cfg.group_size):
             qk = quantize_kernel(node, cfg)
             before = int(np.prod(node.shape)) * 2  # vs fp16 storage
-            after = ptqtp_weight_bytes(node.shape[-2:], cfg.group_size) * (
-                node.shape[0] if node.ndim == 3 else 1
-            )
+            # All leading dims (scan stack, MoE experts: (L, E, in, out))
+            # multiply the per-matrix bytes; the quantizer stores the matrix
+            # transposed, so groups run along d_in = shape[-2]. after_bytes
+            # is the exact packed footprint (== QuantizedKernel.nbytes());
+            # after_bytes_eq13 is the paper's Eq. 13 with fp16 scales.
+            lead = int(np.prod(node.shape[:-2], dtype=np.int64))
+            layout = (node.shape[-1], node.shape[-2])  # (d_out, d_in)
+            after = lead * ptqtp_weight_bytes(
+                layout, cfg.group_size, scale_bytes=qk.alpha.dtype.itemsize)
+            after_eq13 = lead * ptqtp_weight_bytes(layout, cfg.group_size)
             report[path] = {"before_bytes": before, "after_bytes": after,
+                            "after_bytes_eq13": after_eq13,
                             "shape": tuple(node.shape)}
             tot_before += before
             tot_after += after
+            tot_eq13 += after_eq13
             return qk
         return node
 
@@ -155,7 +164,10 @@ def quantize_tree(
     report["__total__"] = {
         "before_bytes": tot_before,
         "after_bytes": tot_after,
+        "after_bytes_eq13": tot_eq13,
         "compression": (tot_before / tot_after) if tot_after else float("nan"),
+        "compression_eq13":
+            (tot_before / tot_eq13) if tot_eq13 else float("nan"),
         "n_quantized": len(report),
     }
     return out, report

@@ -1,12 +1,19 @@
-"""Serving launcher: quantize with PTQTP, then serve batched requests.
+"""Serving launcher: quantize with PTQTP (or boot a prebuilt artifact), then
+serve batched requests.
 
 ``python -m repro.launch.serve --arch qwen2-1.5b --requests 8``
+``python -m repro.launch.serve --artifact artifacts/qwen``
 
 Pipeline: init (or load) weights → PTQTP-quantize every linear (the paper's
 single-pass, calibration-free recipe) → continuous-batching engine drives
 bucketed/chunked prefill + fused decode with the multiplication-free ternary
-representation. ``--scheduler serial`` selects the PR-1 serial-admit
-baseline (one jit per prompt length) for A/B comparison.
+representation. ``--artifact PATH`` replaces the first two stages with a
+memory-mapped load of a ``repro.launch.quantize`` artifact — the server
+never touches FP weights and pays no quantization at boot (the
+"quantize once, serve many" deployment path; the startup summary breaks the
+boot down per phase so the win is visible). ``--scheduler serial`` selects
+the PR-1 serial-admit baseline (one jit per prompt length) for A/B
+comparison.
 """
 
 from __future__ import annotations
@@ -17,6 +24,7 @@ import time
 import jax
 
 from repro import configs
+from repro.artifacts import load_artifact, load_model_config
 from repro.core.ptqtp import PTQTPConfig
 from repro.core.quantize_model import quantize_tree
 from repro.data.tokenizer import ByteTokenizer
@@ -35,6 +43,12 @@ PROMPTS = [
 def main(argv=None):
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--arch", choices=configs.ARCH_IDS, default="qwen2-1.5b")
+    ap.add_argument("--artifact", default=None, metavar="PATH",
+                    help="boot from a prebuilt trit-plane artifact "
+                         "(repro.launch.quantize) instead of init+quantize; "
+                         "--arch and the quantize flags are ignored")
+    ap.add_argument("--verify-artifact", action="store_true",
+                    help="re-checksum every artifact buffer at boot")
     ap.add_argument("--requests", type=int, default=4)
     ap.add_argument("--max-new", type=int, default=16)
     ap.add_argument("--slots", type=int, default=4)
@@ -53,32 +67,57 @@ def main(argv=None):
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args(argv)
 
-    cfg = configs.get_smoke_config(args.arch)
-    if not cfg.embed_inputs:
-        ap.error(f"{args.arch} has a stub modality frontend; token serving "
-                 "applies to LM archs (see launch/dryrun.py for its cells)")
-    params = init_params(cfg, jax.random.PRNGKey(args.seed))
-
-    if not args.no_quantize:
+    boot = {}  # phase -> seconds (startup breakdown)
+    t_boot = time.time()
+    if args.artifact:
         t0 = time.time()
-        gs = min(128, cfg.d_model)
-        params, report = quantize_tree(
-            params, PTQTPConfig(group_size=gs, t_max=args.t_max))
-        tot = report["__total__"]
-        print(f"[serve] PTQTP: {tot['n_quantized']} kernels, "
-              f"{tot['compression']:.2f}x compression, "
-              f"{time.time() - t0:.1f}s")
+        params, manifest = load_artifact(args.artifact,
+                                         verify=args.verify_artifact)
+        cfg = load_model_config(manifest)
+        if not cfg.embed_inputs:
+            ap.error(f"artifact model {cfg.name} has a stub modality "
+                     "frontend; token serving applies to LM archs")
+        boot["artifact_load"] = time.time() - t0
+        stats = manifest.get("stats", {})
+        print(f"[serve] artifact: {manifest['arch']} "
+              f"({stats.get('n_quantized', '?')} quantized kernels, "
+              f"{stats.get('total_bytes', 0) / 1e6:.2f} MB memory-mapped, "
+              f"{boot['artifact_load'] * 1e3:.0f}ms)")
+    else:
+        cfg = configs.get_smoke_config(args.arch)
+        if not cfg.embed_inputs:  # reject stub archs before any boot work
+            ap.error(f"{args.arch} has a stub modality frontend; token "
+                     "serving applies to LM archs (see launch/dryrun.py "
+                     "for its cells)")
+        t0 = time.time()
+        params = init_params(cfg, jax.random.PRNGKey(args.seed))
+        boot["weight_init"] = time.time() - t0
+        if not args.no_quantize:
+            t0 = time.time()
+            gs = min(128, cfg.d_model)
+            params, report = quantize_tree(
+                params, PTQTPConfig(group_size=gs, t_max=args.t_max))
+            boot["quantize"] = time.time() - t0
+            tot = report["__total__"]
+            print(f"[serve] PTQTP: {tot['n_quantized']} kernels, "
+                  f"{tot['compression']:.2f}x compression, "
+                  f"{boot['quantize']:.1f}s")
 
     tok = ByteTokenizer()
     cls = ServingEngine if args.scheduler == "bucketed" else SerialAdmitEngine
+    t0 = time.time()
     engine = cls(params, cfg, EngineConfig(
         max_slots=args.slots, capacity=args.capacity, seed=args.seed,
         prefill_chunk=args.prefill_chunk))
+    boot["engine_init"] = time.time() - t0
     if args.warmup:
         t0 = time.time()
         engine.warmup()
+        boot["warmup"] = time.time() - t0
         print(f"[serve] warmup: {engine.compile_stats()['n_prefill_compiles']}"
-              f" prefill programs in {time.time() - t0:.1f}s")
+              f" prefill programs in {boot['warmup']:.1f}s")
+    breakdown = " ".join(f"{k}={v:.2f}s" for k, v in boot.items())
+    print(f"[serve] boot {time.time() - t_boot:.2f}s ({breakdown})")
     for i in range(args.requests):
         prompt = PROMPTS[i % len(PROMPTS)]
         engine.submit(Request(uid=i, prompt=tok.encode(prompt, eos=False),

@@ -35,22 +35,22 @@ from typing import Any, Dict, Optional, Tuple
 import jax
 import numpy as np
 
+from repro.artifacts.format import (QK_KEY_PREFIX, decode_quantized_kernel,
+                                    encode_quantized_kernel)
 from repro.core.quantize_model import QuantizedKernel
 
 _SEP = "//"
 
 
 def _flatten(tree: Any) -> Dict[str, Any]:
-    """Nested dict tree -> {path: leaf}; QuantizedKernel explodes to fields."""
+    """Nested dict tree -> {path: leaf}; QuantizedKernel explodes to fields
+    via the artifact leaf codec (one codec, two formats — they can't drift)."""
     out: Dict[str, Any] = {}
 
     def walk(node, path):
         if isinstance(node, QuantizedKernel):
-            out[f"{path}{_SEP}__qk_t1p"] = node.t1p
-            out[f"{path}{_SEP}__qk_t2p"] = node.t2p
-            out[f"{path}{_SEP}__qk_alpha"] = node.alpha
-            out[f"{path}{_SEP}__qk_meta"] = np.asarray(
-                [node.d_in, node.d_out, node.group_size], np.int64)
+            for key, arr in encode_quantized_kernel(node).items():
+                out[f"{path}{_SEP}{key}"] = arr
             return
         if isinstance(node, dict):
             for k, v in node.items():
@@ -68,15 +68,12 @@ def _unflatten(flat: Dict[str, Any]) -> Any:
     plain: Dict[str, Any] = {}
     for path, leaf in flat.items():
         parts = path.split(_SEP)
-        if parts[-1].startswith("__qk_"):
+        if parts[-1].startswith(QK_KEY_PREFIX):
             qk_groups.setdefault(_SEP.join(parts[:-1]), {})[parts[-1]] = leaf
         else:
             plain[path] = leaf
     for base, fields in qk_groups.items():
-        meta = np.asarray(fields["__qk_meta"])
-        plain[base] = QuantizedKernel(
-            fields["__qk_t1p"], fields["__qk_t2p"], fields["__qk_alpha"],
-            int(meta[0]), int(meta[1]), int(meta[2]))
+        plain[base] = decode_quantized_kernel(fields)
 
     root: Dict[str, Any] = {}
     for path, leaf in plain.items():

@@ -1,0 +1,407 @@
+"""Artifact store: format round-trip, resumable streaming writes, memmap boot.
+
+The acceptance bar (ISSUE 3): artifact-booted engines are bit-identical to
+quantize-at-boot engines at temperature 0, the streaming writer's peak
+incremental host allocation is O(largest kernel), interrupted writes resume,
+and corruption is detected with a clear error.
+"""
+
+import json
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import configs
+from repro.artifacts import (ArtifactError, load_artifact, load_model_config,
+                             read_manifest, verify_artifact, write_artifact)
+from repro.artifacts.format import (decode_quantized_kernel,
+                                    encode_quantized_kernel)
+from repro.core.ptqtp import PTQTPConfig
+from repro.core.quantize_model import (QuantizedKernel, quantize_kernel,
+                                       quantize_tree)
+from repro.models import init_params
+from repro.serving.engine import (EngineConfig, Request, SerialAdmitEngine,
+                                  ServingEngine)
+
+PCFG = PTQTPConfig(group_size=32, t_max=3)
+ARCH = "qwen2-1.5b"
+
+
+def _flatten(tree):
+    out = {}
+
+    def walk(node, path=""):
+        if isinstance(node, dict):
+            for k, v in node.items():
+                walk(v, f"{path}/{k}")
+        else:
+            out[path] = node
+
+    walk(tree)
+    return out
+
+
+@pytest.fixture(scope="module")
+def model():
+    cfg = configs.get_smoke_config(ARCH)
+    return cfg, init_params(cfg, jax.random.PRNGKey(0))
+
+
+@pytest.fixture(scope="module")
+def qtree(model):
+    cfg, params = model
+    qp, _ = quantize_tree(params, PCFG)
+    return qp
+
+
+@pytest.fixture(scope="module")
+def artifact(model, tmp_path_factory):
+    cfg, params = model
+    out = tmp_path_factory.mktemp("artifacts") / "model"
+    write_artifact(out, arch=ARCH, model_cfg=cfg, ptqtp_cfg=PCFG,
+                   params=params)
+    return out
+
+
+class TestFormat:
+    def test_tree_roundtrip_bit_identical(self, model, qtree, artifact):
+        """Streaming write + memmap load == in-memory quantize_tree, bitwise
+        (same quantizer on the same weights → same trits and scales)."""
+        tree, _ = load_artifact(artifact)
+        a, b = _flatten(qtree), _flatten(tree)
+        assert set(a) == set(b)
+        for path in a:
+            if isinstance(a[path], QuantizedKernel):
+                assert isinstance(b[path], QuantizedKernel), path
+                for f in ("t1p", "t2p", "alpha"):
+                    np.testing.assert_array_equal(
+                        np.asarray(getattr(a[path], f)),
+                        np.asarray(getattr(b[path], f)), err_msg=path)
+                assert (a[path].d_in, a[path].d_out, a[path].group_size) == \
+                    (b[path].d_in, b[path].d_out, b[path].group_size)
+            else:
+                np.testing.assert_array_equal(
+                    np.asarray(a[path]), np.asarray(b[path]), err_msg=path)
+
+    def test_manifest_contract(self, artifact, model):
+        """The schema documented in repro.artifacts.__doc__ is present."""
+        m = read_manifest(artifact)
+        assert m["format"] == "ptqtp-artifact" and m["format_version"] == 1
+        assert m["complete"] and m["arch"] == ARCH
+        assert m["ptqtp_config"]["group_size"] == PCFG.group_size
+        q = [r for r in m["tensors"].values() if r["kind"] == "ptqtp"]
+        assert q and all(set(r["buffers"]) == {"t1p", "t2p", "alpha"}
+                         for r in q)
+        # per-kernel approximation error from the progressive search
+        assert all(0.0 < r["error"]["rel_fro_error"] < 1.0 for r in q)
+        assert all({"shard", "offset", "nbytes", "shape", "dtype", "crc32"}
+                   <= set(b) for r in m["tensors"].values()
+                   for b in r["buffers"].values())
+        # stats add up to the shard bytes actually referenced
+        stats = m["stats"]
+        assert stats["total_bytes"] == sum(
+            b["nbytes"] for r in m["tensors"].values()
+            for b in r["buffers"].values())
+        # the smoke config quantizes with G=32 + fp32 scales: 0.5 B/w planes
+        # + 2*4/32 B/w scales
+        assert stats["bytes_per_weight"] == pytest.approx(0.75)
+        # the reconstructed ModelConfig round-trips exactly
+        assert load_model_config(m) == model[0]
+
+    def test_memmap_zero_copy_leaves(self, artifact):
+        """Every loaded buffer is a view into the shard mmap — no second
+        host copy is materialized at load time."""
+
+        def mmap_backed(arr):
+            while arr is not None:
+                if isinstance(arr, np.memmap):
+                    return True
+                arr = arr.base
+            return False
+
+        tree, _ = load_artifact(artifact)
+        flat = _flatten(tree)
+        qks = [v for v in flat.values() if isinstance(v, QuantizedKernel)]
+        fps = [v for v in flat.values() if not isinstance(v, QuantizedKernel)]
+        assert qks and fps
+        for leaf in fps + [qks[0].t1p, qks[0].t2p, qks[0].alpha]:
+            assert mmap_backed(leaf), type(leaf)
+
+    def test_bfloat16_leaves_roundtrip(self, tmp_path):
+        """Non-smoke configs carry bfloat16 params; ml_dtypes buffers must
+        write, checksum, and memmap back intact (regression: memoryview
+        .cast('B') rejects bfloat16)."""
+        tree = {"layer": {"kernel": jnp.asarray(
+            np.random.default_rng(5).standard_normal((64, 32)),
+            jnp.bfloat16)},
+            "norm": {"scale": jnp.ones((32,), jnp.bfloat16)}}
+        cfg = configs.get_smoke_config(ARCH)
+        out = tmp_path / "bf16"
+        write_artifact(out, arch=ARCH, model_cfg=cfg, ptqtp_cfg=PCFG,
+                       params=tree)
+        loaded, _ = load_artifact(out, verify=True)
+        assert str(loaded["norm"]["scale"].dtype) == "bfloat16"
+        np.testing.assert_array_equal(
+            np.asarray(tree["norm"]["scale"]).view(np.uint16),
+            np.asarray(loaded["norm"]["scale"]).view(np.uint16))
+        qk = loaded["layer"]["kernel"]
+        assert isinstance(qk, QuantizedKernel)
+        qk_direct = quantize_kernel(tree["layer"]["kernel"], PCFG)
+        np.testing.assert_array_equal(np.asarray(qk_direct.t1p),
+                                      np.asarray(qk.t1p))
+
+    def test_existing_artifact_needs_overwrite(self, artifact, model):
+        cfg, params = model
+        with pytest.raises(ArtifactError, match="already exists"):
+            write_artifact(artifact, arch=ARCH, model_cfg=cfg,
+                           ptqtp_cfg=PCFG, params=params)
+
+    def test_codec_shared_with_checkpoint(self, tmp_path):
+        """Satellite: checkpoint npz and artifact store one codec — a kernel
+        saved through either comes back bit-identical through both."""
+        from repro.runtime.checkpoint import load_checkpoint, save_checkpoint
+
+        w = jnp.asarray(np.random.default_rng(7)
+                        .standard_normal((128, 64), np.float32))
+        qk = quantize_kernel(w, PCFG)
+        # direct codec round-trip
+        rt = decode_quantized_kernel(encode_quantized_kernel(qk))
+        # checkpoint round-trip (routed through the same codec)
+        save_checkpoint(tmp_path / "ckpt", 1, {"layer": {"kernel": qk}})
+        _, loaded, _ = load_checkpoint(tmp_path / "ckpt")
+        ck = loaded["layer"]["kernel"]
+        for other in (rt, ck):
+            assert isinstance(other, QuantizedKernel)
+            assert (other.d_in, other.d_out, other.group_size) == (128, 64, 32)
+            for f in ("t1p", "t2p", "alpha"):
+                np.testing.assert_array_equal(np.asarray(getattr(qk, f)),
+                                              np.asarray(getattr(other, f)))
+
+
+class TestEngineBoot:
+    @pytest.mark.parametrize("engine_cls", [ServingEngine, SerialAdmitEngine],
+                             ids=["bucketed", "serial"])
+    def test_artifact_boot_bit_identical(self, model, qtree, artifact,
+                                         engine_cls):
+        """ServingEngine booted from the artifact == quantize-at-boot, token
+        for token at temperature 0 (both schedulers)."""
+        cfg, _ = model
+        art_params, _ = load_artifact(artifact)
+        reqs = [([5, 9, 17, 2], 6), ([1, 2, 3], 5), ([7], 4), ([4, 4], 5)]
+        outs = {}
+        for tag, p in (("boot-quantize", qtree), ("artifact", art_params)):
+            eng = engine_cls(p, cfg, EngineConfig(max_slots=2, capacity=32,
+                                                  seed=0))
+            for i, (prompt, mnt) in enumerate(reqs):
+                eng.submit(Request(uid=i, prompt=prompt, max_new_tokens=mnt))
+            outs[tag] = {r.uid: r.output for r in eng.run()}
+        assert outs["boot-quantize"] == outs["artifact"]
+
+
+class TestResume:
+    def test_resume_after_interrupt(self, model, qtree, tmp_path):
+        """Kill mid-write → staging survives; the re-run skips committed
+        tensors, truncates the torn tail, and finalizes a complete artifact
+        identical to a single-shot write."""
+        cfg, params = model
+        out = tmp_path / "art"
+
+        class Interrupt(Exception):
+            pass
+
+        seen = {"quantized": 0}
+
+        def interrupter(ev):
+            if ev["action"] == "quantize":
+                seen["quantized"] += 1
+                if seen["quantized"] == 3:
+                    raise Interrupt
+
+        with pytest.raises(Interrupt):
+            write_artifact(out, arch=ARCH, model_cfg=cfg, ptqtp_cfg=PCFG,
+                           params=params, progress=interrupter)
+        assert not out.exists()  # nothing published before finalize
+        staging = out.with_name(out.name + ".staging")
+        partial = json.loads((staging / "manifest.json").read_text())
+        assert not partial.get("complete")
+        n_committed = len(partial["tensors"])
+        assert n_committed >= 3
+        # simulate the torn tail of a mid-append crash
+        with open(staging / partial["shards"][-1]["file"], "ab") as f:
+            f.write(b"\xde\xad\xbe\xef")
+
+        events = []
+        write_artifact(out, arch=ARCH, model_cfg=cfg, ptqtp_cfg=PCFG,
+                       params=params, progress=events.append)
+        assert len([e for e in events if e["action"] == "skip"]) == n_committed
+        assert not staging.exists()
+        tree, manifest = load_artifact(out, verify=True)  # checksums intact
+        assert manifest["complete"]
+        # the resumed artifact is bit-identical to in-memory quantization
+        a, b = _flatten(qtree), _flatten(tree)
+        assert set(a) == set(b)
+        some_qk = next(p for p in a if isinstance(a[p], QuantizedKernel))
+        np.testing.assert_array_equal(np.asarray(a[some_qk].t1p),
+                                      np.asarray(b[some_qk].t1p))
+
+    def test_resume_config_mismatch_rejected(self, model, tmp_path):
+        cfg, params = model
+        out = tmp_path / "art"
+
+        class Interrupt(Exception):
+            pass
+
+        def interrupter(ev):
+            if ev["index"] == 2:
+                raise Interrupt
+
+        with pytest.raises(Interrupt):
+            write_artifact(out, arch=ARCH, model_cfg=cfg, ptqtp_cfg=PCFG,
+                           params=params, progress=interrupter)
+        with pytest.raises(ArtifactError, match="different"):
+            write_artifact(out, arch=ARCH, model_cfg=cfg,
+                           ptqtp_cfg=PTQTPConfig(group_size=16, t_max=3),
+                           params=params)
+
+
+class TestIntegrity:
+    def _small_artifact(self, tmp_path):
+        tree = {"layer": {"kernel": jnp.asarray(
+            np.random.default_rng(3).standard_normal((64, 32), np.float32))},
+            "norm": {"scale": np.ones((32,), np.float32)}}
+        cfg = configs.get_smoke_config(ARCH)
+        out = tmp_path / "small"
+        write_artifact(out, arch=ARCH, model_cfg=cfg, ptqtp_cfg=PCFG,
+                       params=tree)
+        return out
+
+    def test_checksum_corruption_detected(self, tmp_path):
+        out = self._small_artifact(tmp_path)
+        m = read_manifest(out)
+        buf = m["tensors"]["/layer/kernel"]["buffers"]["t1p"]
+        p = out / buf["shard"]
+        raw = bytearray(p.read_bytes())
+        raw[buf["offset"]] ^= 0xFF
+        p.write_bytes(raw)
+        load_artifact(out)  # lazy load does not touch pages
+        with pytest.raises(ArtifactError, match=r"checksum mismatch.*t1p"):
+            load_artifact(out, verify=True)
+        with pytest.raises(ArtifactError):
+            verify_artifact(out)
+
+    def test_overwrite_keeps_old_artifact_until_finalize(self, tmp_path):
+        """A crashed --overwrite re-quantize must not destroy the last good
+        artifact: the old directory is only replaced at finalize()."""
+        out = self._small_artifact(tmp_path)
+        cfg = configs.get_smoke_config(ARCH)
+        tree = {"layer": {"kernel": jnp.asarray(np.random.default_rng(4)
+                          .standard_normal((64, 32), np.float32))}}
+
+        class Interrupt(Exception):
+            pass
+
+        def interrupter(ev):
+            raise Interrupt
+
+        with pytest.raises(Interrupt):
+            write_artifact(out, arch=ARCH, model_cfg=cfg, ptqtp_cfg=PCFG,
+                           params=tree, overwrite=True, progress=interrupter)
+        load_artifact(out, verify=True)  # old artifact still intact
+        write_artifact(out, arch=ARCH, model_cfg=cfg, ptqtp_cfg=PCFG,
+                       params=tree, overwrite=True)
+        new_tree, _ = load_artifact(out, verify=True)
+        assert "norm" not in new_tree  # now the replacement is live
+
+    def test_incomplete_artifact_rejected(self, tmp_path):
+        out = self._small_artifact(tmp_path)
+        m = json.loads((out / "manifest.json").read_text())
+        m["complete"] = False
+        (out / "manifest.json").write_text(json.dumps(m))
+        with pytest.raises(ArtifactError, match="incomplete"):
+            load_artifact(out)
+
+    def test_truncated_shard_rejected(self, tmp_path):
+        out = self._small_artifact(tmp_path)
+        m = read_manifest(out)
+        p = out / m["shards"][0]["file"]
+        with open(p, "r+b") as f:
+            f.truncate(m["shards"][0]["nbytes"] - 8)
+        with pytest.raises(ArtifactError, match="missing or truncated"):
+            load_artifact(out)
+
+    def test_wrong_version_rejected(self, tmp_path):
+        out = self._small_artifact(tmp_path)
+        m = json.loads((out / "manifest.json").read_text())
+        m["format_version"] = 999
+        (out / "manifest.json").write_text(json.dumps(m))
+        with pytest.raises(ArtifactError, match="format_version"):
+            read_manifest(out)
+
+
+class TestStreamingMemory:
+    def test_peak_incremental_host_alloc_is_o_largest_kernel(self, tmp_path):
+        """Acceptance: the writer's tracemalloc peak stays O(largest kernel)
+        while the tree it writes is many kernels large."""
+        import tracemalloc
+
+        rng = np.random.default_rng(0)
+        kernel_bytes = 512 * 512 * 4  # 1 MiB each
+        n_kernels = 8
+        tree = {"layers": {
+            f"l{i}": {"kernel": rng.standard_normal(
+                (512, 512)).astype(np.float32)} for i in range(n_kernels)},
+            "final_norm": {"scale": np.ones((512,), np.float32)}}
+        cfg = configs.get_smoke_config(ARCH)
+        pcfg = PTQTPConfig(group_size=128, t_max=2)
+        # warm the jit caches (compilation allocates unboundedly many Python
+        # objects and would swamp the measurement)
+        write_artifact(tmp_path / "warm", arch=ARCH, model_cfg=cfg,
+                       ptqtp_cfg=pcfg, params=tree)
+        tracemalloc.start()
+        write_artifact(tmp_path / "cold", arch=ARCH, model_cfg=cfg,
+                       ptqtp_cfg=pcfg, params=tree)
+        _, peak = tracemalloc.get_traced_memory()
+        tracemalloc.stop()
+        total = n_kernels * kernel_bytes
+        assert peak < 3 * kernel_bytes, (peak, kernel_bytes)
+        assert peak < total / 2, (peak, total)  # decisively not O(model)
+
+
+class TestCheckpointSource:
+    def test_quantize_streams_from_checkpoint(self, tmp_path):
+        """--from-checkpoint path: leaves stream lazily out of the npz and
+        quantize bit-identically to the in-memory walk."""
+        from repro.artifacts import iter_checkpoint_leaves
+        from repro.runtime.checkpoint import save_checkpoint
+
+        rng = np.random.default_rng(11)
+        params = {"layer": {"kernel": rng.standard_normal(
+            (64, 32)).astype(np.float32)},
+            "norm": {"scale": np.ones((32,), np.float32)}}
+        save_checkpoint(tmp_path / "ckpt", 5, {"params": params})
+        cfg = configs.get_smoke_config(ARCH)
+        out = tmp_path / "art"
+        write_artifact(out, arch=ARCH, model_cfg=cfg, ptqtp_cfg=PCFG,
+                       params=iter_checkpoint_leaves(tmp_path / "ckpt"))
+        tree, _ = load_artifact(out)
+        qk_direct = quantize_kernel(jnp.asarray(params["layer"]["kernel"]),
+                                    PCFG)
+        qk = tree["layer"]["kernel"]
+        np.testing.assert_array_equal(np.asarray(qk_direct.t1p),
+                                      np.asarray(qk.t1p))
+        np.testing.assert_array_equal(np.asarray(params["norm"]["scale"]),
+                                      np.asarray(tree["norm"]["scale"]))
+
+
+class TestQuantizeCLI:
+    def test_cli_smoke(self, tmp_path, capsys):
+        from repro.launch.quantize import main
+
+        out = main(["--out", str(tmp_path / "cli"), "--t-max", "3",
+                    "--group-size", "32", "--verify"])
+        captured = capsys.readouterr().out
+        assert "done in" in captured and "checksums OK" in captured
+        m = read_manifest(out)
+        assert m["complete"] and m["stats"]["n_quantized"] >= 5

@@ -50,6 +50,39 @@ class TestTreeWalk:
                           if "experts" in p and t == "QuantizedKernel"]
         assert expert_kernels  # stacked (L, in, out) kernels quantize too
 
+    def test_report_bytes_match_packed_buffers(self):
+        """Report after_bytes must equal the exact packed footprint
+        (QuantizedKernel.nbytes()) for every entry — including 4-D MoE
+        kernels (L, E, d_in, d_out), whose leading dims were once
+        under-counted (only ndim == 3 multiplied the leading dim)."""
+        cfg, params = _smoke_params("deepseek-moe-16b")
+        qp, report = quantize_tree(params, PTQTPConfig(group_size=32, t_max=2))
+
+        leaves = {}
+
+        def walk(node, path=""):
+            if isinstance(node, dict):
+                for k, v in node.items():
+                    walk(v, f"{path}/{k}")
+            else:
+                leaves[path] = node
+
+        walk(qp)
+        stacked = 0
+        for path, info in report.items():
+            if path == "__total__":
+                continue
+            qk = leaves[path]
+            assert isinstance(qk, QuantizedKernel)
+            assert info["after_bytes"] == qk.nbytes(), (path, info)
+            stacked += len(info["shape"]) >= 4
+        assert stacked >= 1  # the regression case: 4-D expert kernels
+        tot = report["__total__"]
+        assert tot["after_bytes"] == sum(
+            leaf.nbytes() for leaf in leaves.values()
+            if isinstance(leaf, QuantizedKernel))
+        assert tot["compression"] == tot["before_bytes"] / tot["after_bytes"]
+
     def test_compression_ratio_near_paper(self):
         """Full-size kernel: compression vs fp16 ≈ 3.76× (App. A.3)."""
         w = jnp.asarray(np.random.default_rng(0)
