@@ -6,7 +6,11 @@ Three sections, one JSON:
     the same synthetic weight tree: wall-clock throughput and peak RSS
     growth (``ru_maxrss`` delta across the measured phase). Each path runs
     in a fresh subprocess (``--_child``) so one path's peak cannot shadow
-    the other's.
+    the other's. The streaming path is measured both with fsync group
+    commit (``stream``, the default: fsync every N tensors, manifest only
+    advancing after the fsync) and with PR-3's per-tensor fsync
+    (``stream_fsync1``) — the delta is the write path's durability
+    overhead, which group commit amortizes.
   * **boot** — server time-to-first-token booting the same smoke model two
     ways: quantize-at-boot (the pre-PR-3 ``launch/serve.py`` pipeline) vs
     memory-mapped artifact boot (``--artifact``). The artifact is prepared
@@ -92,11 +96,15 @@ def _child(mode: str, n_kernels: int, d: int, out_json: str):
         # tree at once — O(model)
         resident_mb = report["__total__"]["after_bytes"] / 1e6
     else:
+        # "stream" = default fsync group commit; "stream_fsync1" = PR-3's
+        # per-tensor durability
+        commit_every = 1 if mode == "stream_fsync1" else None
         with tempfile.TemporaryDirectory() as td:
             out = write_artifact(
                 Path(td) / "art", arch="qwen2-1.5b",
                 model_cfg=configs.get_smoke_config("qwen2-1.5b"),
-                ptqtp_cfg=pcfg, params=tree, compute_error=False)
+                ptqtp_cfg=pcfg, params=tree, compute_error=False,
+                commit_every=commit_every)
             m = json.loads((out / "manifest.json").read_text())
             n_q = m["stats"]["n_quantized"]
             # what the streaming writer holds live: one tensor's buffers at
@@ -116,11 +124,13 @@ def _child(mode: str, n_kernels: int, d: int, out_json: str):
 
 
 def _bench_write(rows, log, quick):
+    from repro.artifacts.writer import ArtifactWriter
+
     n_kernels, d = (6, 256) if quick else (16, 1024)
     env = dict(os.environ)
     env["PYTHONPATH"] = f"{ROOT / 'src'}" + (
         os.pathsep + env["PYTHONPATH"] if env.get("PYTHONPATH") else "")
-    for mode in ("inmem", "stream"):
+    for mode in ("inmem", "stream", "stream_fsync1"):
         with tempfile.NamedTemporaryFile(suffix=".json") as f:
             subprocess.run(
                 [sys.executable, str(Path(__file__).resolve()), "--_child",
@@ -145,6 +155,17 @@ def _bench_write(rows, log, quick):
     rows["write_resident_ratio"] = (
         rows["write_inmem_resident_quantized_mb"]
         / max(rows["write_stream_resident_quantized_mb"], 1e-9))
+    # fsync group commit: the durability overhead it amortizes, and whether
+    # streaming now beats the in-memory walk outright
+    rows["write_group_commit_every"] = ArtifactWriter.DEFAULT_COMMIT_EVERY
+    rows["write_fsync_batching_speedup"] = (
+        rows["write_stream_fsync1_s"] / max(rows["write_stream_s"], 1e-9))
+    rows["write_stream_vs_inmem_speedup"] = (
+        rows["write_inmem_s"] / max(rows["write_stream_s"], 1e-9))
+    log(f"bench_artifacts,write_fsync_batching_speedup,"
+        f"{rows['write_fsync_batching_speedup']:.2f}")
+    log(f"bench_artifacts,write_stream_vs_inmem_speedup,"
+        f"{rows['write_stream_vs_inmem_speedup']:.2f}")
 
 
 # ---------------------------------------------------------------------------
@@ -153,17 +174,16 @@ def _bench_write(rows, log, quick):
 
 def _boot_ttft(params_fn, prompt, max_new):
     from repro import configs
-    from repro.serving.engine import EngineConfig, Request, ServingEngine
+    from repro.serving import (EngineConfig, SamplingParams, ServingEngine)
 
     cfg = configs.get_smoke_config("qwen2-1.5b")
     t0 = time.perf_counter()
     params = params_fn()
     eng = ServingEngine(params, cfg, EngineConfig(max_slots=4, capacity=128,
                                                   seed=0))
-    eng.submit(Request(uid=0, prompt=prompt, max_new_tokens=max_new))
-    done = eng.run()
-    ttft = done[0].t_first - t0
-    return ttft, tuple(done[0].output)
+    h = eng.submit(prompt, SamplingParams(max_new_tokens=max_new))
+    res = h.result()
+    return res.t_first - t0, res.tokens
 
 
 def _bench_boot(rows, log, quick, tmp_dir):
@@ -243,8 +263,8 @@ if __name__ == "__main__":
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--quick", action="store_true",
                     help="CI smoke sizes (seconds, not minutes)")
-    ap.add_argument("--_child", choices=("inmem", "stream"), default=None,
-                    help=argparse.SUPPRESS)
+    ap.add_argument("--_child", choices=("inmem", "stream", "stream_fsync1"),
+                    default=None, help=argparse.SUPPRESS)
     ap.add_argument("--_n", type=int, default=8, help=argparse.SUPPRESS)
     ap.add_argument("--_d", type=int, default=1024, help=argparse.SUPPRESS)
     ap.add_argument("--_out", default=None, help=argparse.SUPPRESS)

@@ -42,7 +42,8 @@ from repro.core.ptqtp import PTQTPConfig, ptqtp_quantize
 from repro.core.quantize_model import quantize_tree
 from repro.kernels.ternary_matmul.ops import ternary_matmul
 from repro.models import decode_step, init_params
-from repro.serving.engine import (EngineConfig, Request, SerialAdmitEngine,
+from repro.serving import SamplingParams
+from repro.serving.engine import (EngineConfig, SerialAdmitEngine,
                                   ServingEngine, _merge_slot_impl)
 from repro.serving.sampling import sample_token
 
@@ -62,6 +63,9 @@ class SeedPerStepEngine(SerialAdmitEngine):
 
         self._serve_params = self.params  # seed had no pre-unpack anywhere
         self._decode = jax.jit(functools.partial(decode_step, cfg=self.cfg))
+        # the seed engine's single engine-wide RNG (v1 engines derive all
+        # draws from each request's SamplingParams.seed instead)
+        self.key = jax.random.PRNGKey(engine_cfg.seed)
 
     def _merge(self, batch_state, one_state, slot):
         # seed behavior: the eager tree walk, one device op per state leaf
@@ -76,7 +80,7 @@ class SeedPerStepEngine(SerialAdmitEngine):
         logits, self.state = self._decode(
             params=self.params, state=self.state, tokens=tokens)
         self.key, sub = jax.random.split(self.key)
-        temps = [s.temperature if s else 0.0 for s in self.slots]
+        temps = [s.params.temperature if s else 0.0 for s in self.slots]
         temp = max(temps)  # per-engine temperature (slots share a sampler)
         next_tok = np.asarray(sample_token(logits, sub, temperature=temp))
         self.steps += 1
@@ -99,13 +103,13 @@ def _time(fn, reps=5):
 
 def _timed_wave(eng, prompts, max_new):
     """Submit one wave of requests, time run(); returns (tok/s, outputs)."""
-    for i, p in enumerate(prompts):
-        eng.submit(Request(uid=i, prompt=p, max_new_tokens=max_new))
+    handles = [eng.submit(p, SamplingParams(max_new_tokens=max_new), uid=i)
+               for i, p in enumerate(prompts)]
     t0 = time.perf_counter()
-    done = eng.run()
+    eng.run()
     dt = time.perf_counter() - t0
-    n_tok = sum(len(r.output) for r in done)
-    return n_tok / dt, {r.uid: tuple(r.output) for r in done}
+    n_tok = sum(len(h.output) for h in handles)
+    return n_tok / dt, {h.uid: tuple(h.output) for h in handles}
 
 
 def _bench_engine(rows, log, quick, chunk):
@@ -126,8 +130,8 @@ def _bench_engine(rows, log, quick, chunk):
             eng = cls(p, cfg, EngineConfig(max_slots=4, capacity=128,
                                            decode_chunk=c, seed=0))
             # warm-up drains compilation (prefill buckets + decode loop)
-            eng.submit(Request(uid=-1, prompt=prompts[0],
-                               max_new_tokens=max_new))
+            eng.submit(prompts[0], SamplingParams(max_new_tokens=max_new),
+                       uid=-1)
             eng.run()
             engines[name] = eng
         tokps = {name: 0.0 for name, _, _ in variants}

@@ -53,8 +53,8 @@ from repro import configs
 from repro.core.ptqtp import PTQTPConfig
 from repro.core.quantize_model import quantize_tree
 from repro.models import init_params
-from repro.serving.engine import (EngineConfig, Request, SerialAdmitEngine,
-                                  ServingEngine)
+from repro.serving import (EngineConfig, SamplingParams, SerialAdmitEngine,
+                           ServingEngine)
 
 ROOT = Path(__file__).resolve().parents[1]
 
@@ -86,7 +86,8 @@ def _drive(eng, trace, max_new):
     while arrivals or eng.queue or any(s is not None for s in eng.slots):
         while arrivals and arrivals[0][0] <= it:
             _, prompt = arrivals.pop(0)
-            eng.submit(Request(uid=uid, prompt=prompt, max_new_tokens=max_new))
+            eng.submit(prompt, SamplingParams(max_new_tokens=max_new),
+                       uid=uid)
             uid += 1
         done.extend(eng.step())
         it += 1

@@ -1,0 +1,218 @@
+"""Serving API v1 benchmark: streaming TTFT + cancellation churn.
+
+Three sections, one JSON:
+
+  * **streaming** — requests consumed through ``RequestHandle.tokens()``
+    under a bursty arrival trace: per-request stream TTFT (submit → first
+    *yielded* token, measured at the consumer) against engine TTFT
+    (``t_first``, stamped inside the engine step that finished prefill).
+    The v1 contract says they coincide — ``stream_ttft_overhead_ms`` is
+    the measured gap, which should be dispatch noise, not an extra drain.
+  * **cancel** — slot-churn under a bursty trace where a fraction of
+    requests is cancelled mid-flight (alternating mid-prefill and
+    mid-decode): sustained tok/s of the survivors, slots freed and reused
+    (every submitted request either finishes or cancels; admissions reuse
+    cancelled slots), and survivor outputs checked bit-identical to the
+    same trace run without any cancellations — cancellation must never
+    perturb a neighbor.
+  * **determinism** — one seeded sampled request replayed alone, co-batched
+    and on the serial scheduler; records the bit-identity bool the API
+    guarantees (also asserted, with more compositions, in
+    tests/test_serving.py).
+
+``PYTHONPATH=src python benchmarks/bench_serving_api.py [--quick]``
+
+Writes benchmarks/results/BENCH_serving_api.json and mirrors it to
+BENCH_serving_api.json at the repo root.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+import time
+from pathlib import Path
+
+import jax
+import numpy as np
+
+sys.path.insert(0, str(Path(__file__).resolve().parents[1]))  # script mode
+
+from benchmarks.common import save_result
+from repro import configs
+from repro.core.ptqtp import PTQTPConfig
+from repro.core.quantize_model import quantize_tree
+from repro.models import init_params
+from repro.serving import (EngineConfig, SamplingParams, SerialAdmitEngine,
+                           ServingEngine)
+
+ROOT = Path(__file__).resolve().parents[1]
+
+
+def _prompts(n, quick, seed=0):
+    rng = np.random.default_rng(seed)
+    lens = rng.integers(2, 12 if quick else 40, size=n)
+    return [rng.integers(1, 500, size=int(l)).tolist() for l in lens]
+
+
+# ---------------------------------------------------------------------------
+# streaming: consumer-side TTFT vs engine-side TTFT
+# ---------------------------------------------------------------------------
+
+def _bench_streaming(rows, log, eng, quick):
+    n_req = 6 if quick else 16
+    max_new = 8 if quick else 16
+    handles = [eng.submit(p, SamplingParams(max_new_tokens=max_new, seed=i))
+               for i, p in enumerate(_prompts(n_req, quick))]
+    stream_ttft = {}
+    t0 = time.perf_counter()
+    # round-robin the generators: each next() drives the engine only when
+    # its request has no buffered token, so the fleet advances together
+    its = {h.uid: (h, h.tokens()) for h in handles}
+    while its:
+        for uid in list(its):
+            h, it = its[uid]
+            try:
+                next(it)
+                if uid not in stream_ttft:
+                    stream_ttft[uid] = time.perf_counter() - h.t_submit
+            except StopIteration:
+                del its[uid]
+    wall = time.perf_counter() - t0
+    n_tok = sum(len(h.output) for h in handles)
+    engine_ttft = [h.t_first - h.t_submit for h in handles]
+    gap = [stream_ttft[h.uid] - (h.t_first - h.t_submit) for h in handles]
+    rows["stream_n_requests"] = n_req
+    rows["stream_tokps"] = n_tok / wall
+    rows["stream_ttft_mean_ms"] = 1e3 * float(np.mean(list(
+        stream_ttft.values())))
+    rows["engine_ttft_mean_ms"] = 1e3 * float(np.mean(engine_ttft))
+    rows["stream_ttft_overhead_ms"] = 1e3 * float(np.mean(gap))
+    for k in ("stream_tokps", "stream_ttft_mean_ms",
+              "stream_ttft_overhead_ms"):
+        log(f"bench_serving_api,{k},{rows[k]:.3f}")
+
+
+# ---------------------------------------------------------------------------
+# cancellation churn
+# ---------------------------------------------------------------------------
+
+def _drive_with_cancels(eng, prompts, max_new, cancel_every):
+    """Submit a bursty wave; cancel every ``cancel_every``-th request at its
+    first resident observation — mid-prefill if it is still consuming its
+    prompt, mid-decode once it holds tokens. Returns survivors' outputs +
+    wall time + cancel bookkeeping. ``cancel_every=0`` disables (the
+    reference pass)."""
+    handles = [eng.submit(p, SamplingParams(max_new_tokens=max_new, seed=i))
+               for i, p in enumerate(prompts)]
+    victims = ({h.uid: h for i, h in enumerate(handles)
+                if i % cancel_every == 1} if cancel_every else {})
+    where = {"mid_prefill": 0, "mid_decode": 0}
+    t0 = time.perf_counter()
+    while eng.queue or any(s is not None for s in eng.slots):
+        eng.step()
+        for uid, v in list(victims.items()):
+            if v.done:  # finished within its admission step — missed cue
+                del victims[uid]
+                continue
+            if not any(s is v for s in eng.slots):
+                continue
+            where["mid_decode" if v.output else "mid_prefill"] += 1
+            v.cancel()  # frees the slot right now; next step refills it
+            del victims[uid]
+    wall = time.perf_counter() - t0
+    done = [h for h in handles if h.done and not h.cancelled]
+    cancelled = [h for h in handles if h.cancelled]
+    assert all(h.done for h in handles)  # nothing dangles
+    return {
+        "wall": wall,
+        "n_tok": sum(len(h.output) for h in done),
+        "outputs": {h.uid: tuple(h.output) for h in done},
+        "n_cancelled": len(cancelled),
+        "n_done": len(done),
+        "where": where,
+    }
+
+
+def _bench_cancel(rows, log, params, cfg, quick):
+    # churn-friendly shape: small decode chunks and a small prefill chunk so
+    # victims are genuinely observable mid-prefill and mid-decode (with
+    # decode_chunk >= max_new every request would finish inside its
+    # admission step and there would be nothing to cancel)
+    ecfg = EngineConfig(max_slots=4, capacity=64, decode_chunk=2,
+                        prefill_chunk=8, seed=0)
+    mk = lambda: ServingEngine(params, cfg, ecfg)
+    n_req = 8 if quick else 24
+    max_new = 12 if quick else 16
+    rng = np.random.default_rng(3)
+    lens = rng.integers(2, 24 if quick else 48, size=n_req)
+    prompts = [rng.integers(1, 500, size=int(l)).tolist() for l in lens]
+    ref = _drive_with_cancels(mk(), prompts, max_new, cancel_every=0)
+    churn = _drive_with_cancels(mk(), prompts, max_new, cancel_every=3)
+    survivors_identical = all(
+        churn["outputs"][uid] == ref["outputs"][uid]
+        for uid in churn["outputs"])
+    rows["cancel_n_requests"] = n_req
+    rows["cancel_n_cancelled"] = churn["n_cancelled"]
+    rows["cancel_n_mid_prefill"] = churn["where"]["mid_prefill"]
+    rows["cancel_n_mid_decode"] = churn["where"]["mid_decode"]
+    rows["cancel_n_completed"] = churn["n_done"]
+    rows["cancel_tokps"] = churn["n_tok"] / churn["wall"]
+    rows["nocancel_tokps"] = ref["n_tok"] / ref["wall"]
+    rows["cancel_survivors_bit_identical"] = survivors_identical
+    for k in ("cancel_tokps", "cancel_n_cancelled", "cancel_n_mid_prefill",
+              "cancel_n_mid_decode", "cancel_survivors_bit_identical"):
+        log(f"bench_serving_api,{k},{rows[k]}")
+
+
+# ---------------------------------------------------------------------------
+# determinism: the API guarantee, recorded
+# ---------------------------------------------------------------------------
+
+def _bench_determinism(rows, log, params, cfg, quick):
+    sp = SamplingParams(max_new_tokens=6 if quick else 12,
+                        temperature=0.9, seed=1234)
+    prompt = [5, 9, 17, 2, 33]
+    alone = ServingEngine(params, cfg, EngineConfig(
+        max_slots=1, capacity=64)).submit(prompt, sp).result().tokens
+    eng = ServingEngine(params, cfg, EngineConfig(max_slots=4, capacity=64))
+    h = eng.submit(prompt, sp)
+    for i in range(3):
+        eng.submit(_prompts(1, quick, seed=50 + i)[0],
+                   SamplingParams(max_new_tokens=8, temperature=2.0, seed=i))
+    cobatched = h.result().tokens
+    serial = SerialAdmitEngine(params, cfg, EngineConfig(
+        max_slots=2, capacity=64)).submit(prompt, sp).result().tokens
+    rows["determinism_bit_identical"] = (alone == cobatched == serial)
+    log(f"bench_serving_api,determinism_bit_identical,"
+        f"{rows['determinism_bit_identical']}")
+
+
+def run(log=print, quick=False):
+    rows = {}
+    cfg = configs.get_smoke_config("qwen2-1.5b")
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    qparams, _ = quantize_tree(params, PTQTPConfig(group_size=32, t_max=5))
+
+    eng = ServingEngine(qparams, cfg,
+                        EngineConfig(max_slots=4, capacity=64,
+                                     decode_chunk=8, prefill_chunk=16,
+                                     seed=0))
+    eng.warmup()
+    _bench_streaming(rows, log, eng, quick)
+    _bench_cancel(rows, log, qparams, cfg, quick)
+    _bench_determinism(rows, log, qparams, cfg, quick)
+    rows["headline_stream_ttft_overhead_ms"] = rows["stream_ttft_overhead_ms"]
+    save_result("BENCH_serving_api", rows)
+    (ROOT / "BENCH_serving_api.json").write_text(
+        json.dumps(rows, indent=1, default=float))
+    return rows
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--quick", action="store_true",
+                    help="CI smoke sizes (seconds, not minutes)")
+    args = ap.parse_args()
+    run(quick=args.quick)

@@ -8,7 +8,9 @@ This is the paper's deployment story in one script: post-training, zero
 calibration data, model-agnostic tree walk, multiplication-free serving —
 with the quantized model persisted as a versioned on-disk artifact
 (quantize once) that server processes memory-map at boot (serve many,
-without ever touching the FP weights again).
+without ever touching the FP weights again). Serving goes through the v1
+request API: ``submit(prompt, SamplingParams(...)) -> RequestHandle``,
+with the first request consumed as a token stream.
 """
 
 import argparse
@@ -23,7 +25,7 @@ from benchmarks.common import perplexity, trained_eval_model
 from repro.artifacts import load_artifact, write_artifact
 from repro.core.ptqtp import PTQTPConfig
 from repro.data.tokenizer import ByteTokenizer
-from repro.serving.engine import EngineConfig, Request, ServingEngine
+from repro.serving import EngineConfig, SamplingParams, ServingEngine
 
 PROMPTS = [
     "12 plus 30 equals",
@@ -65,28 +67,34 @@ def main():
           f"in {t_quant:.1f}s, memory-mapped back in {t_load * 1e3:.0f}ms; "
           f"ppl={perplexity(qparams, cfg, n_batches=4):.3f}")
 
-    # --- 3. serve batched requests from both models -----------------------
+    # --- 3. serve batched requests from both models (Serving API v1) ------
     # FP32 serves from host memory; PTQTP boots straight off the artifact —
     # the bucketed scheduler's bounded compile set is fully precompiled by
-    # warmup() in both cases.
+    # warmup() in both cases. Requests go through submit(prompt,
+    # SamplingParams) -> RequestHandle; the first request is consumed as a
+    # token stream, the rest through blocking result()s. Per-request seeds
+    # make any sampled request reproducible regardless of its batch-mates.
     tok = ByteTokenizer()
     for tag, p in (("fp32", params), ("ptqtp-1.58b artifact", qparams)):
         eng = ServingEngine(p, cfg, EngineConfig(max_slots=4, capacity=128,
                                                  prefill_chunk=32))
         eng.warmup()
-        for i, prompt in enumerate(PROMPTS):
-            eng.submit(Request(uid=i, prompt=tok.encode(prompt, eos=False),
-                               max_new_tokens=args.max_new))
+        handles = [eng.submit(tok.encode(prompt, eos=False),
+                              SamplingParams(max_new_tokens=args.max_new,
+                                             seed=i))
+                   for i, prompt in enumerate(PROMPTS)]
         t0 = time.time()
-        done = eng.run()
-        n_tok = sum(len(r.output) for r in done)
-        ttft = 1e3 * max(r.t_first - r.t_submit for r in done)
-        print(f"[3] {tag}: {len(done)} reqs, {n_tok} tokens, "
+        streamed = "".join(tok.decode([t]) for t in handles[0].tokens())
+        results = [h.result() for h in handles]
+        n_tok = sum(len(r.tokens) for r in results)
+        ttft = 1e3 * max(r.ttft for r in results)
+        print(f"[3] {tag}: {len(results)} reqs, {n_tok} tokens, "
               f"{n_tok / (time.time() - t0):.1f} tok/s, "
               f"worst ttft {ttft:.0f}ms, "
               f"{eng.compile_stats()['n_prefill_compiles']} prefill programs")
-        for r in sorted(done, key=lambda r: r.uid)[:3]:
-            text = tok.decode(r.output).split(".")[0]
+        print(f"      {PROMPTS[0]!r} ~> {streamed.split('.')[0]!r} (streamed)")
+        for r in sorted(results, key=lambda r: r.uid)[1:3]:
+            text = tok.decode(list(r.tokens)).split(".")[0]
             print(f"      {PROMPTS[r.uid]!r} -> {text!r}")
 
 

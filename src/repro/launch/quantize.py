@@ -61,6 +61,10 @@ def main(argv=None):
     ap.add_argument("--group-size", type=int, default=0,
                     help="PTQTP group size G (0 → min(128, d_model))")
     ap.add_argument("--t-max", type=int, default=20)
+    ap.add_argument("--commit-every", type=int, default=None, metavar="N",
+                    help="fsync group-commit size: make tensors durable "
+                         "every N commits (1 = per-tensor, the slowest but "
+                         "finest-grained resume; default 8)")
     ap.add_argument("--no-resume", action="store_true",
                     help="ignore any staging manifest and restart")
     ap.add_argument("--overwrite", action="store_true",
@@ -95,7 +99,7 @@ def main(argv=None):
         args.out, arch=args.arch, model_cfg=cfg, ptqtp_cfg=pcfg,
         params=params, compute_error=not args.no_error_stats,
         progress=progress, resume=not args.no_resume,
-        overwrite=args.overwrite)
+        overwrite=args.overwrite, commit_every=args.commit_every)
     dt = time.time() - t0
 
     from repro.artifacts import read_manifest

@@ -1,19 +1,25 @@
 """Serving launcher: quantize with PTQTP (or boot a prebuilt artifact), then
-serve batched requests.
+serve batched requests through the v1 request API.
 
 ``python -m repro.launch.serve --arch qwen2-1.5b --requests 8``
-``python -m repro.launch.serve --artifact artifacts/qwen``
+``python -m repro.launch.serve --artifact artifacts/qwen --temperature 0.8``
 
 Pipeline: init (or load) weights → PTQTP-quantize every linear (the paper's
 single-pass, calibration-free recipe) → continuous-batching engine drives
 bucketed/chunked prefill + fused decode with the multiplication-free ternary
-representation. ``--artifact PATH`` replaces the first two stages with a
-memory-mapped load of a ``repro.launch.quantize`` artifact — the server
-never touches FP weights and pays no quantization at boot (the
-"quantize once, serve many" deployment path; the startup summary breaks the
-boot down per phase so the win is visible). ``--scheduler serial`` selects
-the PR-1 serial-admit baseline (one jit per prompt length) for A/B
-comparison.
+representation. Requests go through ``submit(prompt, SamplingParams(...))``
+→ ``RequestHandle`` (the Serving API v1 surface — per-request seed, top-k/
+top-p, stop ids, streaming, cancellation); ``--stream`` consumes the first
+request token by token through ``handle.tokens()`` to demonstrate the
+streaming path. Prompts longer than ``--capacity`` are clipped at admission
+— the handle's ``truncated`` flag surfaces it and this launcher warns
+instead of dropping tokens invisibly. ``--artifact PATH`` replaces the
+first two stages with a memory-mapped load of a ``repro.launch.quantize``
+artifact — the server never touches FP weights and pays no quantization at
+boot (the "quantize once, serve many" deployment path; the startup summary
+breaks the boot down per phase so the win is visible). ``--scheduler
+serial`` selects the PR-1 serial-admit baseline (one jit per prompt length)
+for A/B comparison.
 """
 
 from __future__ import annotations
@@ -29,8 +35,8 @@ from repro.core.ptqtp import PTQTPConfig
 from repro.core.quantize_model import quantize_tree
 from repro.data.tokenizer import ByteTokenizer
 from repro.models import init_params
-from repro.serving.engine import (EngineConfig, Request, SerialAdmitEngine,
-                                  ServingEngine)
+from repro.serving import (EngineConfig, SamplingParams, SerialAdmitEngine,
+                           ServingEngine)
 
 PROMPTS = [
     "the model computes two trit planes",
@@ -51,6 +57,15 @@ def main(argv=None):
                     help="re-checksum every artifact buffer at boot")
     ap.add_argument("--requests", type=int, default=4)
     ap.add_argument("--max-new", type=int, default=16)
+    ap.add_argument("--temperature", type=float, default=0.0,
+                    help="per-request sampling temperature (0 = greedy)")
+    ap.add_argument("--top-k", type=int, default=0,
+                    help="per-request top-k truncation (0 = off)")
+    ap.add_argument("--top-p", type=float, default=1.0,
+                    help="per-request nucleus sampling mass (1.0 = off)")
+    ap.add_argument("--stream", action="store_true",
+                    help="consume the first request token-by-token through "
+                         "RequestHandle.tokens()")
     ap.add_argument("--slots", type=int, default=4)
     ap.add_argument("--capacity", type=int, default=128)
     ap.add_argument("--prefill-chunk", type=int, default=32,
@@ -64,7 +79,10 @@ def main(argv=None):
     ap.add_argument("--no-quantize", action="store_true",
                     help="serve FP weights (baseline)")
     ap.add_argument("--t-max", type=int, default=20)
-    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--seed", type=int, default=0,
+                    help="base seed; request i samples from its own "
+                         "stream seeded seed+i (reproducible regardless "
+                         "of co-batched traffic)")
     args = ap.parse_args(argv)
 
     boot = {}  # phase -> seconds (startup breakdown)
@@ -118,26 +136,47 @@ def main(argv=None):
               f" prefill programs in {boot['warmup']:.1f}s")
     breakdown = " ".join(f"{k}={v:.2f}s" for k, v in boot.items())
     print(f"[serve] boot {time.time() - t_boot:.2f}s ({breakdown})")
+
+    handles = []
     for i in range(args.requests):
-        prompt = PROMPTS[i % len(PROMPTS)]
-        engine.submit(Request(uid=i, prompt=tok.encode(prompt, eos=False),
-                              max_new_tokens=args.max_new))
+        prompt = tok.encode(PROMPTS[i % len(PROMPTS)], eos=False)
+        h = engine.submit(prompt, SamplingParams(
+            max_new_tokens=args.max_new, temperature=args.temperature,
+            top_k=args.top_k, top_p=args.top_p, seed=args.seed + i))
+        if h.truncated:
+            print(f"[serve] WARNING: request {h.uid} prompt "
+                  f"({len(prompt)} tokens) exceeds --capacity "
+                  f"{args.capacity}; only the last {args.capacity} tokens "
+                  "will be served (result carries truncated=True)")
+        handles.append(h)
+
     t0 = time.time()
-    done = engine.run()
+    if args.stream and handles:
+        # the streaming path: tokens arrive in the engine step that produced
+        # them (first one in the step its prefill completed); the rest of
+        # the fleet advances through the same steps
+        pieces = []
+        for t in handles[0].tokens():
+            pieces.append(tok.decode([t]))
+        print(f"[serve] streamed [{handles[0].uid}] -> {''.join(pieces)!r} "
+              f"(ttft {1e3 * (handles[0].t_first - handles[0].t_submit):.1f}"
+              "ms)")
+    results = [h.result() for h in handles]  # drives any remaining work
     dt = time.time() - t0
-    n_tok = sum(len(r.output) for r in done)
-    ttft = sorted(1e3 * (r.t_first - r.t_submit) for r in done)
+    n_tok = sum(len(r.tokens) for r in results)
+    ttft = sorted(1e3 * r.ttft for r in results)
     stats = engine.compile_stats()
-    print(f"[serve] {len(done)} requests, {n_tok} tokens in {dt:.2f}s "
+    print(f"[serve] {len(results)} requests, {n_tok} tokens in {dt:.2f}s "
           f"({n_tok / max(dt, 1e-9):.1f} tok/s, {engine.steps} decode steps, "
           f"{engine.prefill_steps} prefill steps)")
     print(f"[serve] ttft ms: median {ttft[len(ttft) // 2]:.1f} "
           f"max {ttft[-1]:.1f}; compiles: {stats['n_prefill_compiles']} "
           f"prefill {sorted(stats['prefill_bucket_lengths'])} "
           f"+ {stats['n_decode_compiles']} decode {stats['decode_chunk_lengths']}")
-    for r in sorted(done, key=lambda r: r.uid)[:4]:
-        print(f"  [{r.uid}] -> {tok.decode(r.output)!r}")
-    return done
+    for r in sorted(results, key=lambda r: r.uid)[:4]:
+        print(f"  [{r.uid}] ({r.finish_reason}) -> "
+              f"{tok.decode(list(r.tokens))!r}")
+    return results
 
 
 if __name__ == "__main__":

@@ -1,6 +1,69 @@
-from repro.serving.engine import (EngineConfig, Request, SerialAdmitEngine,
-                                  ServingEngine)
-from repro.serving.sampling import sample_token, sample_tokens
+"""``repro.serving`` — Serving API v1: the stable request/response contract.
 
-__all__ = ["ServingEngine", "SerialAdmitEngine", "EngineConfig", "Request",
-           "sample_token", "sample_tokens"]
+Like ``repro.artifacts`` freezes the artifact manifest schema, this package
+docstring freezes the serving surface every later layer (HTTP frontend,
+sharded serving, TPU deployment) builds against. The contract, v1:
+
+Submission
+----------
+``engine.submit(prompt: list[int], params: SamplingParams = SamplingParams())
+-> RequestHandle``. ``SamplingParams`` is frozen: ``max_new_tokens``,
+``temperature`` (0 → greedy), ``top_k`` (0 → off), ``top_p`` (1.0 → off),
+``seed`` (the request's private RNG stream), ``stop`` (a set of token ids
+that terminate generation, honored in addition to the engine-wide
+``EngineConfig.eos_id``; the stop token is the last token of the output).
+
+Consumption
+-----------
+``RequestHandle.tokens()`` — a generator yielding each generated token in
+the engine step that produced it (it drives ``engine.step()`` on demand, so
+the first yield lands in the same step the prompt's prefill completes:
+stream TTFT **is** engine TTFT). ``RequestHandle.result()`` — block until
+finished, returning an immutable ``RequestResult`` (tokens, finish_reason
+``"stop" | "length" | "cancelled"``, ``truncated``, and the timing triplet
+``t_submit / t_first / t_done``). ``RequestHandle.cancel()`` — a queued
+request never admits; a resident one frees its slot immediately
+(mid-prefill or mid-decode) without perturbing co-resident requests.
+Batch callers may instead drive ``engine.step()`` / ``engine.run()``
+themselves and read the same handles afterwards — both styles compose.
+
+Determinism (the testable guarantee)
+------------------------------------
+A request's output is a pure function of (model params, prompt,
+``SamplingParams``). Every random draw comes from the request's own stream
+— token i uses ``fold_in(PRNGKey(params.seed), i)``, evaluated on device
+inside the fused decode scan — never from engine-global state. Output is
+therefore bit-identical whether the request runs alone, co-batched with
+arbitrary traffic, on ``ServingEngine`` or ``SerialAdmitEngine``, or across
+any decode/prefill chunking. Temperature 0 is pure argmax (no RNG at all)
+and matches the teacher-forced ``forward`` argmax path.
+
+Deprecated (one PR of grace)
+----------------------------
+The pre-v1 ``Request`` record still works through ``submit(Request(...))``
++ ``run()`` — the engine wraps it in a handle and mirrors
+``output/done/t_submit/t_first`` back. It will be removed next PR.
+
+Engines
+-------
+``ServingEngine`` — bucketed batched admission + chunked prefill
+interleaved with the fused multi-step decode loop (the production
+scheduler). ``SerialAdmitEngine`` — the PR-1 one-prompt-at-a-time
+admission baseline. Both implement the identical v1 contract, which is
+what makes the determinism guarantee scheduler-independent.
+"""
+
+from repro.serving.api import (Request, RequestHandle, RequestResult,
+                               SamplingParams)
+from repro.serving.engine import (EngineConfig, SerialAdmitEngine,
+                                  ServingEngine)
+from repro.serving.sampling import (request_keys, sample_token, sample_tokens,
+                                    sample_tokens_per_request,
+                                    top_k_top_p_mask)
+
+__all__ = [
+    "SamplingParams", "RequestHandle", "RequestResult", "Request",
+    "ServingEngine", "SerialAdmitEngine", "EngineConfig",
+    "sample_token", "sample_tokens", "sample_tokens_per_request",
+    "request_keys", "top_k_top_p_mask",
+]

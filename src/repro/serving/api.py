@@ -1,0 +1,219 @@
+"""Serving API v1: the request/response surface of the engine.
+
+``SamplingParams`` is the frozen per-request contract (what to generate);
+``RequestHandle`` is what ``Engine.submit`` returns (how to consume it):
+stream tokens as the engine produces them, block for the final
+``RequestResult``, or ``cancel()`` at any point. ``Request`` is the
+deprecated pre-v1 grab-bag, kept for one PR as a thin shim.
+
+Determinism contract
+--------------------
+A request's output is a pure function of ``(model params, prompt,
+SamplingParams)``. The engine derives every random draw for a request from
+``SamplingParams.seed`` alone: the i-th generated token (i = 0 for the
+token sampled as prefill completes) is drawn with the key
+``fold_in(PRNGKey(seed), i)``. No draw consults engine-global state, so
+the output cannot depend on co-batched traffic, the scheduler
+(``ServingEngine`` vs ``SerialAdmitEngine``), decode/prefill chunk sizes,
+or the order requests were admitted. Temperature 0 is pure argmax and uses
+no randomness at all.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any, FrozenSet, Iterable, Iterator, List, Optional
+
+FINISH_STOP = "stop"          # hit a stop-token id (incl. EngineConfig.eos_id)
+FINISH_LENGTH = "length"      # produced max_new_tokens
+FINISH_CANCELLED = "cancelled"
+
+
+@dataclasses.dataclass(frozen=True)
+class SamplingParams:
+    """Frozen per-request generation parameters.
+
+    Attributes:
+      max_new_tokens: token budget (the request finishes with reason
+        ``"length"`` when it is reached).
+      temperature: 0 → greedy argmax (no randomness); > 0 → sample from
+        ``softmax(logits / temperature)``.
+      top_k: keep only the k highest-probability tokens (0 → disabled).
+      top_p: nucleus sampling — keep the smallest prefix of the
+        probability-sorted vocabulary whose cumulative mass reaches
+        ``top_p`` (1.0 → disabled). Composes with ``top_k`` (both masks
+        apply).
+      seed: the request's private RNG stream (see module docstring); two
+        requests with the same prompt and params produce identical output
+        on any scheduler, in any fleet.
+      stop: token ids that terminate generation (the stop token itself is
+        the last token of the output, matching EOS semantics). The
+        engine-wide ``EngineConfig.eos_id`` is always honored in addition.
+    """
+
+    max_new_tokens: int = 16
+    temperature: float = 0.0
+    top_k: int = 0
+    top_p: float = 1.0
+    seed: int = 0
+    stop: FrozenSet[int] = frozenset()
+
+    def __post_init__(self):
+        object.__setattr__(self, "stop", frozenset(self.stop))
+        if self.max_new_tokens < 1:
+            raise ValueError("max_new_tokens must be >= 1")
+        if self.temperature < 0.0:
+            raise ValueError("temperature must be >= 0")
+        if self.top_k < 0:
+            raise ValueError("top_k must be >= 0 (0 disables)")
+        if not 0.0 < self.top_p <= 1.0:
+            raise ValueError("top_p must be in (0, 1] (1.0 disables)")
+
+    @property
+    def needs_mask(self) -> bool:
+        """True when sampling must run the top-k/top-p support mask."""
+        return self.top_k > 0 or self.top_p < 1.0
+
+
+@dataclasses.dataclass(frozen=True)
+class RequestResult:
+    """Immutable completion record returned by ``RequestHandle.result()``."""
+
+    uid: int
+    tokens: tuple                # generated token ids (prompt not included)
+    finish_reason: str           # "stop" | "length" | "cancelled"
+    truncated: bool              # prompt was clipped to engine capacity
+    t_submit: float              # perf_counter at submit()
+    t_first: float               # perf_counter at first generated token
+    t_done: float                # perf_counter at finish/cancel
+
+    @property
+    def ttft(self) -> float:
+        """Submit → first token, seconds (0.0 if no token was produced)."""
+        return max(self.t_first - self.t_submit, 0.0) if self.t_first else 0.0
+
+
+class RequestHandle:
+    """Live view of one in-flight request; returned by ``Engine.submit``.
+
+    The handle *drives* the engine on demand: iterating ``tokens()`` or
+    calling ``result()`` calls ``engine.step()`` until the request
+    progresses, so a single-request caller never needs to touch the engine
+    loop — while a batch caller may keep calling ``engine.step()`` (or
+    ``run()``) itself and just read handles afterwards. Both styles
+    compose: a step produces tokens for every resident request at once.
+    """
+
+    def __init__(self, engine: Any, uid: int, prompt: List[int],
+                 params: SamplingParams):
+        self.uid = uid
+        self.prompt = list(prompt)
+        self.params = params
+        self.output: List[int] = []   # generated tokens, grows per step
+        self.finish_reason: Optional[str] = None
+        self.truncated = False
+        self.t_submit = 0.0
+        self.t_first = 0.0
+        self.t_done = 0.0
+        self._engine = engine
+        self._stop_ids: FrozenSet[int] = params.stop
+        self._legacy = None           # deprecated Request mirror, if any
+
+    # ------------------------------------------------------------ lifecycle
+    @property
+    def done(self) -> bool:
+        return self.finish_reason is not None
+
+    @property
+    def cancelled(self) -> bool:
+        return self.finish_reason == FINISH_CANCELLED
+
+    def tokens(self) -> Iterator[int]:
+        """Yield each generated token as the engine step producing it
+        completes (the first yield lands in the same engine step that
+        finishes the prompt's prefill — stream TTFT is engine TTFT).
+
+        Drives ``engine.step()`` while no new token is buffered; safe to
+        interleave with other handles' iterators or external ``step()``
+        calls.
+        """
+        i = 0
+        while True:
+            while i < len(self.output):
+                yield self.output[i]
+                i += 1
+            if self.done:
+                return
+            self._engine.step()
+
+    def result(self) -> RequestResult:
+        """Drive the engine until this request finishes; return the record."""
+        while not self.done:
+            self._engine.step()
+        return RequestResult(
+            uid=self.uid, tokens=tuple(self.output),
+            finish_reason=self.finish_reason, truncated=self.truncated,
+            t_submit=self.t_submit, t_first=self.t_first, t_done=self.t_done)
+
+    def cancel(self) -> bool:
+        """Cancel the request: a queued request never admits; a resident one
+        frees its slot immediately (mid-prefill or mid-decode — the next
+        admission reuses the slot cleanly). Tokens already generated stay
+        in ``output``. Returns False if the request had already finished.
+        """
+        return self._engine.cancel(self)
+
+
+@dataclasses.dataclass
+class Request:
+    """DEPRECATED pre-v1 request record (one-PR compatibility shim).
+
+    ``engine.submit(Request(...))`` still works: the engine wraps it in a
+    ``RequestHandle`` carrying ``SamplingParams(max_new_tokens=...,
+    temperature=..., seed=EngineConfig.seed)`` and mirrors
+    ``output/done/t_submit/t_first`` back onto this object, so pre-v1
+    callers of ``submit`` + ``run()`` observe the old behavior. New code
+    should call ``submit(prompt, SamplingParams(...))`` and use the
+    returned ``RequestHandle``.
+    """
+
+    uid: int
+    prompt: List[int]
+    max_new_tokens: int = 16
+    temperature: float = 0.0
+    # filled by the engine:
+    output: List[int] = dataclasses.field(default_factory=list)
+    done: bool = False
+    t_submit: float = 0.0
+    t_first: float = 0.0
+
+
+def make_handle(engine: Any, prompt: Any, params: Optional[SamplingParams],
+                uid: Optional[int], default_seed: int) -> RequestHandle:
+    """Normalize ``submit``'s inputs (new-style or deprecated ``Request``)
+    into a ``RequestHandle``; stamps ``t_submit`` and mirrors the legacy
+    object when given one."""
+    if isinstance(prompt, Request):
+        if params is not None or uid is not None:
+            raise TypeError("submit(Request) takes no params/uid")
+        req = prompt
+        h = RequestHandle(engine, req.uid, req.prompt, SamplingParams(
+            max_new_tokens=req.max_new_tokens, temperature=req.temperature,
+            seed=default_seed))
+        h.output = req.output          # shared list: legacy sees every token
+        h._legacy = req
+    else:
+        if isinstance(prompt, (str, bytes)):
+            raise TypeError("prompt must be a sequence of token ids, not "
+                            "text — tokenize first")
+        if isinstance(prompt, Iterable):
+            prompt = list(prompt)
+        h = RequestHandle(engine, uid if uid is not None else -1, prompt,
+                          params if params is not None else SamplingParams())
+    if not h.prompt:
+        raise ValueError("empty prompt")
+    h.t_submit = time.perf_counter()
+    if h._legacy is not None:
+        h._legacy.t_submit = h.t_submit
+    return h

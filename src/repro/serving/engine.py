@@ -1,34 +1,39 @@
-"""Continuous-batching serving engine: bucketed batched prefill, chunked
-prefill interleaved with a fused multi-step decode loop.
+"""Continuous-batching serving engine behind the v1 request API: bucketed
+batched prefill, chunked prefill interleaved with a fused multi-step decode
+loop, per-request RNG, streaming handles, cancellation.
 
-Slot-based continuous batching (vLLM-style, adapted to fixed-shape JAX):
+Request lifecycle (Serving API v1 — see ``repro.serving.api``):
 
-  * the batch has `max_slots` fixed slots → one jit'd decode loop for the
-    whole fleet of in-flight requests (no recompilation as requests come
-    and go);
-  * **bucketed admission** — each step the wait queue drains into *all*
-    free slots at once; the newly admitted rows (plus any rows still
-    consuming their prompt) advance through one `prefill_chunk` dispatch
-    whose length is the power-of-two bucket of the longest remaining need,
-    capped at ``prefill_chunk``. One compiled function serves every
-    admission batch at a given bucket, so the prefill compile cache is
-    O(log prefill_chunk) ⊆ O(log capacity) — not one entry per distinct
-    prompt length (the PR-1 behavior, kept as `SerialAdmitEngine`);
-  * **chunked prefill** — a prompt longer than ``prefill_chunk`` is
-    consumed across successive steps, each interleaved with a decode chunk
-    for the rows that are already generating: a long prompt no longer
-    stalls the in-flight decode fleet. Rows mid-prefill ride through the
-    decode dispatch with ``active=False`` (state frozen, cache writes
-    dropped), and free/decoding rows ride through the prefill dispatch with
-    ``lengths=0`` (complete no-op) — both dispatches keep one fixed shape;
-  * finished slots (EOS / max_tokens) are freed immediately and refilled
-    from the wait queue on the next step — decode never stalls on
-    stragglers.
+  * ``submit(prompt, SamplingParams(...)) -> RequestHandle`` enqueues; the
+    handle exposes ``tokens()`` (a generator that drives ``step()`` on
+    demand and yields each token in the engine step that produced it),
+    ``result()`` (block until finished), ``cancel()`` (frees the slot
+    immediately, mid-prefill or mid-decode), plus ``t_submit/t_first/
+    t_done`` and a ``truncated`` flag when the prompt was clipped to
+    ``capacity``;
+  * ``step()`` advances the whole fleet one engine step (admission +
+    prefill chunk + decode chunk) and returns the requests that finished;
+  * ``run()`` drives until drained — with the deprecated ``Request``
+    record, this is the pre-v1 shim surface (one PR of compatibility).
 
-Decode fast path (PR 1, unchanged): ``decode_chunk`` tokens per host
-round-trip via one jitted ``lax.scan`` fusing decode_step + on-device
-per-slot sampling, state donated on accelerators, per-slot temperature and
-EOS freezing on device.
+Scheduling (unchanged from PR 2): the batch has ``max_slots`` fixed slots →
+one jit'd decode loop for the whole fleet; **bucketed admission** drains the
+wait queue into all free slots per step and advances every mid-prompt row by
+one power-of-two prefill-chunk bucket in a single fixed-shape dispatch
+(prefill compile cache O(log prefill_chunk)); **chunked prefill** interleaves
+long prompts with (shortened) decode chunks; finished or cancelled slots free
+immediately and refill next step.
+
+Per-request RNG (the v1 determinism contract): each slot carries its
+request's ``SamplingParams.seed``; the i-th generated token is drawn with
+``fold_in(PRNGKey(seed), i)`` *on device inside the decode scan* (and for
+i = 0 by the prefill finisher / serial admitter). No draw touches
+engine-global state, so a request's output is a pure function of (params,
+prompt, SamplingParams) — invariant to fleet composition, scheduler
+(`ServingEngine` vs `SerialAdmitEngine`), and chunk boundaries. Stop-token
+ids (``SamplingParams.stop`` ∪ ``EngineConfig.eos_id``) freeze the row
+on device and truncate the host-side stream at the first hit, wherever in a
+chunk (or in the prefill-finisher sample) it lands.
 
 Works identically for dense and PTQTP-quantized params (`dense` dispatches
 on the kernel leaf type), which is the paper's deployment story.
@@ -40,7 +45,7 @@ import dataclasses
 import functools
 import time
 from collections import deque
-from typing import Any, Dict, List, Optional
+from typing import Any, Dict, List, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -52,24 +57,27 @@ from repro.kernels.ternary_matmul.ops import resolve_backend
 from repro.models import (decode_step, init_decode_state, prefill,
                           prefill_chunk)
 from repro.models.common import matmul_backend
-from repro.serving.sampling import sample_token, sample_tokens
+from repro.serving.api import (FINISH_CANCELLED, FINISH_LENGTH, FINISH_STOP,
+                               Request, RequestHandle, SamplingParams,
+                               make_handle)
+from repro.serving.sampling import request_keys, sample_tokens_per_request
 
-
-@dataclasses.dataclass
-class Request:
-    uid: int
-    prompt: List[int]
-    max_new_tokens: int = 16
-    temperature: float = 0.0
-    # filled by the engine:
-    output: List[int] = dataclasses.field(default_factory=list)
-    done: bool = False
-    t_submit: float = 0.0        # perf_counter at submit()
-    t_first: float = 0.0         # perf_counter at first output token (TTFT)
+__all__ = ["EngineConfig", "ServingEngine", "SerialAdmitEngine", "Request",
+           "SamplingParams", "RequestHandle"]
 
 
 @dataclasses.dataclass(frozen=True)
 class EngineConfig:
+    """Engine-wide knobs. Per-request generation behavior (budget,
+    temperature, top-k/top-p, seed, stop ids) lives in ``SamplingParams``;
+    what remains here is fleet shape and scheduling.
+
+    ``eos_id`` is the engine-wide stop token (tokenizer property, honored
+    for every request in addition to its ``SamplingParams.stop``);
+    ``seed`` only seeds the ``SamplingParams`` synthesized for deprecated
+    ``Request`` submissions — v1 requests carry their own seed.
+    """
+
     max_slots: int = 4
     capacity: int = 256          # KV-cache length per slot
     eos_id: Optional[int] = None
@@ -173,47 +181,59 @@ def _reset_rows_impl(state, mask):
     return walk(state, "")
 
 
-def _decode_loop(params, state, tokens, temps, active, key, *,
-                 cfg, n_steps, eos_id):
-    """K fused decode steps with on-device per-slot sampling.
+def _decode_loop(params, state, tokens, temps, active, seeds, gen_idx,
+                 top_k, top_p, stops, *, cfg, n_steps, use_mask):
+    """K fused decode steps with on-device per-request sampling.
 
     Args:
-      tokens: (B,) int32 last token per slot.
-      temps:  (B,) f32 per-slot temperature (0 → greedy for that slot).
-      active: (B,) bool — decoding slots; inactive slots (free, mid-prefill,
-        or EOS-frozen) repeat their token and their state is left untouched.
+      tokens:  (B,) int32 last token per slot.
+      temps:   (B,) f32 per-slot temperature (0 → greedy for that row).
+      active:  (B,) bool — decoding slots; inactive slots (free, mid-prefill,
+        or stop-frozen) repeat their token and their state is left untouched.
+      seeds:   (B,) uint32 per-request RNG seed (``SamplingParams.seed``).
+      gen_idx: (B,) int32 tokens already generated per request — the i-th
+        token draws ``fold_in(PRNGKey(seed), i)``, so resuming a request at
+        any chunk boundary continues the identical stream.
+      top_k:   (B,) int32, 0 disables per row (traced iff ``use_mask``).
+      top_p:   (B,) f32, 1.0 disables per row (traced iff ``use_mask``).
+      stops:   (B, W) int32 stop-token ids, -1-padded (W static; a hit
+        freezes the row exactly like the pre-v1 EOS check).
     Returns:
       (new_state, toks) with toks (n_steps, B) — the sampled token per step.
     """
 
     def body(carry, _):
-        state, tok, active, key = carry
+        state, tok, active, gen = carry
         logits, state = decode_step(params, cfg, state, tok, active)
-        key, sub = jax.random.split(key)
-        nxt = sample_tokens(logits, sub, temps)
+        keys = request_keys(seeds, gen)
+        nxt = sample_tokens_per_request(
+            logits, keys, temps,
+            top_k=top_k if use_mask else None,
+            top_p=top_p if use_mask else None)
         nxt = jnp.where(active, nxt, tok)  # frozen slots repeat (host drops)
-        if eos_id is not None:
-            active = jnp.logical_and(active, nxt != eos_id)
-        return (state, nxt, active, key), nxt
+        gen = gen + active.astype(gen.dtype)
+        hit = jnp.any(nxt[:, None] == stops, axis=-1)
+        active = jnp.logical_and(active, jnp.logical_not(hit))
+        return (state, nxt, active, gen), nxt
 
     # Full unroll: the scan body is op-overhead-bound at decode shapes, and
     # unrolling lets XLA fuse across steps (measured ~40% per-token on CPU).
     (state, _, _, _), toks = jax.lax.scan(
-        body, (state, tokens, active, key), None, length=n_steps,
+        body, (state, tokens, active, gen_idx), None, length=n_steps,
         unroll=min(n_steps, 16))
     return state, toks
 
 
 class ServingEngine:
-    """Bucketed/chunked-prefill scheduler (see module docstring)."""
+    """Bucketed/chunked-prefill scheduler behind the v1 handle API (see
+    module docstring)."""
 
     def __init__(self, params, model_cfg, engine_cfg: EngineConfig):
         self.params = params
         self.cfg = model_cfg
         self.ecfg = engine_cfg
-        self.key = jax.random.PRNGKey(engine_cfg.seed)
-        self.queue: deque[Request] = deque()
-        self.slots: List[Optional[Request]] = [None] * engine_cfg.max_slots
+        self.queue: deque[RequestHandle] = deque()
+        self.slots: List[Optional[RequestHandle]] = [None] * engine_cfg.max_slots
         self.state = init_decode_state(model_cfg, engine_cfg.max_slots,
                                        engine_cfg.capacity)
         self.last_tokens = np.zeros((engine_cfg.max_slots,), np.int32)
@@ -223,28 +243,75 @@ class ServingEngine:
         # serve-side params: prefill and decode both read these, so the
         # unpack is paid once per engine, not once per dispatch
         self._serve_params = _preunpack_params(params) if pre else params
-        self._loop_cache: Dict[int, Any] = {}
+        self._loop_cache: Dict[Tuple[int, bool, int], Any] = {}
         self._prefill_cache: Dict[int, Any] = {}
         self._reset_jit = None
         # per-slot prompt progress: clipped prompt + tokens already consumed
         self._prompts: List[Optional[List[int]]] = [None] * engine_cfg.max_slots
         self._cursor: List[int] = [0] * engine_cfg.max_slots
-        self._admit_finished: List[Request] = []
-        self._slot_arrays = None  # (temps, active) cache; None → slots dirty
+        self._admit_finished: List[Any] = []
+        self._slot_arrays = None  # fleet array cache; None → slots dirty
+        self._next_uid = 0
+        self._submits = 0         # shim seed derivation (distinct streams)
         self.steps = 0           # decode steps dispatched (tokens per slot)
         self.prefill_steps = 0   # prefill_chunk dispatches
         self.admits = 0
 
     # ------------------------------------------------------------------ API
-    def submit(self, req: Request):
-        if not req.prompt:
-            raise ValueError("empty prompt")
-        req.t_submit = time.perf_counter()
-        self.queue.append(req)
+    def submit(self, prompt, params: Optional[SamplingParams] = None, *,
+               uid: Optional[int] = None) -> RequestHandle:
+        """Enqueue a request; returns its :class:`RequestHandle`.
 
-    def run(self, max_steps: int = 10_000) -> List[Request]:
-        """Drive until queue + slots drain; returns finished requests."""
-        finished: List[Request] = []
+        ``prompt`` is a token-id list (then ``params`` is its
+        ``SamplingParams``, default greedy) — or, deprecated for one PR, a
+        pre-v1 ``Request`` record, which is wrapped and mirrored.
+        """
+        if not isinstance(prompt, Request) and uid is None:
+            uid, self._next_uid = self._next_uid, self._next_uid + 1
+        # shim requests carry no seed of their own: give each its own
+        # stream rooted at the engine seed (the old engine-global key also
+        # gave two same-prompt requests distinct draws)
+        h = make_handle(self, prompt, params, uid,
+                        self.ecfg.seed + self._submits)
+        self._submits += 1
+        if isinstance(h.uid, int):  # explicit uids must not collide with
+            self._next_uid = max(self._next_uid, h.uid + 1)  # auto ones
+        stop = frozenset(h.params.stop)
+        if self.ecfg.eos_id is not None:
+            stop |= {self.ecfg.eos_id}
+        h._stop_ids = stop
+        # the truncation that _admit will apply, surfaced at submit time
+        h.truncated = len(h.prompt) > self.ecfg.capacity
+        self.queue.append(h)
+        return h
+
+    def cancel(self, handle: RequestHandle) -> bool:
+        """Cancel a request (``RequestHandle.cancel`` delegates here).
+
+        Queued → removed before it ever admits; resident → its slot frees
+        *immediately*, mid-prefill or mid-decode, and the next admission
+        reuses it (the admission row-reset clears whatever the cancelled
+        request left in the KV cache, so neighbors never see it). Already
+        finished → no-op, returns False.
+        """
+        if handle.done:
+            return False
+        try:
+            self.queue.remove(handle)
+        except ValueError:
+            slot = next((i for i, h in enumerate(self.slots) if h is handle),
+                        None)
+            if slot is None:
+                return False  # not ours
+            self._free_slot(slot)
+        self._finish(handle, FINISH_CANCELLED, time.perf_counter())
+        return True
+
+    def run(self, max_steps: int = 10_000) -> List[Any]:
+        """Drive until queue + slots drain; returns finished requests
+        (handles, or the mirrored ``Request`` records for shim submits).
+        Cancelled requests are not returned."""
+        finished: List[Any] = []
         for _ in range(max_steps):
             if not self.queue and all(s is None for s in self.slots):
                 break
@@ -256,10 +323,13 @@ class ServingEngine:
 
         Feasible *because* the dispatch set is bounded: prefill buckets are
         the powers of two up to prefill_chunk and decode chunks the powers
-        of two up to decode_chunk — a dozen programs, not one per prompt
-        length. Every warm call is a semantic no-op on the live state
-        (lengths=0 rows / active=False rows / empty reset mask), so warmup
-        can run at any point in the engine's life.
+        of two up to decode_chunk, each in a masked (top-k/top-p fleet) and
+        unmasked sampling variant — a few dozen programs, not one per
+        prompt length. (The only lazily compiled stragglers are stop-set
+        width buckets > 1, for fleets using multi-token ``stop`` sets.)
+        Every warm call is a semantic no-op on the live state (lengths=0
+        rows / active=False rows / empty reset mask), so warmup can run at
+        any point in the engine's life.
         """
         self._warm_prefill()
         nb = len(self.slots)
@@ -268,12 +338,16 @@ class ServingEngine:
         chunks.add(min(self.ecfg.decode_chunk,
                        self.ecfg.decode_chunk_prefilling))
         idle = jnp.zeros((nb,), bool)
+        z32 = jnp.zeros((nb,), jnp.int32)
         for n in sorted(chunks):
-            self.key, sub = jax.random.split(self.key)
-            self.state, _ = self._loop_fn(n)(
-                self._serve_params, self.state,
-                jnp.asarray(self.last_tokens),
-                jnp.zeros((nb,), jnp.float32), idle, sub)
+            for masked in (False, True):
+                self.state, _ = self._loop_fn(n, masked, 1)(
+                    self._serve_params, self.state,
+                    jnp.asarray(self.last_tokens),
+                    jnp.zeros((nb,), jnp.float32), idle,
+                    jnp.zeros((nb,), jnp.uint32), z32, z32,
+                    jnp.ones((nb,), jnp.float32),
+                    jnp.full((nb, 1), -1, jnp.int32))
         self._reset_rows(np.zeros((nb,), bool))
 
     def _warm_prefill(self):
@@ -297,25 +371,26 @@ class ServingEngine:
         The bucketed scheduler's prefill entries are power-of-two chunk
         lengths ≤ prefill_chunk, so ``n_prefill_compiles`` is bounded by
         ``prefill_bucket_bound`` = log2(next_pow2(prefill_chunk)) + 1; the
-        decode entries are power-of-two chunk lengths ≤ decode_chunk. The
-        serial-admit baseline instead caches one prefill entry per distinct
-        prompt length (up to `capacity` of them).
+        decode entries are (power-of-two chunk length ≤ decode_chunk,
+        masked-sampling?, stop-width bucket) triples. The serial-admit
+        baseline instead caches one prefill entry per distinct prompt
+        length (up to `capacity` of them).
         """
         return {
             "prefill_bucket_lengths": sorted(self._prefill_cache),
             "n_prefill_compiles": len(self._prefill_cache),
             "prefill_bucket_bound":
                 _pow2ceil(self.ecfg.prefill_chunk).bit_length(),
-            "decode_chunk_lengths": sorted(self._loop_cache),
+            "decode_chunk_lengths": sorted({k[0] for k in self._loop_cache}),
             "n_decode_compiles": len(self._loop_cache),
             "admits": self.admits,
             "prefill_steps": self.prefill_steps,
         }
 
     # ----------------------------------------------------------------- step
-    def step(self) -> List[Request]:
+    def step(self) -> List[Any]:
         """Admit into all free slots, advance prefill one chunk, decode one
-        chunk.
+        chunk; returns the requests that finished this step.
 
         The decode chunk length adapts to the largest remaining token budget
         among decoding slots, rounded up to a power of two (compile count
@@ -329,24 +404,22 @@ class ServingEngine:
         dec = [i for i in range(len(self.slots)) if self._decoding(i)]
         if not dec:
             return done_now
-        remaining = max(self.slots[i].max_new_tokens
+        remaining = max(self.slots[i].params.max_new_tokens
                         - len(self.slots[i].output) for i in dec)
         chunk = self.ecfg.decode_chunk
         if any(self._prefilling(i) for i in range(len(self.slots))):
             chunk = min(chunk, self.ecfg.decode_chunk_prefilling)
         n_steps = min(chunk, _pow2ceil(remaining))
-        self.key, sub = jax.random.split(self.key)
-        if self._slot_arrays is None:  # rebuilt only when slots changed
-            self._slot_arrays = (
-                jnp.asarray([self.slots[i].temperature
-                             if self._decoding(i) else 0.0
-                             for i in range(len(self.slots))], jnp.float32),
-                jnp.asarray([self._decoding(i)
-                             for i in range(len(self.slots))]))
-        temps, active = self._slot_arrays
-        self.state, toks = self._loop_fn(n_steps)(
+        (temps, active, seeds, top_k, top_p, stops), use_mask, stop_w = \
+            self._fleet_arrays()
+        # tokens generated so far per row: the on-device draw for a row's
+        # i-th token always uses fold_in(PRNGKey(seed), i), independent of
+        # where the chunk boundaries fell
+        gen0 = jnp.asarray([len(self.slots[i].output) if self._decoding(i)
+                            else 0 for i in range(len(self.slots))], jnp.int32)
+        self.state, toks = self._loop_fn(n_steps, use_mask, stop_w)(
             self._serve_params, self.state, jnp.asarray(self.last_tokens),
-            temps, active, sub)
+            temps, active, seeds, gen0, top_k, top_p, stops)
         self.steps += n_steps
         return done_now + self._collect(np.asarray(toks))
 
@@ -365,17 +438,62 @@ class ServingEngine:
         self._cursor[slot] = 0
         self._slot_arrays = None
 
-    def _loop_fn(self, n_steps: int):
-        if n_steps not in self._loop_cache:
+    def _mark_first(self, h: RequestHandle, now: float):
+        if not h.t_first:
+            h.t_first = now
+            if h._legacy is not None:
+                h._legacy.t_first = now
+
+    def _finish(self, h: RequestHandle, reason: str, now: float):
+        h.finish_reason = reason
+        h.t_done = now
+        if h._legacy is not None:
+            h._legacy.done = True
+
+    def _fleet_arrays(self):
+        """Per-slot device arrays for the decode dispatch, cached until the
+        fleet changes: (temps, active, seeds, top_k, top_p, stops) plus the
+        static (use_mask, stop_width) pair that keys the loop variant."""
+        if self._slot_arrays is None:
+            nb = len(self.slots)
+            temps = np.zeros((nb,), np.float32)
+            seeds = np.zeros((nb,), np.uint32)
+            top_k = np.zeros((nb,), np.int32)
+            top_p = np.ones((nb,), np.float32)
+            stop_sets: List[List[int]] = [[] for _ in range(nb)]
+            use_mask = False
+            for i in range(nb):
+                if not self._decoding(i):
+                    continue
+                p = self.slots[i].params
+                temps[i] = p.temperature
+                seeds[i] = p.seed & 0xFFFFFFFF
+                top_k[i] = p.top_k
+                top_p[i] = p.top_p
+                stop_sets[i] = sorted(self.slots[i]._stop_ids)
+                use_mask |= p.needs_mask
+            stop_w = _pow2ceil(max(1, max(len(s) for s in stop_sets)))
+            stops = np.full((nb, stop_w), -1, np.int32)
+            for i, s in enumerate(stop_sets):
+                stops[i, :len(s)] = s
+            active = np.asarray([self._decoding(i) for i in range(nb)])
+            self._slot_arrays = (
+                tuple(jnp.asarray(a) for a in
+                      (temps, active, seeds, top_k, top_p, stops)),
+                use_mask, stop_w)
+        return self._slot_arrays
+
+    def _loop_fn(self, n_steps: int, use_mask: bool, stop_w: int):
+        key = (n_steps, use_mask, stop_w)
+        if key not in self._loop_cache:
             # Donating the decode state lets XLA update the KV caches in
             # place; CPU has no donation support and would warn per dispatch.
             donate = (1,) if jax.default_backend() != "cpu" else ()
-            self._loop_cache[n_steps] = jax.jit(
+            self._loop_cache[key] = jax.jit(
                 functools.partial(_decode_loop, cfg=self.cfg,
-                                  n_steps=n_steps,
-                                  eos_id=self.ecfg.eos_id),
+                                  n_steps=n_steps, use_mask=use_mask),
                 donate_argnums=donate)
-        return self._loop_cache[n_steps]
+        return self._loop_cache[key]
 
     def _prefill_fn(self, length: int):
         """One jit per power-of-two chunk bucket (O(log prefill_chunk))."""
@@ -402,9 +520,9 @@ class ServingEngine:
         for slot in range(len(self.slots)):
             if self.slots[slot] is not None or not self.queue:
                 continue
-            req = self.queue.popleft()
-            self.slots[slot] = req
-            self._prompts[slot] = list(req.prompt[-self.ecfg.capacity:])
+            h = self.queue.popleft()
+            self.slots[slot] = h
+            self._prompts[slot] = list(h.prompt[-self.ecfg.capacity:])
             self._cursor[slot] = 0
             fresh.append(slot)
             self.admits += 1
@@ -414,15 +532,38 @@ class ServingEngine:
             self._reset_rows(mask)
             self._slot_arrays = None
 
-    def _prefill_step(self) -> List[Request]:
+    def _sample_first(self, logits, rows: List[int]) -> np.ndarray:
+        """Token 0 for every row in ``rows`` (whose prompt just completed),
+        drawn from each request's own stream — ``fold_in(PRNGKey(seed), 0)``
+        — with its top-k/top-p support; other rows ride along as greedy and
+        are ignored by the caller."""
+        nb = logits.shape[0]
+        rs = set(rows)
+        p = {i: self.slots[i].params for i in rows}
+        temps = jnp.asarray([p[i].temperature if i in rs else 0.0
+                             for i in range(nb)], jnp.float32)
+        seeds = jnp.asarray([p[i].seed & 0xFFFFFFFF if i in rs else 0
+                             for i in range(nb)], jnp.uint32)
+        keys = request_keys(seeds, jnp.zeros((nb,), jnp.int32))
+        tk = tp = None
+        if any(p[i].needs_mask for i in rows):
+            tk = jnp.asarray([p[i].top_k if i in rs else 0
+                              for i in range(nb)], jnp.int32)
+            tp = jnp.asarray([p[i].top_p if i in rs else 1.0
+                              for i in range(nb)], jnp.float32)
+        return np.asarray(sample_tokens_per_request(
+            logits, keys, temps, top_k=tk, top_p=tp))
+
+    def _prefill_step(self) -> List[Any]:
         """Advance every mid-prompt slot by one bucketed chunk.
 
         All prefilling rows share one fixed-(B, L) dispatch: L is the
         power-of-two bucket of the longest remaining need this step (capped
         at prefill_chunk); rows with shorter remainders right-pad, rows not
         prefilling ride along with length 0 (no-op). Rows whose prompt
-        completes sample their first token here and join the decode fleet
-        in the same engine step.
+        completes sample their first token here — so a streamed first token
+        lands in the same engine step that finishes its prefill — and join
+        the decode fleet the same step.
         """
         pf = [i for i in range(len(self.slots)) if self._prefilling(i)]
         if not pf:
@@ -453,56 +594,57 @@ class ServingEngine:
         if not finishers:
             return []
         # the prompt's last logits yield the first generated token; one
-        # vectorized sample covers every finishing row (per-row temperature)
-        self.key, sub = jax.random.split(self.key)
-        fin = set(finishers)
-        temps = jnp.asarray([self.slots[i].temperature if i in fin else 0.0
-                             for i in range(nb)], jnp.float32)
-        toks = np.asarray(sample_tokens(logits, sub, temps))
+        # vectorized sample covers every finishing row
+        toks = self._sample_first(logits, finishers)
         now = time.perf_counter()
-        finished: List[Request] = []
+        finished: List[Any] = []
         for i in finishers:
-            req = self.slots[i]
+            h = self.slots[i]
             tok = int(toks[i])
-            req.output.append(tok)
-            req.t_first = req.t_first or now
-            # the prefill-sampled token may already terminate the request
-            hit_eos = (self.ecfg.eos_id is not None
-                       and tok == self.ecfg.eos_id)
-            if hit_eos or len(req.output) >= req.max_new_tokens:
-                req.done = True
-                finished.append(req)
-                self._free_slot(i)
+            h.output.append(tok)
+            self._mark_first(h, now)
+            # the prefill-sampled token may already terminate the request —
+            # on eos_id *or* any SamplingParams.stop id
+            if tok in h._stop_ids:
+                self._finish(h, FINISH_STOP, now)
+            elif len(h.output) >= h.params.max_new_tokens:
+                self._finish(h, FINISH_LENGTH, now)
             else:
                 self.last_tokens[i] = tok
                 self._slot_arrays = None
+                continue
+            finished.append(h._legacy or h)
+            self._free_slot(i)
         return finished
 
-    def _collect(self, toks: np.ndarray) -> List[Request]:
+    def _collect(self, toks: np.ndarray) -> List[Any]:
         """Fold a (K, B) chunk of tokens into the per-slot requests.
 
-        A slot stops at its first EOS or at its token budget; anything the
+        A slot stops at its first stop-token hit (any id in the request's
+        ``stop`` set ∪ ``eos_id``) or at its token budget; anything the
         device generated past that point within the chunk is discarded (the
         slot's state is reset by the next admission). Slots still mid-prefill
         took no decode step — their repeated tokens are skipped entirely.
         """
         finished = []
         now = time.perf_counter()
-        for slot, req in enumerate(self.slots):
-            if req is None or not self._decoding(slot):
+        for slot, h in enumerate(self.slots):
+            if h is None or not self._decoding(slot):
                 continue
             for k in range(toks.shape[0]):
                 tok = int(toks[k, slot])
-                req.output.append(tok)
-                req.t_first = req.t_first or now
+                h.output.append(tok)
+                self._mark_first(h, now)
                 self.last_tokens[slot] = tok
-                hit_eos = (self.ecfg.eos_id is not None
-                           and tok == self.ecfg.eos_id)
-                if hit_eos or len(req.output) >= req.max_new_tokens:
-                    req.done = True
-                    finished.append(req)
-                    self._free_slot(slot)
-                    break
+                if tok in h._stop_ids:
+                    self._finish(h, FINISH_STOP, now)
+                elif len(h.output) >= h.params.max_new_tokens:
+                    self._finish(h, FINISH_LENGTH, now)
+                else:
+                    continue
+                finished.append(h._legacy or h)
+                self._free_slot(slot)
+                break
         return finished
 
 
@@ -511,7 +653,9 @@ class SerialAdmitEngine(ServingEngine):
     request is prefilled *alone* through a jit cached per distinct prompt
     length (up to `capacity` compilations) and merged into its slot — the
     whole decode fleet stalls while the queue's prompts are consumed one by
-    one. Decode itself is the same fused loop as `ServingEngine`.
+    one. Decode (and the v1 handle/cancellation/per-request-RNG surface) is
+    identical to `ServingEngine`, so a request's output is bit-identical
+    across the two schedulers.
     """
 
     def _warm_prefill(self):
@@ -530,6 +674,17 @@ class SerialAdmitEngine(ServingEngine):
         # eager leaf-by-leaf merge it measures against
         return _merge_slot(batch_state, one_state, slot)
 
+    @staticmethod
+    def _sample_first_row(logits, keys, p: SamplingParams):
+        """Token 0 for one batch-1 logits row — row-wise sampling is
+        batch-size-invariant, so this matches the bucketed engine's fleet
+        dispatch bit for bit."""
+        tk = jnp.asarray([p.top_k], jnp.int32) if p.needs_mask else None
+        tp = jnp.asarray([p.top_p], jnp.float32) if p.needs_mask else None
+        return np.asarray(sample_tokens_per_request(
+            logits, keys, jnp.asarray([p.temperature], jnp.float32),
+            top_k=tk, top_p=tp))[0]
+
     def _prefill_len_fn(self, length: int):
         # one jit per distinct prompt length; prompts are clipped to
         # `capacity` on admit, so the cache is bounded by capacity entries
@@ -547,29 +702,37 @@ class SerialAdmitEngine(ServingEngine):
         for slot in range(len(self.slots)):
             if self.slots[slot] is not None or not self.queue:
                 continue
-            req = self.queue.popleft()
+            h = self.queue.popleft()
             self.admits += 1
-            prompt = req.prompt[-self.ecfg.capacity:]
+            prompt = h.prompt[-self.ecfg.capacity:]
             fn = self._prefill_len_fn(len(prompt))
             logits, one_state = fn(self._serve_params,
                                    jnp.asarray([prompt], jnp.int32))
             self.state = self._merge(self.state, one_state, slot)
             self.prefill_steps += 1
-            self.key, sub = jax.random.split(self.key)
-            tok = int(np.asarray(
-                sample_token(logits, sub, temperature=req.temperature))[0])
-            req.output.append(tok)
-            req.t_first = req.t_first or time.perf_counter()
-            # the prefill-sampled token may already terminate the request
-            hit_eos = (self.ecfg.eos_id is not None
-                       and tok == self.ecfg.eos_id)
-            if hit_eos or len(req.output) >= req.max_new_tokens:
-                req.done = True
-                self._admit_finished.append(req)
-                continue
-            self.last_tokens[slot] = tok
-            self.slots[slot] = req
-            # mark the whole prompt consumed → base class sees a decoding row
+            self.slots[slot] = h
             self._prompts[slot] = list(prompt)
-            self._cursor[slot] = len(prompt)
-            self._slot_arrays = None
+            self._cursor[slot] = 0        # not decoding until token 0 lands
+            # token 0 from the request's own stream (serial prefill logits
+            # are batch-1: sample that one row directly)
+            p = h.params
+            keys = request_keys(jnp.asarray([p.seed & 0xFFFFFFFF],
+                                            jnp.uint32),
+                                jnp.zeros((1,), jnp.int32))
+            tok = int(self._sample_first_row(logits, keys, p))
+            now = time.perf_counter()
+            h.output.append(tok)
+            self._mark_first(h, now)
+            # the prefill-sampled token may already terminate the request
+            if tok in h._stop_ids:
+                self._finish(h, FINISH_STOP, now)
+            elif len(h.output) >= h.params.max_new_tokens:
+                self._finish(h, FINISH_LENGTH, now)
+            else:
+                self.last_tokens[slot] = tok
+                # mark the prompt consumed → base class sees a decoding row
+                self._cursor[slot] = len(prompt)
+                self._slot_arrays = None
+                continue
+            self._admit_finished.append(h._legacy or h)
+            self._free_slot(slot)

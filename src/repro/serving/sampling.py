@@ -1,16 +1,27 @@
-"""Token sampling: greedy / temperature / top-k, jit-friendly.
+"""Token sampling: greedy / temperature / top-k / top-p, jit-friendly.
 
-``sample_token`` is the scalar-temperature form (the serial-admit engine's
-per-request prefill path); ``sample_tokens`` is the vectorized per-slot form
-used both inside the jitted fused decode loop and for the bucketed
-scheduler's prefill finishers (every row whose prompt completed this step
-samples its first token in one call): each batch row carries its own
-temperature, with temperature 0 meaning greedy for that row only — slots
-never share a sampler, and `jax.random.categorical` draws independently per
-row from a single key.
+Two generations of the surface live here:
+
+  * ``sample_token`` / ``sample_tokens`` — the pre-v1 forms (single key for
+    the whole batch, scalar ``top_k``). Kept because they are the right
+    tool when requests *should* share a stream (benchmark baselines) and
+    as the reference the per-request forms are tested against at
+    temperature 0.
+  * ``request_keys`` + ``sample_tokens_per_request`` — the Serving API v1
+    forms: every batch row draws from its own key, so a row's tokens are a
+    pure function of its ``SamplingParams.seed`` and its own logits
+    regardless of what shares the batch. ``top_k``/``top_p`` are per-row
+    vectors (0 / 1.0 disable per row), applied through one sorted support
+    mask (``top_k_top_p_mask``) that matches the NumPy reference in
+    tests/test_serving.py row for row.
+
+Everything is shape-static and fully vectorized, so all of it fuses into
+the jitted decode ``lax.scan`` — no host branching per slot.
 """
 
 from __future__ import annotations
+
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
@@ -30,11 +41,12 @@ def sample_token(logits: jax.Array, key: jax.Array, *,
 
 def sample_tokens(logits: jax.Array, key: jax.Array,
                   temperatures: jax.Array, *, top_k: int = 0) -> jax.Array:
-    """Per-row sampling: logits (B, V), temperatures (B,) -> tokens (B,).
+    """Per-row temperatures, one shared key: logits (B, V) -> tokens (B,).
 
     Rows with temperature <= 0 take the argmax; the rest sample from
-    logits / temperature (optionally top-k-truncated). Fully vectorized so
-    it fuses into the jitted decode loop — no host branching per slot.
+    logits / temperature (optionally top-k-truncated). Pre-v1 form — rows
+    share one draw stream, so a row's tokens depend on batch composition;
+    the engine uses :func:`sample_tokens_per_request` instead.
     """
     greedy = jnp.argmax(logits, axis=-1).astype(jnp.int32)
     t = jnp.maximum(temperatures.astype(jnp.float32), 1e-6)[:, None]
@@ -43,4 +55,79 @@ def sample_tokens(logits: jax.Array, key: jax.Array,
         kth = jax.lax.top_k(scaled, top_k)[0][..., -1:]
         scaled = jnp.where(scaled < kth, -jnp.inf, scaled)
     sampled = jax.random.categorical(key, scaled, axis=-1).astype(jnp.int32)
+    return jnp.where(temperatures <= 0.0, greedy, sampled)
+
+
+# ---------------------------------------------------------------------------
+# Serving API v1: per-request streams + row-wise top-k / top-p
+# ---------------------------------------------------------------------------
+
+def request_keys(seeds: jax.Array, indices: jax.Array) -> jax.Array:
+    """The per-request RNG stream: keys (B, 2) for the ``indices[b]``-th
+    generated token of a request seeded ``seeds[b]``.
+
+    ``fold_in(PRNGKey(seed), i)`` is position-addressed, not split-chained:
+    the key for token i never depends on how many tokens were drawn per
+    dispatch, which is what makes a request's output invariant to decode
+    chunk boundaries, scheduler choice, and fleet composition.
+    """
+    return jax.vmap(
+        lambda s, i: jax.random.fold_in(jax.random.PRNGKey(s), i)
+    )(seeds.astype(jnp.uint32), indices)
+
+
+def top_k_top_p_mask(logits: jax.Array,
+                     top_k: Optional[jax.Array] = None,
+                     top_p: Optional[jax.Array] = None) -> jax.Array:
+    """Row-wise sampling-support mask: True where a token stays eligible.
+
+    logits (B, V); top_k (B,) int (0 disables that row); top_p (B,) float
+    (1.0 disables that row). Top-p keeps the smallest probability-sorted
+    prefix whose cumulative mass reaches top_p (the max-probability token
+    always survives). One descending sort serves both masks.
+    """
+    v = logits.shape[-1]
+    order = jnp.argsort(-logits, axis=-1)
+    sorted_l = jnp.take_along_axis(logits, order, axis=-1)
+    keep = jnp.ones(logits.shape, bool)
+    if top_k is not None:
+        k = jnp.where(top_k > 0, top_k, v).astype(jnp.int32)[:, None]
+        keep &= jnp.arange(v)[None, :] < k
+    if top_p is not None:
+        probs = jax.nn.softmax(sorted_l, axis=-1)
+        cum = jnp.cumsum(probs, axis=-1)
+        # token i survives iff the mass *before* it is still short of top_p;
+        # a row with top_p >= 1 keeps everything *exactly* (not just up to
+        # cumsum rounding) so its draw is bit-identical whether or not a
+        # co-batched neighbor forced the mask to compile in
+        tp = top_p.astype(jnp.float32)[:, None]
+        keep &= ((cum - probs) < tp) | (tp >= 1.0)
+    # back to vocabulary order: scatter through the permutation (O(V), vs
+    # a second argsort) — each row of `order` is a permutation, so every
+    # position is written exactly once
+    rows = jnp.arange(logits.shape[0])[:, None]
+    return jnp.zeros(logits.shape, bool).at[rows, order].set(keep)
+
+
+def sample_tokens_per_request(logits: jax.Array, keys: jax.Array,
+                              temperatures: jax.Array, *,
+                              top_k: Optional[jax.Array] = None,
+                              top_p: Optional[jax.Array] = None
+                              ) -> jax.Array:
+    """Per-request sampling: logits (B, V), keys (B, 2) from
+    :func:`request_keys`, temperatures (B,) -> tokens (B,).
+
+    Rows with temperature <= 0 take the argmax (bit-identical to the
+    pre-v1 greedy path); the rest draw categorically from their own key
+    over logits / temperature restricted to the row's top-k/top-p support.
+    Pass ``top_k``/``top_p`` as None (static) to compile the mask out
+    entirely when no request in the fleet needs it.
+    """
+    greedy = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+    t = jnp.maximum(temperatures.astype(jnp.float32), 1e-6)[:, None]
+    scaled = logits.astype(jnp.float32) / t
+    if top_k is not None or top_p is not None:
+        keep = top_k_top_p_mask(scaled, top_k, top_p)
+        scaled = jnp.where(keep, scaled, -jnp.inf)
+    sampled = jax.vmap(jax.random.categorical)(keys, scaled).astype(jnp.int32)
     return jnp.where(temperatures <= 0.0, greedy, sampled)

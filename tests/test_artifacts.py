@@ -204,7 +204,9 @@ class TestResume:
     def test_resume_after_interrupt(self, model, qtree, tmp_path):
         """Kill mid-write → staging survives; the re-run skips committed
         tensors, truncates the torn tail, and finalizes a complete artifact
-        identical to a single-shot write."""
+        identical to a single-shot write. (commit_every=1: per-tensor
+        durability, so every tensor written before the kill is committed —
+        the finest-grained resume the writer offers.)"""
         cfg, params = model
         out = tmp_path / "art"
 
@@ -221,7 +223,8 @@ class TestResume:
 
         with pytest.raises(Interrupt):
             write_artifact(out, arch=ARCH, model_cfg=cfg, ptqtp_cfg=PCFG,
-                           params=params, progress=interrupter)
+                           params=params, progress=interrupter,
+                           commit_every=1)
         assert not out.exists()  # nothing published before finalize
         staging = out.with_name(out.name + ".staging")
         partial = json.loads((staging / "manifest.json").read_text())
@@ -245,6 +248,52 @@ class TestResume:
         some_qk = next(p for p in a if isinstance(a[p], QuantizedKernel))
         np.testing.assert_array_equal(np.asarray(a[some_qk].t1p),
                                       np.asarray(b[some_qk].t1p))
+
+    def test_group_commit_resume(self, model, qtree, tmp_path):
+        """fsync group commit: the on-disk manifest only advances at group
+        boundaries (after the data fsync), so a crash mid-group loses only
+        the uncommitted tail — resume truncates it, re-quantizes just that
+        group, and the final artifact is bit-identical to in-memory
+        quantization."""
+        cfg, params = model
+        out = tmp_path / "art"
+        every, kill_at = 4, 6
+
+        class Interrupt(Exception):
+            pass
+
+        def interrupter(ev):
+            if ev["index"] + 1 == kill_at:
+                raise Interrupt
+
+        with pytest.raises(Interrupt):
+            write_artifact(out, arch=ARCH, model_cfg=cfg, ptqtp_cfg=PCFG,
+                           params=params, progress=interrupter,
+                           commit_every=every)
+        staging = out.with_name(out.name + ".staging")
+        partial = json.loads((staging / "manifest.json").read_text())
+        # exactly one full group is durable; the mid-group tail is not
+        assert len(partial["tensors"]) == (kill_at // every) * every
+        # the uncommitted appends are a tail past the committed shard length
+        shard = partial["shards"][-1]
+        assert (staging / shard["file"]).stat().st_size > shard["nbytes"]
+
+        events = []
+        write_artifact(out, arch=ARCH, model_cfg=cfg, ptqtp_cfg=PCFG,
+                       params=params, progress=events.append,
+                       commit_every=every)
+        skipped = [e for e in events if e["action"] == "skip"]
+        assert len(skipped) == (kill_at // every) * every
+        tree, manifest = load_artifact(out, verify=True)
+        assert manifest["complete"]
+        a, b = _flatten(qtree), _flatten(tree)
+        assert set(a) == set(b)
+        for path in a:
+            if isinstance(a[path], QuantizedKernel):
+                np.testing.assert_array_equal(np.asarray(a[path].t1p),
+                                              np.asarray(b[path].t1p))
+                np.testing.assert_array_equal(np.asarray(a[path].alpha),
+                                              np.asarray(b[path].alpha))
 
     def test_resume_config_mismatch_rejected(self, model, tmp_path):
         cfg, params = model

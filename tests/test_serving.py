@@ -1,4 +1,7 @@
-"""Serving engine: continuous batching, quantized path, sampling."""
+"""Serving engine: continuous batching, quantized path, sampling, and the
+v1 request API (SamplingParams / RequestHandle): per-request-seed
+determinism across fleet compositions and schedulers, cancellation,
+streaming, stop sets, row-wise top-k/top-p."""
 
 import jax
 import jax.numpy as jnp
@@ -9,8 +12,12 @@ from repro import configs
 from repro.core.ptqtp import PTQTPConfig
 from repro.core.quantize_model import quantize_tree
 from repro.models import forward, init_params
+from repro.serving import SamplingParams, SerialAdmitEngine
 from repro.serving.engine import EngineConfig, Request, ServingEngine
-from repro.serving.sampling import sample_token, sample_tokens
+from repro.serving.sampling import (request_keys, sample_token,
+                                    sample_tokens,
+                                    sample_tokens_per_request,
+                                    top_k_top_p_mask)
 
 
 @pytest.fixture(scope="module")
@@ -169,3 +176,323 @@ class TestEngine:
         packed.submit(Request(uid=2, prompt=[2, 3], max_new_tokens=4))
         outs = {r.uid: r.output for r in packed.run()}
         assert outs[0] == ref
+
+
+class TestRowwiseSampling:
+    """sample_tokens_per_request / top_k_top_p_mask against references."""
+
+    def test_top_k_top_p_mask_matches_numpy(self):
+        """The row-wise support mask == a straightforward NumPy nucleus +
+        top-k reference, row for row."""
+        rng = np.random.default_rng(11)
+        logits = rng.standard_normal((5, 37)).astype(np.float32)
+        top_k = np.asarray([0, 5, 1, 36, 3], np.int32)
+        top_p = np.asarray([1.0, 0.3, 0.9, 1e-3, 0.5], np.float32)
+        got = np.asarray(top_k_top_p_mask(jnp.asarray(logits),
+                                          jnp.asarray(top_k),
+                                          jnp.asarray(top_p)))
+        for r in range(logits.shape[0]):
+            order = np.argsort(-logits[r], kind="stable")
+            x = logits[r][order].astype(np.float64)
+            probs = np.exp(x - x.max())
+            probs /= probs.sum()
+            cum = np.cumsum(probs)
+            ref = np.zeros(logits.shape[1], bool)
+            k = top_k[r] if top_k[r] > 0 else logits.shape[1]
+            for j, v in enumerate(order):
+                keep = j < k
+                if top_p[r] < 1.0:
+                    keep &= (cum[j] - probs[j]) < top_p[r]
+                ref[v] = keep
+            np.testing.assert_array_equal(got[r], ref, err_msg=f"row {r}")
+
+    def test_top_k1_sampling_is_argmax(self):
+        """temperature>0 with top_k=1 leaves exactly one eligible token."""
+        rng = np.random.default_rng(3)
+        logits = jnp.asarray(rng.standard_normal((6, 29), dtype=np.float32))
+        keys = request_keys(jnp.arange(6, dtype=jnp.uint32),
+                            jnp.zeros((6,), jnp.int32))
+        toks = sample_tokens_per_request(
+            logits, keys, jnp.full((6,), 1.3),
+            top_k=jnp.ones((6,), jnp.int32),
+            top_p=jnp.ones((6,), jnp.float32))
+        np.testing.assert_array_equal(np.asarray(toks),
+                                      np.asarray(jnp.argmax(logits, -1)))
+
+    def test_row_draw_independent_of_batch(self):
+        """A row's draw depends only on (its key, its logits) — the whole
+        point of per-request keys: move the row, change its neighbors, the
+        token is the same."""
+        rng = np.random.default_rng(5)
+        row = rng.standard_normal((1, 41)).astype(np.float32)
+        other = rng.standard_normal((3, 41)).astype(np.float32)
+        key = request_keys(jnp.asarray([77], jnp.uint32),
+                           jnp.asarray([4], jnp.int32))
+        temps = jnp.asarray([0.8])
+        alone = np.asarray(sample_tokens_per_request(
+            jnp.asarray(row), key, temps))[0]
+        batch = np.concatenate([other[:2], row, other[2:]], 0)
+        keys4 = request_keys(jnp.asarray([1, 2, 77, 3], jnp.uint32),
+                             jnp.asarray([0, 9, 4, 1], jnp.int32))
+        packed = np.asarray(sample_tokens_per_request(
+            jnp.asarray(batch), keys4, jnp.asarray([1.0, 2.0, 0.8, 0.5])))[2]
+        assert alone == packed
+
+    def test_greedy_rows_unaffected_by_mask(self):
+        """temperature-0 rows stay bit-identical argmax even when the fleet
+        compiles the top-k/top-p mask in (the v1 compat guarantee)."""
+        rng = np.random.default_rng(8)
+        logits = jnp.asarray(rng.standard_normal((4, 23), dtype=np.float32))
+        keys = request_keys(jnp.zeros((4,), jnp.uint32),
+                            jnp.zeros((4,), jnp.int32))
+        toks = sample_tokens_per_request(
+            logits, keys, jnp.asarray([0.0, 1.0, 0.0, 2.0]),
+            top_k=jnp.asarray([0, 3, 0, 5], jnp.int32),
+            top_p=jnp.asarray([1.0, 0.5, 1.0, 0.7], jnp.float32))
+        greedy = np.asarray(jnp.argmax(logits, -1))
+        np.testing.assert_array_equal(np.asarray(toks)[[0, 2]],
+                                      greedy[[0, 2]])
+
+
+class TestRequestAPI:
+    """The v1 contract: determinism, streaming, cancellation, stop sets."""
+
+    SP = dict(max_new_tokens=5, temperature=0.9, seed=41)
+
+    def test_seeded_output_invariant_to_fleet_and_scheduler(self,
+                                                           small_model):
+        """A request with a fixed SamplingParams seed is bit-identical
+        whether it runs alone, co-batched with arbitrary other traffic,
+        under different chunk boundaries, or on the serial scheduler."""
+        cfg, params = small_model
+        prompt = [5, 9, 17, 2]
+        sp = SamplingParams(**self.SP)
+        solo = ServingEngine(params, cfg,
+                             EngineConfig(max_slots=1, capacity=32))
+        ref = solo.submit(prompt, sp).result().tokens
+        assert len(ref) == sp.max_new_tokens
+
+        # fleet 2: co-batched with hot + greedy traffic
+        e2 = ServingEngine(params, cfg, EngineConfig(max_slots=3,
+                                                     capacity=32))
+        h2 = e2.submit(prompt, sp)
+        e2.submit([1, 2], SamplingParams(max_new_tokens=7, temperature=3.0,
+                                         seed=9))
+        e2.submit([3, 4, 5], SamplingParams(max_new_tokens=3))
+        assert h2.result().tokens == ref
+
+        # fleet 3: different prefill/decode chunk boundaries
+        e3 = ServingEngine(params, cfg,
+                           EngineConfig(max_slots=2, capacity=32,
+                                        decode_chunk=1, prefill_chunk=2))
+        h3 = e3.submit(prompt, sp)
+        e3.submit([7], SamplingParams(max_new_tokens=8, temperature=0.5,
+                                      seed=3))
+        assert h3.result().tokens == ref
+
+        # fleet 4: the serial-admit scheduler, co-batched
+        e4 = SerialAdmitEngine(params, cfg,
+                               EngineConfig(max_slots=2, capacity=32))
+        h4 = e4.submit(prompt, sp)
+        e4.submit([1, 2, 3], SamplingParams(max_new_tokens=4,
+                                            temperature=1.0, seed=5))
+        assert h4.result().tokens == ref
+
+    def test_same_seed_same_output_repeated(self, small_model):
+        cfg, params = small_model
+        outs = []
+        for _ in range(2):
+            eng = ServingEngine(params, cfg,
+                                EngineConfig(max_slots=1, capacity=32))
+            outs.append(eng.submit([3, 1, 4], SamplingParams(
+                max_new_tokens=4, temperature=1.1, seed=7)).result().tokens)
+        assert outs[0] == outs[1]
+
+    def test_stream_first_token_lands_with_prefill_completion(self,
+                                                              small_model):
+        """tokens() yields the first token in the same engine step that
+        consumed the prompt's last prefill chunk — stream TTFT is engine
+        TTFT, not engine-TTFT-plus-a-drain."""
+        cfg, params = small_model
+        eng = ServingEngine(params, cfg,
+                            EngineConfig(max_slots=1, capacity=32,
+                                         prefill_chunk=2))
+        h = eng.submit([5, 9, 17, 2, 11], SamplingParams(max_new_tokens=4))
+        steps = []
+        orig = eng.step
+        eng.step = lambda: steps.append(0) or orig()
+        it = h.tokens()
+        first = next(it)
+        # 5 prompt tokens / prefill_chunk 2 → 3rd step finishes prefill
+        assert len(steps) == 3
+        assert h.t_first > 0 and h.output[0] == first
+        assert list(it) == h.output[1:] and h.done
+        assert h.finish_reason == "length"
+
+    def test_cancel_mid_decode_preserves_neighbor(self, small_model):
+        """Cancelling a decoding request frees its slot without perturbing
+        a co-resident request (output bit-identical with and without the
+        cancellation), and the slot admits new work cleanly."""
+        cfg, params = small_model
+        solo = ServingEngine(params, cfg, EngineConfig(max_slots=1,
+                                                       capacity=32))
+        ref = solo.submit([7, 8, 9], SamplingParams(
+            max_new_tokens=8)).result().tokens
+
+        eng = ServingEngine(params, cfg, EngineConfig(max_slots=2,
+                                                      capacity=32,
+                                                      decode_chunk=2))
+        keeper = eng.submit([7, 8, 9], SamplingParams(max_new_tokens=8))
+        victim = eng.submit([1, 2], SamplingParams(max_new_tokens=64,
+                                                   temperature=1.0, seed=1))
+        eng.step()
+        eng.step()
+        assert victim.output and not victim.done  # genuinely mid-decode
+        assert victim.cancel()
+        assert victim.cancelled and victim.t_done > 0
+        assert eng.slots.count(None) == 1  # freed immediately
+        # slot reuse: a fresh request admits into the freed slot and is
+        # itself bit-identical to its solo reference
+        ref2 = ServingEngine(params, cfg, EngineConfig(
+            max_slots=1, capacity=32)).submit(
+                [2, 3], SamplingParams(max_new_tokens=4)).result().tokens
+        fresh = eng.submit([2, 3], SamplingParams(max_new_tokens=4))
+        assert keeper.result().tokens == ref
+        assert fresh.result().tokens == ref2
+        assert not victim.cancel()  # idempotent: already finished
+
+    def test_cancel_mid_prefill_preserves_neighbor(self, small_model):
+        cfg, params = small_model
+        solo = ServingEngine(params, cfg, EngineConfig(max_slots=1,
+                                                       capacity=32))
+        ref = solo.submit([7, 8, 9], SamplingParams(
+            max_new_tokens=6)).result().tokens
+
+        eng = ServingEngine(params, cfg,
+                            EngineConfig(max_slots=2, capacity=32,
+                                         prefill_chunk=2))
+        keeper = eng.submit([7, 8, 9], SamplingParams(max_new_tokens=6))
+        victim = eng.submit(list(range(1, 13)), SamplingParams(
+            max_new_tokens=8))
+        eng.step()
+        assert not victim.output and not victim.done  # mid-prefill
+        assert victim.cancel()
+        assert victim.output == [] and victim.cancelled
+        assert keeper.result().tokens == ref
+        # the freed slot admits and completes new work
+        fresh = eng.submit([1, 2, 3], SamplingParams(max_new_tokens=3))
+        assert len(fresh.result().tokens) == 3
+
+    def test_cancel_queued_never_admits(self, small_model):
+        cfg, params = small_model
+        eng = ServingEngine(params, cfg, EngineConfig(max_slots=1,
+                                                      capacity=32))
+        eng.submit([1, 2], SamplingParams(max_new_tokens=2))
+        queued = eng.submit([3, 4], SamplingParams(max_new_tokens=2))
+        assert queued.cancel()
+        eng.run()
+        assert queued.output == [] and queued.cancelled
+        assert eng.admits == 1
+
+    def test_stop_set_truncates_mid_chunk(self, small_model):
+        """Any SamplingParams.stop id ends the request at its first hit,
+        wherever inside a fused decode chunk it lands."""
+        cfg, params = small_model
+        free = ServingEngine(params, cfg, EngineConfig(max_slots=1,
+                                                       capacity=32))
+        free_run = free.submit([5, 9, 17, 2], SamplingParams(
+            max_new_tokens=8)).result().tokens
+        stop = free_run[3]
+        first = free_run.index(stop)
+
+        eng = ServingEngine(params, cfg, EngineConfig(max_slots=1,
+                                                      capacity=32,
+                                                      decode_chunk=8))
+        res = eng.submit([5, 9, 17, 2], SamplingParams(
+            max_new_tokens=8, stop={stop})).result()
+        assert res.tokens == free_run[:first + 1]
+        assert res.finish_reason == "stop"
+
+    def test_stop_hit_by_prefill_finisher(self, small_model):
+        """The very first token (sampled as prefill completes) already
+        honors the stop set — the request finishes without ever decoding."""
+        cfg, params = small_model
+        free = ServingEngine(params, cfg, EngineConfig(max_slots=1,
+                                                       capacity=32))
+        first = free.submit([5, 9, 17, 2], SamplingParams(
+            max_new_tokens=4)).result().tokens[0]
+
+        eng = ServingEngine(params, cfg, EngineConfig(max_slots=1,
+                                                      capacity=32))
+        res = eng.submit([5, 9, 17, 2], SamplingParams(
+            max_new_tokens=4, stop={first})).result()
+        assert res.tokens == (first,) and res.finish_reason == "stop"
+        assert eng.slots == [None] and eng.steps == 0
+
+    def test_multi_stop_set_with_eos(self, small_model):
+        """SamplingParams.stop composes with EngineConfig.eos_id: whichever
+        id generates first terminates."""
+        cfg, params = small_model
+        free = ServingEngine(params, cfg, EngineConfig(max_slots=1,
+                                                       capacity=32))
+        free_run = free.submit([5, 9, 17, 2], SamplingParams(
+            max_new_tokens=8)).result().tokens
+        eng = ServingEngine(params, cfg,
+                            EngineConfig(max_slots=1, capacity=32,
+                                         eos_id=free_run[4]))
+        res = eng.submit([5, 9, 17, 2], SamplingParams(
+            max_new_tokens=8, stop={free_run[2], 100_000})).result()
+        cut = min(free_run.index(free_run[2]), free_run.index(free_run[4]))
+        assert res.tokens == free_run[:cut + 1]
+
+    def test_truncated_prompt_flagged(self, small_model):
+        """Prompts longer than capacity are clipped at admission — and now
+        say so instead of silently dropping tokens."""
+        cfg, params = small_model
+        prompt = list(np.random.default_rng(0).integers(1, 500, size=20))
+        ref = ServingEngine(params, cfg, EngineConfig(
+            max_slots=1, capacity=8)).submit(
+                prompt[-8:], SamplingParams(max_new_tokens=3))
+        assert not ref.truncated
+        ref_toks = ref.result().tokens
+
+        eng = ServingEngine(params, cfg, EngineConfig(max_slots=1,
+                                                      capacity=8))
+        h = eng.submit(prompt, SamplingParams(max_new_tokens=3))
+        assert h.truncated  # surfaced at submit, before admission
+        res = h.result()
+        assert res.truncated and res.tokens == ref_toks
+
+    def test_deprecated_request_shim(self, small_model):
+        """submit(Request(...)) + run() (the pre-v1 surface) still works and
+        matches the v1 path token for token."""
+        cfg, params = small_model
+        v1 = ServingEngine(params, cfg, EngineConfig(max_slots=1,
+                                                     capacity=32))
+        ref = v1.submit([5, 9, 17, 2], SamplingParams(
+            max_new_tokens=3)).result().tokens
+
+        eng = ServingEngine(params, cfg, EngineConfig(max_slots=1,
+                                                      capacity=32))
+        req = Request(uid=0, prompt=[5, 9, 17, 2], max_new_tokens=3)
+        eng.submit(req)
+        done = eng.run()
+        assert done == [req] and req.done
+        assert tuple(req.output) == ref
+        assert req.t_submit > 0 and req.t_first >= req.t_submit
+
+    def test_topk_topp_request_restricts_support(self, small_model):
+        """A top-k request's every sampled token stays inside the greedy
+        row's top-k support (probe via top_k=1 == greedy)."""
+        cfg, params = small_model
+        greedy = ServingEngine(params, cfg, EngineConfig(max_slots=1,
+                                                         capacity=32))
+        ref = greedy.submit([5, 9, 17, 2], SamplingParams(
+            max_new_tokens=4)).result().tokens
+        eng = ServingEngine(params, cfg, EngineConfig(max_slots=2,
+                                                      capacity=32))
+        h = eng.submit([5, 9, 17, 2], SamplingParams(
+            max_new_tokens=4, temperature=1.5, top_k=1, seed=123))
+        eng.submit([1, 2], SamplingParams(max_new_tokens=4, temperature=1.0,
+                                          top_p=0.9, seed=4))
+        assert h.result().tokens == ref  # top_k=1 at any temp == greedy
