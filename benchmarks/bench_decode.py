@@ -65,7 +65,7 @@ class SeedPerStepEngine(SerialAdmitEngine):
         self._decode = jax.jit(functools.partial(decode_step, cfg=self.cfg))
         # the seed engine's single engine-wide RNG (v1 engines derive all
         # draws from each request's SamplingParams.seed instead)
-        self.key = jax.random.PRNGKey(engine_cfg.seed)
+        self.key = jax.random.PRNGKey(0)
 
     def _merge(self, batch_state, one_state, slot):
         # seed behavior: the eager tree walk, one device op per state leaf
@@ -128,7 +128,7 @@ def _bench_engine(rows, log, quick, chunk):
         engines = {}
         for name, cls, c in variants:
             eng = cls(p, cfg, EngineConfig(max_slots=4, capacity=128,
-                                           decode_chunk=c, seed=0))
+                                           decode_chunk=c))
             # warm-up drains compilation (prefill buckets + decode loop)
             eng.submit(prompts[0], SamplingParams(max_new_tokens=max_new),
                        uid=-1)

@@ -141,7 +141,7 @@ def _bench_cancel(rows, log, params, cfg, quick):
     # decode_chunk >= max_new every request would finish inside its
     # admission step and there would be nothing to cancel)
     ecfg = EngineConfig(max_slots=4, capacity=64, decode_chunk=2,
-                        prefill_chunk=8, seed=0)
+                        prefill_chunk=8)
     mk = lambda: ServingEngine(params, cfg, ecfg)
     n_req = 8 if quick else 24
     max_new = 12 if quick else 16
@@ -197,8 +197,7 @@ def run(log=print, quick=False):
 
     eng = ServingEngine(qparams, cfg,
                         EngineConfig(max_slots=4, capacity=64,
-                                     decode_chunk=8, prefill_chunk=16,
-                                     seed=0))
+                                     decode_chunk=8, prefill_chunk=16))
     eng.warmup()
     _bench_streaming(rows, log, eng, quick)
     _bench_cancel(rows, log, qparams, cfg, quick)

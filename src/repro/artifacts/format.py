@@ -107,8 +107,18 @@ def ptqtp_config_from_json(d: Dict[str, Any]):
     return PTQTPConfig(**d)
 
 
+# Runtime dispatch knobs that say nothing about the quantized weights: kept
+# out of the manifest so artifact identity (and the writer's resume
+# mismatch check) depends only on the model itself, and a served artifact
+# never pins the kernel backend it happened to be quantized under.
+RUNTIME_ONLY_CONFIG_KEYS = ("attn_backend",)
+
+
 def model_config_to_json(cfg) -> Dict[str, Any]:
-    return dataclasses.asdict(cfg)
+    d = dataclasses.asdict(cfg)
+    for k in RUNTIME_ONLY_CONFIG_KEYS:
+        d.pop(k, None)
+    return d
 
 
 def model_config_from_json(d: Dict[str, Any]):
@@ -116,6 +126,8 @@ def model_config_from_json(d: Dict[str, Any]):
     from repro.models.moe import MoEConfig
 
     d = dict(d)
+    for k in RUNTIME_ONLY_CONFIG_KEYS:
+        d.pop(k, None)
     if d.get("moe") is not None:
         d["moe"] = MoEConfig(**d["moe"])
     for k in ("block_pattern", "prefix_pattern"):

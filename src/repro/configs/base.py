@@ -55,6 +55,9 @@ class ModelConfig:
     scan_layers: bool = True
     remat: str = "full"                # none | full
     kv_cache_dtype: str = "bfloat16"   # bfloat16 | int8 (§Perf iteration 5)
+    # serving chunk/decode attention backend over the ring cache:
+    # auto | pallas | stream | materialized (repro.kernels.chunk_attention)
+    attn_backend: str = "auto"
     param_dtype: str = "bfloat16"
     activation_dtype: str = "bfloat16"
     optimizer_dtype: str = "float32"   # adam moment dtype (bf16 for 405B)

@@ -1,0 +1,79 @@
+"""Flash chunk-prefill attention over the int8 ring cache.
+
+One backend-dispatched op serves every attention read the serving engine
+performs — bucketed chunk prefill, the fused decode loop (the L = 1 case),
+and the serial admitter's decode — against (pre-write ring ∪ in-chunk keys)
+with **online softmax**: the (L, cap + L) score block is never materialized,
+and the int8 ring streams to the compute unit as int8, dequantized per tile
+(halving attention weight traffic vs a full f32 dequant of the cache).
+
+Op contract (stable; ``ops.chunk_attention``)
+---------------------------------------------
+::
+
+  chunk_attention(q, k_new, v_new, k_cache, k_scale, v_cache, v_scale,
+                  pos_buf, positions, lengths, *, window=None,
+                  backend="auto", tile=None, interpret=None)
+      -> (B, L, KV, G, hd) float32
+
+Inputs:
+  q:          (B, L, KV, G, hd) rotary-applied queries, grouped per kv head
+              (head h = kv * G + g, matching ``models.attention``).
+  k_new/v_new:(B, L, KV, hd) the chunk's fresh keys/values (float — scored
+              at full activation precision, *before* any cache write).
+  k_cache/v_cache: (B, cap, KV, hd) the ring **before** this chunk is
+              written — int8 (with per-(slot, kv-head) absmax ``k_scale``/
+              ``v_scale`` (B, cap, KV) f32) or float (scales = None).
+  pos_buf:    (B, cap) int32 absolute position held by each ring slot
+              (-1 = empty).
+  positions:  (B, L) int32 absolute position of each chunk query.
+  lengths:    (B,) int32 valid token count per row. Rows with length 0 are
+              no-ops (their output is unconsumed garbage, finite by
+              construction); key j of row r participates iff j < lengths[r].
+
+Masking (the *exact* part of the contract — every backend must agree
+bitwise on the visible set; floats may reorder):
+  A query at absolute position p sees key at position s iff
+  ``0 <= p - s < reach`` where ``reach = min(window or cap, cap)`` —
+  i.e. causal, sliding-window-clipped, and never further back than the
+  ring can faithfully hold. Ring entries additionally require
+  ``pos_buf >= 0``; in-chunk keys additionally require validity
+  (j < lengths[r]). This single rule reproduces the write-then-attend
+  decode semantics at L = 1 (the entry at distance exactly ``cap`` is the
+  one the token's own write evicts, so it is masked rather than read) and
+  covers ring wrap and per-row chunk offsets with no special cases.
+
+Backends:
+  * ``pallas``       — one grid program per (batch, kv-head); the ring
+                       stays int8 in VMEM and is dequantized per ``tile``
+                       on the VPU inside an online-softmax ``fori_loop``
+                       (validated in interpret mode off-TPU, like
+                       ``ternary_matvec_pallas``).
+  * ``stream``       — CPU/XLA fallback: a jitted ``fori_loop`` over
+                       fixed-size ring tiles (sliced from the cache in
+                       place) carrying running (max, sum, acc) state. Peak
+                       attention allocation is O(L·tile) per layer instead
+                       of O(L·(cap+L)); the scan dequantizes one int8 tile
+                       at a time.
+  * ``materialized`` — the pre-PR-5 path (full score block + full-ring
+                       dequant, one softmax), kept as the measured baseline
+                       and the parity oracle (``ref.chunk_attention_ref``).
+  * ``auto``         — ``pallas`` on TPU, ``stream`` elsewhere.
+
+``ops.tracked_block_bytes`` gives the analytic peak score-block bytes per
+(shape, backend) — what the long-context benchmark and the O(L·tile) test
+assert; ``ops.peak_tracked_bytes()`` records the same figure at trace time.
+"""
+
+from repro.kernels.chunk_attention.ops import (
+    chunk_attention,
+    peak_tracked_bytes,
+    reset_tracking,
+    resolve_chunk_backend,
+    tracked_block_bytes,
+)
+
+__all__ = [
+    "chunk_attention", "resolve_chunk_backend", "tracked_block_bytes",
+    "peak_tracked_bytes", "reset_tracking",
+]

@@ -1,0 +1,133 @@
+"""Fused int8-KV flash chunk-prefill attention (Pallas, TPU target).
+
+One grid program per (batch, kv-head) — the GQA grouping: all G query
+heads that share a kv head ride in one program, so the int8 ring block is
+read once per kv head, not once per query head. The kernel walks the ring
+in ``tile``-slot chunks with an online-softmax accumulator, dequantizing
+int8→f32 **in-register** per tile (HBM traffic = packed int8 bytes +
+scales + q/chunk/out — the attention analogue of the ternary-matmul
+streaming floor), then folds the chunk's own keys in as a final tile. The
+(G·L, cap) score block never exists: scores live as (G·L, tile) in VMEM.
+
+Ring wrap, sliding windows, and right-padding are all mask regions of the
+same rule (see the package docstring): visible iff 0 <= qpos - kpos <
+reach, ring slots additionally pos >= 0, chunk keys additionally
+j < length. Like ``ternary_matvec_pallas`` this is validated in interpret
+mode off-TPU; compiled-TPU runs only reshape leading (sublane) dims.
+
+VMEM budget per program (hd=128, L=64, tile=512): resident int8 ring
+blocks 2·cap·hd B (8 MB at cap=32k) + (G·L, tile) f32 scores — inside the
+~16 MB v5e VMEM; longer rings shard over the mesh first.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+NEG_INF = -1e30
+
+
+def _online_update(q2, k, v, valid, m, l, acc):
+    """One online-softmax step. q2: (G·L, hd); k/v: (C, hd) f32;
+    valid: (G·L, C) bool; carry m/l: (G·L,), acc: (G·L, hd)."""
+    logits = jnp.dot(q2, k.T, preferred_element_type=jnp.float32)
+    logits = jnp.where(valid, logits, NEG_INF)
+    m_new = jnp.maximum(m, jnp.max(logits, axis=-1))
+    alpha = jnp.exp(m - m_new)
+    # explicit re-mask: when a row has seen nothing yet (m_new == NEG_INF)
+    # the subtraction cancels and exp() would emit 1s for masked slots
+    p = jnp.where(valid, jnp.exp(logits - m_new[:, None]), 0.0)
+    acc = acc * alpha[:, None] + jnp.dot(p, v,
+                                         preferred_element_type=jnp.float32)
+    l = l * alpha + jnp.sum(p, axis=-1)
+    return m_new, l, acc
+
+
+def _kernel(q_ref, kn_ref, vn_ref, k8_ref, ks_ref, v8_ref, vs_ref,
+            posb_ref, pos_ref, len_ref, o_ref, *, tile: int, scale: float,
+            reach: int, scaled: bool):
+    # block shapes carry leading singleton (batch, kv) dims — index them away
+    g, L, hd = q_ref.shape[-3:]
+    cap = k8_ref.shape[1]
+    n_tiles = cap // tile
+    q2 = (q_ref[0, 0].astype(jnp.float32) * scale).reshape(g * L, hd)
+    qpos = pos_ref[0]                                        # (L,)
+    length = len_ref[0]
+
+    def ring_tile(i, carry):
+        off = i * tile
+        k = k8_ref[0, pl.dslice(off, tile), 0, :].astype(jnp.float32)
+        v = v8_ref[0, pl.dslice(off, tile), 0, :].astype(jnp.float32)
+        if scaled:  # int8 ring: per-(slot, kv-head) absmax in-reg dequant
+            k = k * ks_ref[0, pl.dslice(off, tile), 0][:, None]
+            v = v * vs_ref[0, pl.dslice(off, tile), 0][:, None]
+        pb = posb_ref[0, pl.dslice(off, tile)]
+        d = qpos[:, None] - pb[None, :]                      # (L, tile)
+        valid = (pb[None, :] >= 0) & (d >= 0) & (d < reach)
+        validg = jnp.broadcast_to(valid[None], (g, L, tile)).reshape(
+            g * L, tile)
+        return _online_update(q2, k, v, validg, *carry)
+
+    m0 = jnp.full((g * L,), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((g * L,), jnp.float32)
+    acc0 = jnp.zeros((g * L, hd), jnp.float32)
+    m, l, acc = jax.lax.fori_loop(0, n_tiles, ring_tile, (m0, l0, acc0))
+
+    # the chunk's own keys: one final (G·L, L) tile at activation precision
+    kn = kn_ref[0, :, 0, :].astype(jnp.float32)              # (L, hd)
+    vn = vn_ref[0, :, 0, :].astype(jnp.float32)
+    jidx = jax.lax.broadcasted_iota(jnp.int32, (L, L), 1)
+    d = qpos[:, None] - qpos[None, :]
+    valid = (jidx < length) & (d >= 0) & (d < reach)
+    validg = jnp.broadcast_to(valid[None], (g, L, L)).reshape(g * L, L)
+    m, l, acc = _online_update(q2, kn, vn, validg, m, l, acc)
+
+    out = acc / jnp.maximum(l, 1e-30)[:, None]               # 0s if unseen
+    o_ref[0, 0] = out.reshape(g, L, hd)
+
+
+def chunk_attention_pallas(q, k_new, v_new, k_cache, k_scale, v_cache,
+                           v_scale, pos_buf, positions, lengths, *,
+                           window=None, tile: int = 512,
+                           interpret: bool = True):
+    """Pallas chunk attention. q here is (B, KV, G, L, hd) (grid layout);
+    the public op transposes. Returns (B, KV, G, L, hd) f32.
+    """
+    b, cap, kv, hd = k_cache.shape
+    g, L = q.shape[2], q.shape[3]
+    t = min(tile, cap)
+    while cap % t:
+        t -= 1
+    reach = min(window, cap) if window else cap
+    scale = hd ** -0.5
+    scaled = k_scale is not None
+    if not scaled:  # float ring: 1-slot placeholder refs, never read
+        k_scale = v_scale = jnp.ones((b, 1, kv), jnp.float32)
+    scap = cap if scaled else 1
+
+    kern = functools.partial(_kernel, tile=t, scale=scale, reach=reach,
+                             scaled=scaled)
+    return pl.pallas_call(
+        kern,
+        grid=(b, kv),
+        in_specs=[
+            pl.BlockSpec((1, 1, g, L, hd), lambda i, j: (i, j, 0, 0, 0)),  # q
+            pl.BlockSpec((1, L, 1, hd), lambda i, j: (i, 0, j, 0)),   # k_new
+            pl.BlockSpec((1, L, 1, hd), lambda i, j: (i, 0, j, 0)),   # v_new
+            pl.BlockSpec((1, cap, 1, hd), lambda i, j: (i, 0, j, 0)), # k8
+            pl.BlockSpec((1, scap, 1), lambda i, j: (i, 0, j)),       # ks
+            pl.BlockSpec((1, cap, 1, hd), lambda i, j: (i, 0, j, 0)), # v8
+            pl.BlockSpec((1, scap, 1), lambda i, j: (i, 0, j)),       # vs
+            pl.BlockSpec((1, cap), lambda i, j: (i, 0)),              # pos_buf
+            pl.BlockSpec((1, L), lambda i, j: (i, 0)),                # positions
+            pl.BlockSpec((1,), lambda i, j: (i,)),                    # lengths
+        ],
+        out_specs=pl.BlockSpec((1, 1, g, L, hd), lambda i, j: (i, j, 0, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, kv, g, L, hd), jnp.float32),
+        interpret=interpret,
+    )(q, k_new, v_new, k_cache, k_scale, v_cache, v_scale, pos_buf,
+      positions, lengths)

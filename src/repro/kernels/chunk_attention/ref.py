@@ -1,0 +1,81 @@
+"""Pure-jnp oracle for chunk-prefill attention over the ring cache.
+
+This is the *materialized* implementation: the full (L, cap + L) score
+block and a full-ring f32 dequant, one softmax — exactly the pre-PR-5
+serving path, restated against the package's mask contract. It doubles as
+the ``backend="materialized"`` baseline (it is jit-friendly) and as the
+parity oracle for the Pallas kernel and the streaming fallback.
+
+The mask helpers here are the single source of truth for the visible set;
+``ops`` and ``kernel`` reimplement them tile-wise and the tests assert the
+reimplementations agree bitwise.
+"""
+
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def reach_of(cap: int, window: Optional[int]) -> int:
+    """Maximum causal distance a query may look back.
+
+    ``min(window or cap, cap)``: sliding-window layers clip at the window,
+    and nothing sees further back than the ring can faithfully hold — the
+    entry at distance exactly ``cap`` is the one the query's own write
+    evicts (write-then-attend decode semantics, generalized to chunks).
+    """
+    return min(window, cap) if window else cap
+
+
+def history_mask(pos_buf, positions, reach: int):
+    """(B, L, cap) bool: chunk query l of row b sees ring slot s."""
+    d = positions[:, :, None] - pos_buf[:, None, :]
+    return (pos_buf[:, None, :] >= 0) & (d >= 0) & (d < reach)
+
+
+def chunk_mask(positions, lengths, reach: int):
+    """(B, L, L) bool: chunk query l sees in-chunk key j (causal + valid)."""
+    L = positions.shape[1]
+    valid = jnp.arange(L)[None, None, :] < lengths[:, None, None]
+    d = positions[:, :, None] - positions[:, None, :]
+    return valid & (d >= 0) & (d < reach)
+
+
+def _deq(c, scale):
+    c = c.astype(jnp.float32)
+    return c if scale is None else c * scale[..., None].astype(jnp.float32)
+
+
+def chunk_attention_ref(q, k_new, v_new, k_cache, k_scale, v_cache, v_scale,
+                        pos_buf, positions, lengths, *,
+                        window: Optional[int] = None):
+    """Materialized chunk attention; see the package docstring for shapes.
+
+    Returns (B, L, KV, G, hd) float32.
+    """
+    b, L, kv, g, hd = q.shape
+    cap = k_cache.shape[1]
+    reach = reach_of(cap, window)
+    scale = hd ** -0.5
+
+    qf = q.astype(jnp.float32) * scale
+    kc = _deq(k_cache, k_scale)                              # (B, cap, KV, hd)
+    vc = _deq(v_cache, v_scale)
+    s_hist = jnp.einsum("blkgd,bskd->bkgls", qf, kc)         # (B,KV,G,L,cap)
+    m_hist = history_mask(pos_buf, positions, reach)         # (B, L, cap)
+    s_hist = jnp.where(m_hist[:, None, None], s_hist, NEG_INF)
+
+    knf = k_new.astype(jnp.float32)
+    s_self = jnp.einsum("blkgd,bjkd->bkglj", qf, knf)        # (B,KV,G,L,L)
+    m_self = chunk_mask(positions, lengths, reach)           # (B, L, L)
+    s_self = jnp.where(m_self[:, None, None], s_self, NEG_INF)
+
+    p = jax.nn.softmax(jnp.concatenate([s_hist, s_self], axis=-1), axis=-1)
+    v_all = jnp.concatenate([vc, v_new.astype(jnp.float32)], axis=1)
+    out = jnp.einsum("bkgls,bskd->blkgd", p, v_all)          # (B,L,KV,G,hd)
+    return out

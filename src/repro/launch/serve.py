@@ -74,6 +74,13 @@ def main(argv=None):
                     default="bucketed",
                     help="bucketed/chunked admission (default) or the "
                          "serial per-length-jit baseline")
+    ap.add_argument("--attn-backend",
+                    choices=("auto", "pallas", "stream", "materialized"),
+                    default="auto",
+                    help="ring-cache attention backend (repro.kernels."
+                         "chunk_attention): auto = Pallas on TPU, the "
+                         "streaming online-softmax fallback elsewhere; "
+                         "materialized = the full-score-block baseline")
     ap.add_argument("--warmup", action="store_true",
                     help="precompile every dispatch bucket before serving")
     ap.add_argument("--no-quantize", action="store_true",
@@ -125,9 +132,19 @@ def main(argv=None):
     cls = ServingEngine if args.scheduler == "bucketed" else SerialAdmitEngine
     t0 = time.time()
     engine = cls(params, cfg, EngineConfig(
-        max_slots=args.slots, capacity=args.capacity, seed=args.seed,
-        prefill_chunk=args.prefill_chunk))
+        max_slots=args.slots, capacity=args.capacity,
+        prefill_chunk=args.prefill_chunk, attn_backend=args.attn_backend))
     boot["engine_init"] = time.time() - t0
+    mem = engine.memory_stats()
+    if mem["preunpack_decode"]:
+        # honest resident-state accounting: pre-unpacked decode planes are
+        # int8 trits, 4x the packed bytes a weight-only count would suggest
+        print(f"[serve] resident planes "
+              f"{mem['resident_plane_bytes'] / 1e6:.2f} MB "
+              f"({mem['preunpack_ratio']:.1f}x packed "
+              f"{mem['packed_plane_bytes'] / 1e6:.2f} MB, preunpack_decode); "
+              f"decode state {mem['decode_state_bytes'] / 1e6:.2f} MB; "
+              f"total resident {mem['resident_total_bytes'] / 1e6:.2f} MB")
     if args.warmup:
         t0 = time.time()
         engine.warmup()

@@ -11,6 +11,14 @@ full-attention layers use capacity = max context, sliding-window layers use
 capacity = W (so a gemma3 local layer at 500k context holds 1024 slots, not
 500k — the cache-memory optimization that makes `long_500k` feasible).
 One implementation serves both (window = capacity ⇒ full attention).
+
+Every serving-time attention read — chunk prefill and single-token decode
+(its L = 1 case) — goes through one backend-dispatched op,
+``repro.kernels.chunk_attention``: online softmax against (pre-write ring ∪
+in-chunk keys), the int8 ring dequantized tile-by-tile at the compute unit,
+never as a whole. ``cfg.attn_backend`` selects the implementation (Pallas
+on TPU, the streaming tile-loop fallback elsewhere, or the materialized
+baseline); the visible-set rule is identical across backends.
 """
 
 from __future__ import annotations
@@ -20,6 +28,7 @@ from typing import Any, Dict, Optional, Tuple
 import jax
 import jax.numpy as jnp
 
+from repro.kernels.chunk_attention.ops import chunk_attention
 from repro.models.common import apply_rope, dense, dense_init, norm_init, rms_norm
 
 NEG_INF = -1e30
@@ -175,10 +184,6 @@ def _q8(x):
     return q, scale
 
 
-def _deq8(q, scale, dtype):
-    return (q.astype(jnp.float32) * scale[..., None]).astype(dtype)
-
-
 def cache_prefill(cfg, cache: Dict[str, Any], k, v, positions) -> Dict[str, Any]:
     """Write a full prefill sequence into the ring (keeps the last `cap`).
 
@@ -241,45 +246,27 @@ def attention_prefill_chunk(
     The chunk queries score against the *pre-write* ring (history from
     earlier chunks — for sliding-window layers the ring holds exactly the
     last `cap` positions, which covers every in-chunk query's window) and
-    against the in-chunk keys, in one softmax. Afterwards the chunk k/v are
-    scattered into the ring; padding and entries a row's own chunk tail
-    would immediately overwrite (length > cap) are dropped. L is the
-    engine's prefill-chunk bucket, so the (L, cap+L) score block stays small
-    by construction.
+    against the in-chunk keys, in one online softmax via
+    ``repro.kernels.chunk_attention`` — the (L, cap+L) score block is never
+    materialized and the int8 ring is dequantized per streamed tile, not as
+    a whole (``cfg.attn_backend`` picks the implementation). Afterwards the
+    chunk k/v are scattered into the ring; padding and entries a row's own
+    chunk tail would immediately overwrite (length > cap) are dropped.
     """
     b, L, _ = x.shape
     hd = cfg.head_dim
     kv, g = cfg.n_kv_heads, cfg.n_heads // cfg.n_kv_heads
     cap = cache["k"].shape[1]
-    scale = hd ** -0.5
 
     q, k, v = _qkv(params, cfg, x, positions)
     qh = q.reshape(b, L, kv, g, hd)
 
     valid = jnp.arange(L)[None, :] < lengths[:, None]        # (B, L)
-    qpos = positions[:, :, None]                             # (B, L, 1)
-    w_eff = window if window else cap + L + 1
-
-    # history: the ring before this chunk is written
-    pc = cache["pos"]                                        # (B, cap)
-    if "k_scale" in cache:
-        kc = _deq8(cache["k"], cache["k_scale"], x.dtype)
-        vc = _deq8(cache["v"], cache["v_scale"], x.dtype)
-    else:
-        kc, vc = cache["k"], cache["v"]
-    s_hist = _gqa_scores(qh, kc) * scale                     # (B,KV,G,L,cap)
-    m_hist = (pc[:, None, :] >= 0) & (pc[:, None, :] <= qpos) & (
-        qpos - pc[:, None, :] < w_eff)                       # (B, L, cap)
-    s_hist = jnp.where(m_hist[:, None, None], s_hist, NEG_INF)
-
-    # in-chunk: fresh keys, causal + window + padding mask
-    kpos = positions[:, None, :]                             # (B, 1, L)
-    s_self = _gqa_scores(qh, k) * scale                      # (B,KV,G,L,L)
-    m_self = valid[:, None, :] & (kpos <= qpos) & (qpos - kpos < w_eff)
-    s_self = jnp.where(m_self[:, None, None], s_self, NEG_INF)
-
-    p = jax.nn.softmax(jnp.concatenate([s_hist, s_self], axis=-1), axis=-1)
-    y = _gqa_out(p, jnp.concatenate([vc.astype(v.dtype), v], axis=1))
+    y = chunk_attention(
+        qh, k, v, cache["k"], cache.get("k_scale"), cache["v"],
+        cache.get("v_scale"), cache["pos"], positions,
+        lengths.astype(jnp.int32), window=window,
+        backend=cfg.attn_backend)
     y = y.reshape(b, L, cfg.n_heads * hd).astype(x.dtype)
     y = dense(params["wo"], y)
 
@@ -317,12 +304,19 @@ def attention_decode(
     active (B,) bool: rows with active=False leave the ring untouched (their
     write is dropped) — required when decode shares the batch state with
     rows that are still mid-prefill (their caches must not be corrupted).
+
+    Routed through ``repro.kernels.chunk_attention`` as the L = 1 case:
+    the token scores against (pre-write ring ∪ itself) under the shared
+    mask rule — the op's ``reach`` cap masks the slot this token's own
+    write evicts, which is exactly the write-then-attend semantics — so
+    decode, chunked prefill, and the serial path share one masking
+    implementation. active=False rows pass length 0 (no self key, no
+    write), mirroring their dropped write.
     """
     b, _ = x_t.shape
     hd = cfg.head_dim
     kv, g = cfg.n_kv_heads, cfg.n_heads // cfg.n_kv_heads
     cap = cache["k"].shape[1]
-    scale = hd ** -0.5
 
     q = dense(params["wq"], x_t).reshape(b, cfg.n_heads, hd)
     k_t = dense(params["wk"], x_t).reshape(b, kv, hd)
@@ -330,33 +324,34 @@ def attention_decode(
     q = apply_rope(q, pos, cfg.rope_theta)
     k_t = apply_rope(k_t, pos, cfg.rope_theta)
 
+    qh = q.reshape(b, 1, kv, g, hd)
+    lengths = (active.astype(jnp.int32) if active is not None
+               else jnp.ones((b,), jnp.int32))
+    y = chunk_attention(
+        qh, k_t[:, None], v_t[:, None], cache["k"], cache.get("k_scale"),
+        cache["v"], cache.get("v_scale"), cache["pos"],
+        pos[:, None].astype(jnp.int32), lengths, window=window,
+        backend=cfg.attn_backend)
+    y = y.reshape(b, cfg.n_heads * hd).astype(x_t.dtype)
+    y = dense(params["wo"], y)
+
     slot = (pos % cap).astype(jnp.int32)  # (B,)
     if active is not None:
         slot = jnp.where(active, slot, cap)  # cap = out of ring → dropped
     upd = lambda bf, s_, v_: bf.at[s_].set(v_, mode="drop")
     pc = jax.vmap(upd)(cache["pos"], slot, pos.astype(jnp.int32))
     new_cache = {"pos": pc}
-    if "k_scale" in cache:  # int8 cache: quantize the new token, dequant read
+    if "k_scale" in cache:  # int8 cache: quantize the new token's write
         kq, ks = _q8(k_t)
         vq, vs = _q8(v_t)
-        kc8 = jax.vmap(upd)(cache["k"], slot, kq)
-        vc8 = jax.vmap(upd)(cache["v"], slot, vq)
-        ksc = jax.vmap(upd)(cache["k_scale"], slot, ks)
-        vsc = jax.vmap(upd)(cache["v_scale"], slot, vs)
-        new_cache.update(k=kc8, v=vc8, k_scale=ksc, v_scale=vsc)
-        kc = _deq8(kc8, ksc, x_t.dtype)
-        vc = _deq8(vc8, vsc, x_t.dtype)
+        new_cache.update(
+            k=jax.vmap(upd)(cache["k"], slot, kq),
+            v=jax.vmap(upd)(cache["v"], slot, vq),
+            k_scale=jax.vmap(upd)(cache["k_scale"], slot, ks),
+            v_scale=jax.vmap(upd)(cache["v_scale"], slot, vs))
     else:
-        kc = jax.vmap(upd)(cache["k"], slot, k_t)
-        vc = jax.vmap(upd)(cache["v"], slot, v_t)
-        new_cache.update(k=kc, v=vc)
-
-    qh = q.reshape(b, 1, kv, g, hd)
-    logits = _gqa_scores(qh, kc)[:, :, :, 0, :] * scale  # (B, KV, G, cap)
-    w_eff = window if window else cap + 1
-    valid = (pc >= 0) & (pc <= pos[:, None]) & (pos[:, None] - pc < w_eff)
-    logits = jnp.where(valid[:, None, None, :], logits, NEG_INF)
-    p = jax.nn.softmax(logits, axis=-1)
-    y = jnp.einsum("bkgs,bskd->bkgd", p, vc.astype(p.dtype))
-    y = y.reshape(b, cfg.n_heads * hd).astype(x_t.dtype)
-    return dense(params["wo"], y), new_cache
+        new_cache.update(k=jax.vmap(upd)(cache["k"], slot,
+                                         k_t.astype(cache["k"].dtype)),
+                         v=jax.vmap(upd)(cache["v"], slot,
+                                         v_t.astype(cache["v"].dtype)))
+    return y, new_cache

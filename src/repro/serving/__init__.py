@@ -38,12 +38,6 @@ arbitrary traffic, on ``ServingEngine`` or ``SerialAdmitEngine``, or across
 any decode/prefill chunking. Temperature 0 is pure argmax (no RNG at all)
 and matches the teacher-forced ``forward`` argmax path.
 
-Deprecated (one PR of grace)
-----------------------------
-The pre-v1 ``Request`` record still works through ``submit(Request(...))``
-+ ``run()`` — the engine wraps it in a handle and mirrors
-``output/done/t_submit/t_first`` back. It will be removed next PR.
-
 Engines
 -------
 ``ServingEngine`` — bucketed batched admission + chunked prefill
@@ -53,8 +47,7 @@ admission baseline. Both implement the identical v1 contract, which is
 what makes the determinism guarantee scheduler-independent.
 """
 
-from repro.serving.api import (Request, RequestHandle, RequestResult,
-                               SamplingParams)
+from repro.serving.api import RequestHandle, RequestResult, SamplingParams
 from repro.serving.engine import (EngineConfig, SerialAdmitEngine,
                                   ServingEngine)
 from repro.serving.sampling import (request_keys, sample_token, sample_tokens,
@@ -62,7 +55,7 @@ from repro.serving.sampling import (request_keys, sample_token, sample_tokens,
                                     top_k_top_p_mask)
 
 __all__ = [
-    "SamplingParams", "RequestHandle", "RequestResult", "Request",
+    "SamplingParams", "RequestHandle", "RequestResult",
     "ServingEngine", "SerialAdmitEngine", "EngineConfig",
     "sample_token", "sample_tokens", "sample_tokens_per_request",
     "request_keys", "top_k_top_p_mask",

@@ -3,8 +3,9 @@
 ``SamplingParams`` is the frozen per-request contract (what to generate);
 ``RequestHandle`` is what ``Engine.submit`` returns (how to consume it):
 stream tokens as the engine produces them, block for the final
-``RequestResult``, or ``cancel()`` at any point. ``Request`` is the
-deprecated pre-v1 grab-bag, kept for one PR as a thin shim.
+``RequestResult``, or ``cancel()`` at any point. (The pre-v1 ``Request``
+record had its one PR of deprecation grace and is gone; ``submit`` takes
+token ids + ``SamplingParams`` only.)
 
 Determinism contract
 --------------------
@@ -118,7 +119,6 @@ class RequestHandle:
         self.t_done = 0.0
         self._engine = engine
         self._stop_ids: FrozenSet[int] = params.stop
-        self._legacy = None           # deprecated Request mirror, if any
 
     # ------------------------------------------------------------ lifecycle
     @property
@@ -165,55 +165,20 @@ class RequestHandle:
         return self._engine.cancel(self)
 
 
-@dataclasses.dataclass
-class Request:
-    """DEPRECATED pre-v1 request record (one-PR compatibility shim).
-
-    ``engine.submit(Request(...))`` still works: the engine wraps it in a
-    ``RequestHandle`` carrying ``SamplingParams(max_new_tokens=...,
-    temperature=..., seed=EngineConfig.seed)`` and mirrors
-    ``output/done/t_submit/t_first`` back onto this object, so pre-v1
-    callers of ``submit`` + ``run()`` observe the old behavior. New code
-    should call ``submit(prompt, SamplingParams(...))`` and use the
-    returned ``RequestHandle``.
-    """
-
-    uid: int
-    prompt: List[int]
-    max_new_tokens: int = 16
-    temperature: float = 0.0
-    # filled by the engine:
-    output: List[int] = dataclasses.field(default_factory=list)
-    done: bool = False
-    t_submit: float = 0.0
-    t_first: float = 0.0
-
-
 def make_handle(engine: Any, prompt: Any, params: Optional[SamplingParams],
-                uid: Optional[int], default_seed: int) -> RequestHandle:
-    """Normalize ``submit``'s inputs (new-style or deprecated ``Request``)
-    into a ``RequestHandle``; stamps ``t_submit`` and mirrors the legacy
-    object when given one."""
-    if isinstance(prompt, Request):
-        if params is not None or uid is not None:
-            raise TypeError("submit(Request) takes no params/uid")
-        req = prompt
-        h = RequestHandle(engine, req.uid, req.prompt, SamplingParams(
-            max_new_tokens=req.max_new_tokens, temperature=req.temperature,
-            seed=default_seed))
-        h.output = req.output          # shared list: legacy sees every token
-        h._legacy = req
+                uid: Optional[int]) -> RequestHandle:
+    """Normalize ``submit``'s inputs into a ``RequestHandle`` and stamp
+    ``t_submit``."""
+    if isinstance(prompt, (str, bytes)):
+        raise TypeError("prompt must be a sequence of token ids, not "
+                        "text — tokenize first")
+    if isinstance(prompt, Iterable):
+        prompt = list(prompt)
     else:
-        if isinstance(prompt, (str, bytes)):
-            raise TypeError("prompt must be a sequence of token ids, not "
-                            "text — tokenize first")
-        if isinstance(prompt, Iterable):
-            prompt = list(prompt)
-        h = RequestHandle(engine, uid if uid is not None else -1, prompt,
-                          params if params is not None else SamplingParams())
+        raise TypeError("prompt must be a sequence of token ids")
+    h = RequestHandle(engine, uid if uid is not None else -1, prompt,
+                      params if params is not None else SamplingParams())
     if not h.prompt:
         raise ValueError("empty prompt")
     h.t_submit = time.perf_counter()
-    if h._legacy is not None:
-        h._legacy.t_submit = h.t_submit
     return h

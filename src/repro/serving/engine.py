@@ -12,9 +12,9 @@ Request lifecycle (Serving API v1 — see ``repro.serving.api``):
     t_done`` and a ``truncated`` flag when the prompt was clipped to
     ``capacity``;
   * ``step()`` advances the whole fleet one engine step (admission +
-    prefill chunk + decode chunk) and returns the requests that finished;
-  * ``run()`` drives until drained — with the deprecated ``Request``
-    record, this is the pre-v1 shim surface (one PR of compatibility).
+    prefill chunk + decode chunk) and returns the handles that finished;
+  * ``run()`` drives until drained (the batch-caller style; the pre-v1
+    ``Request`` record shim is gone after its one PR of grace).
 
 Scheduling (unchanged from PR 2): the batch has ``max_slots`` fixed slots →
 one jit'd decode loop for the whole fleet; **bucketed admission** drains the
@@ -58,11 +58,10 @@ from repro.models import (decode_step, init_decode_state, prefill,
                           prefill_chunk)
 from repro.models.common import matmul_backend
 from repro.serving.api import (FINISH_CANCELLED, FINISH_LENGTH, FINISH_STOP,
-                               Request, RequestHandle, SamplingParams,
-                               make_handle)
+                               RequestHandle, SamplingParams, make_handle)
 from repro.serving.sampling import request_keys, sample_tokens_per_request
 
-__all__ = ["EngineConfig", "ServingEngine", "SerialAdmitEngine", "Request",
+__all__ = ["EngineConfig", "ServingEngine", "SerialAdmitEngine",
            "SamplingParams", "RequestHandle"]
 
 
@@ -73,15 +72,17 @@ class EngineConfig:
     what remains here is fleet shape and scheduling.
 
     ``eos_id`` is the engine-wide stop token (tokenizer property, honored
-    for every request in addition to its ``SamplingParams.stop``);
-    ``seed`` only seeds the ``SamplingParams`` synthesized for deprecated
-    ``Request`` submissions — v1 requests carry their own seed.
+    for every request in addition to its ``SamplingParams.stop``).
+    ``attn_backend`` overrides the model's ring-cache attention backend
+    (``repro.kernels.chunk_attention``: auto | pallas | stream |
+    materialized) for every dispatch this engine compiles — the serving-
+    level knob the launcher's ``--attn-backend`` flag sets.
     """
 
     max_slots: int = 4
     capacity: int = 256          # KV-cache length per slot
     eos_id: Optional[int] = None
-    seed: int = 0
+    attn_backend: Optional[str] = None
     decode_chunk: int = 8        # tokens per jitted decode dispatch (K)
     prefill_chunk: int = 64      # max prompt tokens consumed per slot per step
     # decode chunk cap while any slot is mid-prefill: a long prompt reaches
@@ -230,6 +231,9 @@ class ServingEngine:
 
     def __init__(self, params, model_cfg, engine_cfg: EngineConfig):
         self.params = params
+        if engine_cfg.attn_backend is not None:
+            model_cfg = dataclasses.replace(
+                model_cfg, attn_backend=engine_cfg.attn_backend)
         self.cfg = model_cfg
         self.ecfg = engine_cfg
         self.queue: deque[RequestHandle] = deque()
@@ -243,16 +247,16 @@ class ServingEngine:
         # serve-side params: prefill and decode both read these, so the
         # unpack is paid once per engine, not once per dispatch
         self._serve_params = _preunpack_params(params) if pre else params
+        self.preunpack_decode = pre
         self._loop_cache: Dict[Tuple[int, bool, int], Any] = {}
         self._prefill_cache: Dict[int, Any] = {}
         self._reset_jit = None
         # per-slot prompt progress: clipped prompt + tokens already consumed
         self._prompts: List[Optional[List[int]]] = [None] * engine_cfg.max_slots
         self._cursor: List[int] = [0] * engine_cfg.max_slots
-        self._admit_finished: List[Any] = []
+        self._admit_finished: List[RequestHandle] = []
         self._slot_arrays = None  # fleet array cache; None → slots dirty
         self._next_uid = 0
-        self._submits = 0         # shim seed derivation (distinct streams)
         self.steps = 0           # decode steps dispatched (tokens per slot)
         self.prefill_steps = 0   # prefill_chunk dispatches
         self.admits = 0
@@ -262,20 +266,14 @@ class ServingEngine:
                uid: Optional[int] = None) -> RequestHandle:
         """Enqueue a request; returns its :class:`RequestHandle`.
 
-        ``prompt`` is a token-id list (then ``params`` is its
-        ``SamplingParams``, default greedy) — or, deprecated for one PR, a
-        pre-v1 ``Request`` record, which is wrapped and mirrored.
+        ``prompt`` is a token-id list; ``params`` is its
+        ``SamplingParams`` (default greedy).
         """
-        if not isinstance(prompt, Request) and uid is None:
+        if uid is None:
             uid, self._next_uid = self._next_uid, self._next_uid + 1
-        # shim requests carry no seed of their own: give each its own
-        # stream rooted at the engine seed (the old engine-global key also
-        # gave two same-prompt requests distinct draws)
-        h = make_handle(self, prompt, params, uid,
-                        self.ecfg.seed + self._submits)
-        self._submits += 1
-        if isinstance(h.uid, int):  # explicit uids must not collide with
-            self._next_uid = max(self._next_uid, h.uid + 1)  # auto ones
+        h = make_handle(self, prompt, params, uid)
+        self._next_uid = max(self._next_uid, h.uid + 1)  # explicit uids must
+        # not collide with auto-assigned ones
         stop = frozenset(h.params.stop)
         if self.ecfg.eos_id is not None:
             stop |= {self.ecfg.eos_id}
@@ -307,11 +305,10 @@ class ServingEngine:
         self._finish(handle, FINISH_CANCELLED, time.perf_counter())
         return True
 
-    def run(self, max_steps: int = 10_000) -> List[Any]:
-        """Drive until queue + slots drain; returns finished requests
-        (handles, or the mirrored ``Request`` records for shim submits).
+    def run(self, max_steps: int = 10_000) -> List[RequestHandle]:
+        """Drive until queue + slots drain; returns the finished handles.
         Cancelled requests are not returned."""
-        finished: List[Any] = []
+        finished: List[RequestHandle] = []
         for _ in range(max_steps):
             if not self.queue and all(s is None for s in self.slots):
                 break
@@ -387,8 +384,43 @@ class ServingEngine:
             "prefill_steps": self.prefill_steps,
         }
 
+    def memory_stats(self) -> Dict[str, Any]:
+        """Resident serving-state byte accounting (the boot-breakdown /
+        attention-memory-bench numbers, computed not estimated).
+
+        ``preunpack_decode`` trades plane bytes for per-step unpack work:
+        the resident planes are raw int8 trits (1 byte/trit) instead of the
+        packed 2-bit fields (0.25 byte/trit), so ``resident_plane_bytes``
+        is 4x ``packed_plane_bytes`` while it is on — and a bench that only
+        counted the packed artifact would understate resident state by
+        exactly that ratio. ``decode_state_bytes`` is the live batch state
+        (KV rings + recurrent states + positions) at this engine's
+        (max_slots, capacity).
+        """
+        def plane_bytes(tree) -> int:
+            return sum(
+                int(leaf.t1p.nbytes) + int(leaf.t2p.nbytes)
+                for leaf in jax.tree.leaves(
+                    tree, is_leaf=lambda x: isinstance(x, QuantizedKernel))
+                if isinstance(leaf, QuantizedKernel))
+
+        packed = plane_bytes(self.params)
+        resident = plane_bytes(self._serve_params)
+        param_bytes = sum(int(x.nbytes)
+                          for x in jax.tree.leaves(self._serve_params))
+        state_bytes = sum(int(x.nbytes) for x in jax.tree.leaves(self.state))
+        return {
+            "preunpack_decode": self.preunpack_decode,
+            "packed_plane_bytes": packed,
+            "resident_plane_bytes": resident,
+            "preunpack_ratio": (resident / packed) if packed else 1.0,
+            "param_bytes": param_bytes,
+            "decode_state_bytes": state_bytes,
+            "resident_total_bytes": param_bytes + state_bytes,
+        }
+
     # ----------------------------------------------------------------- step
-    def step(self) -> List[Any]:
+    def step(self) -> List[RequestHandle]:
         """Admit into all free slots, advance prefill one chunk, decode one
         chunk; returns the requests that finished this step.
 
@@ -441,14 +473,10 @@ class ServingEngine:
     def _mark_first(self, h: RequestHandle, now: float):
         if not h.t_first:
             h.t_first = now
-            if h._legacy is not None:
-                h._legacy.t_first = now
 
     def _finish(self, h: RequestHandle, reason: str, now: float):
         h.finish_reason = reason
         h.t_done = now
-        if h._legacy is not None:
-            h._legacy.done = True
 
     def _fleet_arrays(self):
         """Per-slot device arrays for the decode dispatch, cached until the
@@ -554,7 +582,7 @@ class ServingEngine:
         return np.asarray(sample_tokens_per_request(
             logits, keys, temps, top_k=tk, top_p=tp))
 
-    def _prefill_step(self) -> List[Any]:
+    def _prefill_step(self) -> List[RequestHandle]:
         """Advance every mid-prompt slot by one bucketed chunk.
 
         All prefilling rows share one fixed-(B, L) dispatch: L is the
@@ -597,7 +625,7 @@ class ServingEngine:
         # vectorized sample covers every finishing row
         toks = self._sample_first(logits, finishers)
         now = time.perf_counter()
-        finished: List[Any] = []
+        finished: List[RequestHandle] = []
         for i in finishers:
             h = self.slots[i]
             tok = int(toks[i])
@@ -613,11 +641,11 @@ class ServingEngine:
                 self.last_tokens[i] = tok
                 self._slot_arrays = None
                 continue
-            finished.append(h._legacy or h)
+            finished.append(h)
             self._free_slot(i)
         return finished
 
-    def _collect(self, toks: np.ndarray) -> List[Any]:
+    def _collect(self, toks: np.ndarray) -> List[RequestHandle]:
         """Fold a (K, B) chunk of tokens into the per-slot requests.
 
         A slot stops at its first stop-token hit (any id in the request's
@@ -642,7 +670,7 @@ class ServingEngine:
                     self._finish(h, FINISH_LENGTH, now)
                 else:
                     continue
-                finished.append(h._legacy or h)
+                finished.append(h)
                 self._free_slot(slot)
                 break
         return finished
@@ -734,5 +762,5 @@ class SerialAdmitEngine(ServingEngine):
                 self._cursor[slot] = len(prompt)
                 self._slot_arrays = None
                 continue
-            self._admit_finished.append(h._legacy or h)
+            self._admit_finished.append(h)
             self._free_slot(slot)

@@ -22,7 +22,8 @@ from repro.core.ptqtp import PTQTPConfig
 from repro.core.quantize_model import (QuantizedKernel, quantize_kernel,
                                        quantize_tree)
 from repro.models import init_params
-from repro.serving.engine import (EngineConfig, Request, SerialAdmitEngine,
+from repro.serving import SamplingParams
+from repro.serving.engine import (EngineConfig, SerialAdmitEngine,
                                   ServingEngine)
 
 PCFG = PTQTPConfig(group_size=32, t_max=3)
@@ -192,10 +193,9 @@ class TestEngineBoot:
         reqs = [([5, 9, 17, 2], 6), ([1, 2, 3], 5), ([7], 4), ([4, 4], 5)]
         outs = {}
         for tag, p in (("boot-quantize", qtree), ("artifact", art_params)):
-            eng = engine_cls(p, cfg, EngineConfig(max_slots=2, capacity=32,
-                                                  seed=0))
+            eng = engine_cls(p, cfg, EngineConfig(max_slots=2, capacity=32))
             for i, (prompt, mnt) in enumerate(reqs):
-                eng.submit(Request(uid=i, prompt=prompt, max_new_tokens=mnt))
+                eng.submit(prompt, SamplingParams(max_new_tokens=mnt), uid=i)
             outs[tag] = {r.uid: r.output for r in eng.run()}
         assert outs["boot-quantize"] == outs["artifact"]
 

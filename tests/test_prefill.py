@@ -8,7 +8,8 @@ import pytest
 from repro import configs
 from repro.models import (decode_step, init_decode_state, init_params,
                           prefill, prefill_chunk)
-from repro.serving.engine import (EngineConfig, Request, SerialAdmitEngine,
+from repro.serving import SamplingParams
+from repro.serving.engine import (EngineConfig, SerialAdmitEngine,
                                   ServingEngine)
 
 ARCHS = ("qwen2-1.5b", "rwkv6-3b", "recurrentgemma-2b")
@@ -104,7 +105,7 @@ class TestBucketedScheduler:
     def _mixed_outputs(self, cls, params, cfg, prompts, **cfg_kw):
         eng = cls(params, cfg, EngineConfig(**cfg_kw))
         for i, (p, mnt) in enumerate(prompts):
-            eng.submit(Request(uid=i, prompt=p, max_new_tokens=mnt))
+            eng.submit(p, SamplingParams(max_new_tokens=mnt), uid=i)
         done = eng.run()
         return eng, {r.uid: tuple(r.output) for r in done}
 
@@ -121,10 +122,10 @@ class TestBucketedScheduler:
         prompts = [(rng.integers(1, 500, size=n).tolist(), 5) for n in lens]
         eng_s, out_s = self._mixed_outputs(
             SerialAdmitEngine, params, cfg, prompts,
-            max_slots=3, capacity=32, prefill_chunk=8, decode_chunk=4, seed=0)
+            max_slots=3, capacity=32, prefill_chunk=8, decode_chunk=4)
         eng_b, out_b = self._mixed_outputs(
             ServingEngine, params, cfg, prompts,
-            max_slots=3, capacity=32, prefill_chunk=8, decode_chunk=4, seed=0)
+            max_slots=3, capacity=32, prefill_chunk=8, decode_chunk=4)
         assert out_s == out_b
         stats = eng_b.compile_stats()
         bound = stats["prefill_bucket_bound"]
@@ -142,15 +143,14 @@ class TestBucketedScheduler:
         compile — the dispatch set really is closed and bounded."""
         cfg, params = small_model
         eng = ServingEngine(params, cfg, EngineConfig(
-            max_slots=2, capacity=32, prefill_chunk=8, decode_chunk=4,
-            seed=0))
+            max_slots=2, capacity=32, prefill_chunk=8, decode_chunk=4))
         eng.warmup()
         before = eng.compile_stats()
         assert before["prefill_bucket_lengths"] == [1, 2, 4, 8]
         rng = np.random.default_rng(2)
         for i, n in enumerate((1, 5, 13, 40, 7)):
-            eng.submit(Request(uid=i, prompt=rng.integers(1, 500, size=n)
-                               .tolist(), max_new_tokens=3))
+            eng.submit(rng.integers(1, 500, size=n).tolist(),
+                       SamplingParams(max_new_tokens=3), uid=i)
         assert len(eng.run()) == 5
         after = eng.compile_stats()
         assert after["prefill_bucket_lengths"] == before["prefill_bucket_lengths"]
@@ -165,8 +165,8 @@ class TestBucketedScheduler:
         outs = {}
         for cls in (SerialAdmitEngine, ServingEngine):
             eng = cls(params, cfg, EngineConfig(max_slots=1, capacity=16,
-                                                prefill_chunk=8, seed=0))
-            eng.submit(Request(uid=0, prompt=prompt, max_new_tokens=4))
+                                                prefill_chunk=8))
+            eng.submit(prompt, SamplingParams(max_new_tokens=4), uid=0)
             outs[cls] = eng.run()[0].output
             assert len(outs[cls]) == 4
         assert outs[SerialAdmitEngine] == outs[ServingEngine]
@@ -177,12 +177,12 @@ class TestBucketedScheduler:
         cfg, params = small_model
         probe = ServingEngine(params, cfg, EngineConfig(max_slots=1,
                                                         capacity=32))
-        probe.submit(Request(uid=0, prompt=[5, 9, 17, 2], max_new_tokens=1))
+        probe.submit([5, 9, 17, 2], SamplingParams(max_new_tokens=1), uid=0)
         eos = probe.run()[0].output[0]
         eng = ServingEngine(params, cfg, EngineConfig(
             max_slots=1, capacity=32, prefill_chunk=8, eos_id=eos))
-        eng.submit(Request(uid=0, prompt=[5, 9, 17, 2], max_new_tokens=64))
-        eng.submit(Request(uid=1, prompt=[1, 2, 3], max_new_tokens=2))
+        eng.submit([5, 9, 17, 2], SamplingParams(max_new_tokens=64), uid=0)
+        eng.submit([1, 2, 3], SamplingParams(max_new_tokens=2), uid=1)
         done = {r.uid: r for r in eng.run()}
         assert done[0].done and done[0].output == [eos]
         assert done[1].done and len(done[1].output) == 2
@@ -194,8 +194,8 @@ class TestBucketedScheduler:
                                                       capacity=32,
                                                       prefill_chunk=8))
         for i in range(3):
-            eng.submit(Request(uid=i, prompt=[1 + i, 2, 3],
-                               max_new_tokens=1))
+            eng.submit([1 + i, 2, 3], SamplingParams(max_new_tokens=1),
+                       uid=i)
         done = eng.run()
         assert len(done) == 3
         assert all(len(r.output) == 1 and r.done for r in done)
@@ -209,16 +209,16 @@ class TestBucketedScheduler:
         solo = ServingEngine(params, cfg, EngineConfig(max_slots=1,
                                                        capacity=64,
                                                        prefill_chunk=8))
-        solo.submit(Request(uid=0, prompt=[7, 8, 9], max_new_tokens=10))
+        solo.submit([7, 8, 9], SamplingParams(max_new_tokens=10), uid=0)
         ref = solo.run()[0].output
 
         eng = ServingEngine(params, cfg, EngineConfig(
             max_slots=2, capacity=64, prefill_chunk=8, decode_chunk=4))
-        eng.submit(Request(uid=0, prompt=[7, 8, 9], max_new_tokens=10))
+        eng.submit([7, 8, 9], SamplingParams(max_new_tokens=10), uid=0)
         eng.step()  # uid 0 is decoding now
         rng = np.random.default_rng(4)
-        eng.submit(Request(uid=1, prompt=rng.integers(1, 500, size=40)
-                           .tolist(), max_new_tokens=3))
+        eng.submit(rng.integers(1, 500, size=40).tolist(),
+                   SamplingParams(max_new_tokens=3), uid=1)
         decode_steps_before = eng.steps
         done = {r.uid: r for r in eng.run()}
         assert done[0].output == ref  # decoder unaffected by the long admit
@@ -233,4 +233,4 @@ class TestBucketedScheduler:
         eng = ServingEngine(params, cfg, EngineConfig(max_slots=1,
                                                       capacity=16))
         with pytest.raises(ValueError):
-            eng.submit(Request(uid=0, prompt=[], max_new_tokens=2))
+            eng.submit([], SamplingParams(max_new_tokens=2), uid=0)

@@ -13,7 +13,7 @@ from repro.core.ptqtp import PTQTPConfig
 from repro.core.quantize_model import quantize_tree
 from repro.models import forward, init_params
 from repro.serving import SamplingParams, SerialAdmitEngine
-from repro.serving.engine import EngineConfig, Request, ServingEngine
+from repro.serving.engine import EngineConfig, ServingEngine
 from repro.serving.sampling import (request_keys, sample_token,
                                     sample_tokens,
                                     sample_tokens_per_request,
@@ -62,8 +62,8 @@ class TestEngine:
         eng = ServingEngine(params, cfg, EngineConfig(max_slots=2,
                                                       capacity=64))
         for i in range(5):  # more requests than slots → continuous batching
-            eng.submit(Request(uid=i, prompt=[1, 2, 3 + i],
-                               max_new_tokens=4))
+            eng.submit([1, 2, 3 + i], SamplingParams(max_new_tokens=4),
+                       uid=i)
         done = eng.run()
         assert len(done) == 5
         assert all(len(r.output) == 4 for r in done)
@@ -75,7 +75,7 @@ class TestEngine:
         prompt = [5, 9, 17, 2]
         eng = ServingEngine(params, cfg, EngineConfig(max_slots=1,
                                                       capacity=32))
-        eng.submit(Request(uid=0, prompt=prompt, max_new_tokens=3))
+        eng.submit(prompt, SamplingParams(max_new_tokens=3), uid=0)
         out = eng.run()[0].output
 
         seq = list(prompt)
@@ -96,7 +96,7 @@ class TestEngine:
         eng = ServingEngine(params, cfg,
                             EngineConfig(max_slots=1, capacity=32,
                                          eos_id=eos))
-        eng.submit(Request(uid=0, prompt=[5, 9, 17, 2], max_new_tokens=64))
+        eng.submit([5, 9, 17, 2], SamplingParams(max_new_tokens=64), uid=0)
         done = eng.run()
         assert len(done) == 1 and len(done[0].output) <= 2
 
@@ -105,7 +105,7 @@ class TestEngine:
         qp, _ = quantize_tree(params, PTQTPConfig(group_size=32, t_max=5))
         eng = ServingEngine(qp, cfg, EngineConfig(max_slots=2, capacity=32))
         for i in range(3):
-            eng.submit(Request(uid=i, prompt=[1, 2, 3], max_new_tokens=3))
+            eng.submit([1, 2, 3], SamplingParams(max_new_tokens=3), uid=i)
         done = eng.run()
         assert len(done) == 3
         assert all(len(r.output) == 3 for r in done)
@@ -121,7 +121,7 @@ class TestEngine:
                                 EngineConfig(max_slots=2, capacity=32,
                                              decode_chunk=chunk))
             for i, (prompt, mnt) in enumerate(reqs):
-                eng.submit(Request(uid=i, prompt=prompt, max_new_tokens=mnt))
+                eng.submit(prompt, SamplingParams(max_new_tokens=mnt), uid=i)
             outs[chunk] = {r.uid: r.output for r in eng.run()}
         assert outs[1] == outs[8]
 
@@ -131,13 +131,13 @@ class TestEngine:
         # find the 2nd greedy continuation token, use it as EOS
         eng = ServingEngine(params, cfg, EngineConfig(max_slots=1,
                                                       capacity=32))
-        eng.submit(Request(uid=0, prompt=[5, 9, 17, 2], max_new_tokens=8))
+        eng.submit([5, 9, 17, 2], SamplingParams(max_new_tokens=8), uid=0)
         free_run = eng.run()[0].output
         eos = free_run[2]
         eng2 = ServingEngine(params, cfg,
                              EngineConfig(max_slots=1, capacity=32,
                                           eos_id=eos, decode_chunk=8))
-        eng2.submit(Request(uid=0, prompt=[5, 9, 17, 2], max_new_tokens=8))
+        eng2.submit([5, 9, 17, 2], SamplingParams(max_new_tokens=8), uid=0)
         out = eng2.run()[0].output
         # stops at (and includes) the *first* occurrence of the EOS token
         first = free_run.index(eos)
@@ -149,15 +149,16 @@ class TestEngine:
         cfg, params = small_model
         solo = ServingEngine(params, cfg, EngineConfig(max_slots=1,
                                                        capacity=32))
-        solo.submit(Request(uid=0, prompt=[7, 8, 9], max_new_tokens=5))
+        solo.submit([7, 8, 9], SamplingParams(max_new_tokens=5), uid=0)
         ref = solo.run()[0].output
 
         mixed = ServingEngine(params, cfg, EngineConfig(max_slots=2,
                                                         capacity=32))
-        mixed.submit(Request(uid=0, prompt=[7, 8, 9], max_new_tokens=5,
-                             temperature=0.0))
-        mixed.submit(Request(uid=1, prompt=[1, 2], max_new_tokens=5,
-                             temperature=8.0))
+        mixed.submit([7, 8, 9], SamplingParams(max_new_tokens=5,
+                                               temperature=0.0), uid=0)
+        mixed.submit([1, 2], SamplingParams(max_new_tokens=5,
+                                            temperature=8.0, seed=1),
+                     uid=1)
         outs = {r.uid: r.output for r in mixed.run()}
         assert outs[0] == ref
 
@@ -166,14 +167,14 @@ class TestEngine:
         cfg, params = small_model
         solo = ServingEngine(params, cfg, EngineConfig(max_slots=1,
                                                        capacity=32))
-        solo.submit(Request(uid=0, prompt=[7, 8, 9], max_new_tokens=4))
+        solo.submit([7, 8, 9], SamplingParams(max_new_tokens=4), uid=0)
         ref = solo.run()[0].output
 
         packed = ServingEngine(params, cfg, EngineConfig(max_slots=3,
                                                          capacity=32))
-        packed.submit(Request(uid=0, prompt=[7, 8, 9], max_new_tokens=4))
-        packed.submit(Request(uid=1, prompt=[1], max_new_tokens=4))
-        packed.submit(Request(uid=2, prompt=[2, 3], max_new_tokens=4))
+        packed.submit([7, 8, 9], SamplingParams(max_new_tokens=4), uid=0)
+        packed.submit([1], SamplingParams(max_new_tokens=4), uid=1)
+        packed.submit([2, 3], SamplingParams(max_new_tokens=4), uid=2)
         outs = {r.uid: r.output for r in packed.run()}
         assert outs[0] == ref
 
@@ -463,23 +464,24 @@ class TestRequestAPI:
         res = h.result()
         assert res.truncated and res.tokens == ref_toks
 
-    def test_deprecated_request_shim(self, small_model):
-        """submit(Request(...)) + run() (the pre-v1 surface) still works and
-        matches the v1 path token for token."""
-        cfg, params = small_model
-        v1 = ServingEngine(params, cfg, EngineConfig(max_slots=1,
-                                                     capacity=32))
-        ref = v1.submit([5, 9, 17, 2], SamplingParams(
-            max_new_tokens=3)).result().tokens
+    def test_pre_v1_shim_is_gone(self, small_model):
+        """The deprecated Request/run() shim had its one PR of grace and is
+        removed: the package no longer exports Request, and submit rejects
+        anything that is not a token-id sequence."""
+        import repro.serving as serving
 
+        assert not hasattr(serving, "Request")
+        cfg, params = small_model
         eng = ServingEngine(params, cfg, EngineConfig(max_slots=1,
                                                       capacity=32))
-        req = Request(uid=0, prompt=[5, 9, 17, 2], max_new_tokens=3)
-        eng.submit(req)
+        with pytest.raises(TypeError):
+            eng.submit(object())
+        with pytest.raises(TypeError):
+            eng.submit("tokenize me first")
+        # run() survives as the batch-driver style and returns v1 handles
+        h = eng.submit([5, 9, 17, 2], SamplingParams(max_new_tokens=3))
         done = eng.run()
-        assert done == [req] and req.done
-        assert tuple(req.output) == ref
-        assert req.t_submit > 0 and req.t_first >= req.t_submit
+        assert done == [h] and h.done and len(h.output) == 3
 
     def test_topk_topp_request_restricts_support(self, small_model):
         """A top-k request's every sampled token stays inside the greedy
