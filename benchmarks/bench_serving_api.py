@@ -1,6 +1,7 @@
-"""Serving API v1 benchmark: streaming TTFT + cancellation churn.
+"""Serving API v1 benchmark: streaming TTFT, cancellation churn, overload
+shedding, and fault-injection chaos.
 
-Three sections, one JSON:
+Five sections, one JSON:
 
   * **streaming** — requests consumed through ``RequestHandle.tokens()``
     under a bursty arrival trace: per-request stream TTFT (submit → first
@@ -19,6 +20,18 @@ Three sections, one JSON:
     and on the serial scheduler; records the bit-identity bool the API
     guarantees (also asserted, with more compositions, in
     tests/test_serving.py).
+  * **overload** — a seeded Poisson arrival trace offered at ~2x the
+    fleet's service capacity, run twice: with ``max_queue`` load-shedding
+    (policy "reject") and without any cap. Records the shed rate, p99 TTFT
+    of completed requests both ways, and the max queue depth (asserted
+    under the cap when shedding) — the degradation story: bounded queues +
+    fast rejections vs unbounded queue growth and TTFT blowup.
+  * **chaos** — a seeded ``FaultPlan`` (NaN logits, attributed + vetoed
+    dispatches, a clock stall that expires a deadline) against a bursty
+    trace, diffed request-by-request against the identical fault-free run:
+    survivors must be bit-identical (recorded + asserted); plus one
+    corrupt-artifact-shard probe checking the reader's checksum report
+    names the damaged buffer.
 
 ``PYTHONPATH=src python benchmarks/bench_serving_api.py [--quick]``
 
@@ -189,6 +202,156 @@ def _bench_determinism(rows, log, params, cfg, quick):
         f"{rows['determinism_bit_identical']}")
 
 
+# ---------------------------------------------------------------------------
+# overload: Poisson 2x over-capacity, shedding on vs off
+# ---------------------------------------------------------------------------
+
+def _drive_poisson(params, cfg, ecfg, prompts, max_new, lam, seed):
+    """Offer ``prompts`` as a Poisson arrival trace (~``lam`` submits per
+    engine step) and drive to drain. Returns (handles, max queue depth)."""
+    rng = np.random.default_rng(seed)
+    eng = ServingEngine(params, cfg, ecfg)
+    handles, i, max_depth = [], 0, 0
+    while i < len(prompts) or eng.queue \
+            or any(s is not None for s in eng.slots):
+        for _ in range(int(rng.poisson(lam))):
+            if i >= len(prompts):
+                break
+            handles.append(eng.submit(
+                prompts[i], SamplingParams(max_new_tokens=max_new, seed=i)))
+            i += 1
+        eng.step()
+        max_depth = max(max_depth, len(eng.queue))
+    assert all(h.done for h in handles)  # nothing dangles under overload
+    return eng, handles, max_depth
+
+
+def _bench_overload(rows, log, params, cfg, quick):
+    n_req = 16 if quick else 48
+    max_new = 6 if quick else 10
+    max_queue = 4
+    prompts = _prompts(n_req, quick, seed=7)
+    base = dict(max_slots=2, capacity=64, decode_chunk=4, prefill_chunk=16)
+    # service ~= 1-2 requests per step at 2 slots; lam 3 offers ~2x that
+    lam = 3.0
+
+    def p99_ttft_ms(handles):
+        ttfts = [1e3 * (h.t_first - h.t_submit) for h in handles
+                 if h.t_first > 0]
+        return float(np.percentile(ttfts, 99)) if ttfts else 0.0
+
+    # warm the jit caches for this engine shape so neither measured run
+    # pays compile time inside its TTFTs
+    _drive_poisson(params, cfg, EngineConfig(**base), prompts[:4], max_new,
+                   lam, seed=11)
+
+    shed_eng, shed_h, shed_depth = _drive_poisson(
+        params, cfg, EngineConfig(**base, max_queue=max_queue,
+                                  admission_policy="reject"),
+        prompts, max_new, lam, seed=11)
+    open_eng, open_h, open_depth = _drive_poisson(
+        params, cfg, EngineConfig(**base), prompts, max_new, lam, seed=11)
+
+    assert shed_depth <= max_queue  # the cap held at every step
+    rows["overload_n_requests"] = n_req
+    rows["overload_offered_per_step"] = lam
+    rows["overload_max_queue"] = max_queue
+    rows["overload_shed_rate"] = shed_eng.sheds / n_req
+    rows["overload_p99_ttft_ms_shedding"] = p99_ttft_ms(shed_h)
+    rows["overload_p99_ttft_ms_unbounded"] = p99_ttft_ms(open_h)
+    rows["overload_max_queue_depth_shedding"] = shed_depth
+    rows["overload_max_queue_depth_unbounded"] = open_depth
+    rows["overload_completed_shedding"] = sum(
+        h.finish_reason == "length" for h in shed_h)
+    for k in ("overload_shed_rate", "overload_p99_ttft_ms_shedding",
+              "overload_p99_ttft_ms_unbounded",
+              "overload_max_queue_depth_shedding",
+              "overload_max_queue_depth_unbounded"):
+        log(f"bench_serving_api,{k},{rows[k]}")
+
+
+# ---------------------------------------------------------------------------
+# chaos: seeded fault plan; survivors diffed against the fault-free run
+# ---------------------------------------------------------------------------
+
+def _bench_chaos(rows, log, params, cfg, quick):
+    from repro.serving import FaultInjector, FaultPlan, VirtualClock
+
+    n_req = 8 if quick else 16
+    prompts = _prompts(n_req, quick, seed=21)
+    sps = [SamplingParams(max_new_tokens=4 + (i % 4),
+                          temperature=0.0 if i % 2 else 0.9, seed=300 + i)
+           for i in range(n_req)]
+    sps[5] = SamplingParams(max_new_tokens=8, seed=305, deadline_s=30.0)
+    ecfg = dict(max_slots=2, capacity=64, decode_chunk=2, prefill_chunk=16,
+                max_queue=n_req, admission_policy="reject")
+
+    def drive(plan):
+        inj = FaultInjector(plan, clock=VirtualClock())
+        eng = ServingEngine(params, cfg, EngineConfig(**ecfg), injector=inj)
+        handles = [eng.submit(p, sp) for p, sp in zip(prompts, sps)]
+        eng.run()
+        return eng, inj, handles
+
+    _, _, clean = drive(FaultPlan())
+    plan = (FaultPlan(seed=5)
+            .nan_logits(uid=1, gen_index=1)
+            .dispatch_error("decode", 2, uid=3)
+            .dispatch_error("prefill", 3)
+            .stall_clock(at_step=4, advance_s=60.0))
+    eng, inj, chaos = drive(plan)
+
+    by_uid = {h.uid: h for h in clean}
+    touched = {h.uid for h in chaos
+               if h.finish_reason in ("error", "timeout", "rejected")}
+    survivors = [h for h in chaos if h.uid not in touched]
+    identical = all(h.output == by_uid[h.uid].output for h in survivors)
+    assert identical  # the keystone guarantee, enforced not just recorded
+    fired = sorted({k for k, _ in inj.log})
+    reasons = {}
+    for h in chaos:
+        reasons[h.finish_reason] = reasons.get(h.finish_reason, 0) + 1
+    rows["chaos_n_requests"] = n_req
+    rows["chaos_plan"] = plan.describe()
+    rows["chaos_faults_fired"] = fired
+    rows["chaos_finish_reasons"] = reasons
+    rows["chaos_n_survivors"] = len(survivors)
+    rows["chaos_survivors_bit_identical"] = identical
+    rows["chaos_errors_contained"] = eng.errors
+    rows["chaos_timeouts"] = eng.timeouts
+    rows["chaos_health"] = eng.health().summary()
+    for k in ("chaos_n_survivors", "chaos_survivors_bit_identical",
+              "chaos_errors_contained", "chaos_timeouts"):
+        log(f"bench_serving_api,{k},{rows[k]}")
+
+    # corrupt-shard probe: the reader's report must name the damaged buffer
+    import tempfile
+
+    from repro.artifacts import (ArtifactError, load_artifact,
+                                 write_artifact)
+    from repro.core.ptqtp import PTQTPConfig
+    from repro.serving.faults import corrupt_artifact_shard
+
+    with tempfile.TemporaryDirectory() as td:
+        art = Path(td) / "artifact"
+        small = {"layer": {"kernel": np.random.default_rng(0)
+                           .standard_normal((64, 32)).astype(np.float32)}}
+        write_artifact(art, arch="qwen2-1.5b", model_cfg=cfg,
+                       ptqtp_cfg=PTQTPConfig(group_size=32, t_max=5),
+                       params=small)
+        load_artifact(art, verify="sizes")  # intact: fast mode passes
+        dmg = corrupt_artifact_shard(art, seed=5)
+        try:
+            load_artifact(art, verify="full")
+            caught = False
+        except ArtifactError as e:
+            caught = dmg["tensor"] in str(e) and dmg["shard"] in str(e)
+    rows["chaos_corrupt_shard"] = {k: dmg[k] for k in
+                                   ("tensor", "buffer", "shard")}
+    rows["chaos_corrupt_shard_report_accurate"] = caught
+    log(f"bench_serving_api,chaos_corrupt_shard_report_accurate,{caught}")
+
+
 def run(log=print, quick=False):
     rows = {}
     cfg = configs.get_smoke_config("qwen2-1.5b")
@@ -202,6 +365,8 @@ def run(log=print, quick=False):
     _bench_streaming(rows, log, eng, quick)
     _bench_cancel(rows, log, qparams, cfg, quick)
     _bench_determinism(rows, log, qparams, cfg, quick)
+    _bench_overload(rows, log, qparams, cfg, quick)
+    _bench_chaos(rows, log, qparams, cfg, quick)
     rows["headline_stream_ttft_overhead_ms"] = rows["stream_ttft_overhead_ms"]
     save_result("BENCH_serving_api", rows)
     (ROOT / "BENCH_serving_api.json").write_text(

@@ -50,13 +50,14 @@ quantized kernels cannot drift.
 """
 
 from repro.artifacts.format import ArtifactError
-from repro.artifacts.reader import (load_artifact, load_model_config,
+from repro.artifacts.reader import (VERIFY_MODES, check_shard_sizes,
+                                    load_artifact, load_model_config,
                                     read_manifest, verify_artifact)
 from repro.artifacts.writer import (ArtifactWriter, iter_checkpoint_leaves,
                                     write_artifact)
 
 __all__ = [
-    "ArtifactError", "ArtifactWriter", "iter_checkpoint_leaves",
-    "load_artifact", "load_model_config", "read_manifest", "verify_artifact",
-    "write_artifact",
+    "ArtifactError", "ArtifactWriter", "VERIFY_MODES", "check_shard_sizes",
+    "iter_checkpoint_leaves", "load_artifact", "load_model_config",
+    "read_manifest", "verify_artifact", "write_artifact",
 ]

@@ -8,16 +8,26 @@ the first dispatches touch them (and the OS page cache shares them across
 server processes on one host — quantize once, serve many).
 
 Integrity: the manifest must be ``complete`` (the writer only publishes
-complete artifacts, so an incomplete one means a torn copy), the format
-version must match, and ``verify=True`` (or :func:`verify_artifact`)
-re-checksums every buffer against its recorded crc32.
+complete artifacts, so an incomplete one means a torn copy) and the format
+version must match. On top of that, ``verify`` selects how much of the data
+itself is checked before boot:
+
+  * ``"off"`` / ``False`` — trust the bytes; pages fault in lazily.
+  * ``"sizes"`` — stat every shard and require its size to equal the
+    manifest's byte count exactly (the writer truncates each shard to its
+    committed length, so any mismatch is a torn copy or trailing garbage).
+    Catches truncation in O(#shards) without reading a single tensor byte.
+  * ``"full"`` / ``True`` — the sizes check plus an eager crc32 pass over
+    every buffer. A mismatch raises :class:`~.format.ArtifactError` naming
+    the tensor, buffer, shard file, byte range, and the expected vs actual
+    crc32, so the damaged region can be located without a bisection hunt.
 """
 
 from __future__ import annotations
 
 import json
 from pathlib import Path
-from typing import Any, Dict, Tuple
+from typing import Any, Dict, Tuple, Union
 
 import numpy as np
 
@@ -57,15 +67,56 @@ def _buffer_view(mm: np.memmap, rec: Dict[str, Any], where: str) -> np.ndarray:
     return view.reshape(rec["shape"])
 
 
-def load_artifact(artifact_dir: str | Path, *, verify: bool = False
+VERIFY_MODES = ("off", "sizes", "full")
+
+
+def _verify_mode(verify: Union[bool, str, None]) -> str:
+    if verify is True:
+        return "full"
+    if verify is False or verify is None:
+        return "off"
+    if verify in VERIFY_MODES:
+        return verify
+    raise ValueError(f"verify must be a bool or one of {VERIFY_MODES}, "
+                     f"got {verify!r}")
+
+
+def check_shard_sizes(artifact_dir: str | Path,
+                      manifest: Dict[str, Any]) -> None:
+    """The ``verify="sizes"`` fast pass: every shard file must exist with
+    *exactly* its committed byte count (the writer truncates shards to
+    their manifest length, so smaller means a torn copy and larger means
+    trailing garbage). Reads no tensor bytes."""
+    artifact_dir = Path(artifact_dir)
+    for shard in manifest["shards"]:
+        p = artifact_dir / shard["file"]
+        if not p.exists():
+            raise ArtifactError(f"shard {p} is missing "
+                                f"(manifest commits {shard['nbytes']} bytes)")
+        size = p.stat().st_size
+        if size != shard["nbytes"]:
+            what = "truncated" if size < shard["nbytes"] else "oversized"
+            raise ArtifactError(
+                f"shard {p} is {what}: {size} bytes on disk vs "
+                f"{shard['nbytes']} committed in the manifest — torn copy "
+                "or partial download; re-fetch or re-quantize the artifact")
+
+
+def load_artifact(artifact_dir: str | Path, *,
+                  verify: Union[bool, str] = False
                   ) -> Tuple[Dict[str, Any], Dict[str, Any]]:
     """-> (params_tree, manifest) with memmap-backed leaves.
 
-    ``verify=True`` eagerly re-checksums every buffer (reads the whole
-    artifact once); the default leaves pages untouched until first use.
+    ``verify`` is ``"off"``/``False`` (default; lazy pages, no checks beyond
+    the manifest), ``"sizes"`` (stat-only shard-length check, no tensor
+    reads), or ``"full"``/``True`` (sizes plus an eager crc32 re-checksum of
+    every buffer — reads the whole artifact once). See module docstring.
     """
     artifact_dir = Path(artifact_dir)
+    mode = _verify_mode(verify)
     manifest = read_manifest(artifact_dir)
+    if mode in ("sizes", "full"):
+        check_shard_sizes(artifact_dir, manifest)
     mmaps: Dict[str, np.memmap] = {}
     for shard in manifest["shards"]:
         p = artifact_dir / shard["file"]
@@ -79,11 +130,17 @@ def load_artifact(artifact_dir: str | Path, *, verify: bool = False
         views = {}
         for name, buf in rec["buffers"].items():
             view = _buffer_view(mmaps[buf["shard"]], buf, f"{path}:{name}")
-            if verify and afmt.checksum(view) != buf["crc32"]:
-                raise ArtifactError(
-                    f"checksum mismatch for tensor {path!r} buffer {name!r} "
-                    f"in {artifact_dir / buf['shard']} — artifact is corrupt; "
-                    "re-run the quantize CLI with --overwrite")
+            if mode == "full":
+                actual = afmt.checksum(view)
+                if actual != buf["crc32"]:
+                    end = buf["offset"] + buf["nbytes"]
+                    raise ArtifactError(
+                        f"checksum mismatch for tensor {path!r} buffer "
+                        f"{name!r}: shard {artifact_dir / buf['shard']} "
+                        f"bytes [{buf['offset']}, {end}) expected "
+                        f"crc32 {buf['crc32']:#010x}, got {actual:#010x} — "
+                        "artifact is corrupt; re-run the quantize CLI with "
+                        "--overwrite")
             views[name] = view
         if rec["kind"] == "ptqtp":
             m = rec["meta"]
@@ -101,7 +158,11 @@ def load_model_config(manifest: Dict[str, Any]):
     return afmt.model_config_from_json(manifest["model_config"])
 
 
-def verify_artifact(artifact_dir: str | Path) -> Dict[str, Any]:
-    """Full integrity pass; returns the manifest stats on success."""
-    _, manifest = load_artifact(artifact_dir, verify=True)
+def verify_artifact(artifact_dir: str | Path,
+                    mode: str = "full") -> Dict[str, Any]:
+    """Standalone integrity pass (``"full"`` or the stat-only ``"sizes"``);
+    returns the manifest stats on success."""
+    if _verify_mode(mode) == "off":
+        raise ValueError('verify_artifact mode must be "sizes" or "full"')
+    _, manifest = load_artifact(artifact_dir, verify=mode)
     return manifest.get("stats", {})

@@ -17,9 +17,18 @@ instead of dropping tokens invisibly. ``--artifact PATH`` replaces the
 first two stages with a memory-mapped load of a ``repro.launch.quantize``
 artifact — the server never touches FP weights and pays no quantization at
 boot (the "quantize once, serve many" deployment path; the startup summary
-breaks the boot down per phase so the win is visible). ``--scheduler
-serial`` selects the PR-1 serial-admit baseline (one jit per prompt length)
-for A/B comparison.
+breaks the boot down per phase so the win is visible); ``--verify-artifact
+sizes`` stat-checks shard lengths at boot and ``--verify-artifact`` (or
+``=full``) re-checksums every buffer. ``--scheduler serial`` selects the
+PR-1 serial-admit baseline (one jit per prompt length) for A/B comparison.
+
+Robustness knobs (v1.1): ``--deadline`` / ``--ttft-deadline`` give every
+request a wall budget (expired requests retire with finish_reason
+``"timeout"``); ``--max-queue`` / ``--max-resident-tokens`` bound admission
+with ``--admission-policy`` choosing shed-on-submit (``reject``, the
+default) vs progress-coupled blocking (``block``). The final line prints
+``engine.health().summary()`` — the same one-line snapshot a monitor
+scrapes.
 """
 
 from __future__ import annotations
@@ -53,8 +62,12 @@ def main(argv=None):
                     help="boot from a prebuilt trit-plane artifact "
                          "(repro.launch.quantize) instead of init+quantize; "
                          "--arch and the quantize flags are ignored")
-    ap.add_argument("--verify-artifact", action="store_true",
-                    help="re-checksum every artifact buffer at boot")
+    ap.add_argument("--verify-artifact", nargs="?", const="full",
+                    choices=("off", "sizes", "full"), default="off",
+                    help="artifact integrity check at boot: 'sizes' "
+                         "stat-checks shard lengths without reading tensor "
+                         "bytes; 'full' (also the value when the flag is "
+                         "given bare) re-checksums every buffer")
     ap.add_argument("--requests", type=int, default=4)
     ap.add_argument("--max-new", type=int, default=16)
     ap.add_argument("--temperature", type=float, default=0.0,
@@ -66,6 +79,24 @@ def main(argv=None):
     ap.add_argument("--stream", action="store_true",
                     help="consume the first request token-by-token through "
                          "RequestHandle.tokens()")
+    ap.add_argument("--deadline", type=float, default=None, metavar="S",
+                    help="per-request end-to-end wall budget in seconds; an "
+                         "expired request retires with finish_reason "
+                         "'timeout', keeping the tokens it already produced")
+    ap.add_argument("--ttft-deadline", type=float, default=None, metavar="S",
+                    help="per-request budget for the first token, seconds")
+    ap.add_argument("--max-queue", type=int, default=None, metavar="N",
+                    help="admission cap on waiting requests (load shedding)")
+    ap.add_argument("--max-resident-tokens", type=int, default=None,
+                    metavar="N",
+                    help="admission cap on the committed token footprint "
+                         "(clipped prompt + generation budget) over queued "
+                         "plus resident work")
+    ap.add_argument("--admission-policy", choices=("reject", "block"),
+                    default="reject",
+                    help="what submit() does past a cap: 'reject' sheds the "
+                         "request (finish_reason 'rejected'), 'block' drives "
+                         "engine steps until it fits")
     ap.add_argument("--slots", type=int, default=4)
     ap.add_argument("--capacity", type=int, default=128)
     ap.add_argument("--prefill-chunk", type=int, default=32,
@@ -133,7 +164,10 @@ def main(argv=None):
     t0 = time.time()
     engine = cls(params, cfg, EngineConfig(
         max_slots=args.slots, capacity=args.capacity,
-        prefill_chunk=args.prefill_chunk, attn_backend=args.attn_backend))
+        prefill_chunk=args.prefill_chunk, attn_backend=args.attn_backend,
+        max_queue=args.max_queue,
+        max_resident_tokens=args.max_resident_tokens,
+        admission_policy=args.admission_policy))
     boot["engine_init"] = time.time() - t0
     mem = engine.memory_stats()
     if mem["preunpack_decode"]:
@@ -159,7 +193,13 @@ def main(argv=None):
         prompt = tok.encode(PROMPTS[i % len(PROMPTS)], eos=False)
         h = engine.submit(prompt, SamplingParams(
             max_new_tokens=args.max_new, temperature=args.temperature,
-            top_k=args.top_k, top_p=args.top_p, seed=args.seed + i))
+            top_k=args.top_k, top_p=args.top_p, seed=args.seed + i,
+            deadline_s=args.deadline, ttft_deadline_s=args.ttft_deadline))
+        if h.done:  # shed at submit (admission-policy reject past a cap)
+            print(f"[serve] WARNING: request {h.uid} {h.finish_reason}: "
+                  f"{h.error}")
+            handles.append(h)
+            continue
         if h.truncated:
             print(f"[serve] WARNING: request {h.uid} prompt "
                   f"({len(prompt)} tokens) exceeds --capacity "
@@ -168,7 +208,7 @@ def main(argv=None):
         handles.append(h)
 
     t0 = time.time()
-    if args.stream and handles:
+    if args.stream and handles and not handles[0].done:
         # the streaming path: tokens arrive in the engine step that produced
         # them (first one in the step its prefill completed); the rest of
         # the fleet advances through the same steps
@@ -193,6 +233,7 @@ def main(argv=None):
     for r in sorted(results, key=lambda r: r.uid)[:4]:
         print(f"  [{r.uid}] ({r.finish_reason}) -> "
               f"{tok.decode(list(r.tokens))!r}")
+    print(f"[serve] health: {engine.health().summary()}")
     return results
 
 

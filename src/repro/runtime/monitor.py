@@ -1,15 +1,26 @@
-"""Heartbeats + straggler detection for multi-host training.
+"""Heartbeats + straggler detection for multi-host training, and the
+serving-side health snapshot built on the same idiom.
 
 Each host writes a heartbeat file (step, wall time, step duration) every step;
 the rank-0 monitor reads all heartbeats and flags:
 
   * **dead hosts**  — no heartbeat within `dead_after_s`,
-  * **stragglers**  — per-step time > `straggler_factor` × fleet median.
+  * **stragglers**  — per-step time > `straggler_factor` × fleet median,
+  * **clock-skewed hosts** — heartbeat timestamp in the *future* by more than
+    `skew_tolerance_s`: a skewed clock would otherwise make a host look
+    freshly alive forever, hiding a real death behind a bad NTP sync.
 
 On a real fleet the orchestrator restarts dead hosts from the latest
 checkpoint (runtime/checkpoint.py is elastic, so a *smaller* healthy mesh can
 also resume — straggler *mitigation by exclusion*). Here the detector's
 decision logic is exercised directly by unit tests.
+
+:class:`HealthSnapshot` is the per-request analogue for the serving engine:
+one frozen record of queue depth, slot occupancy, and the fault-containment
+counters (sheds, timeouts, quarantines), produced by
+``ServingEngine.health()`` each time it is asked and writable as a heartbeat
+(``snapshot.beat(monitor)``) so a serving host shows up in the same fleet
+assessment as a training host.
 """
 
 from __future__ import annotations
@@ -18,7 +29,7 @@ import dataclasses
 import json
 import time
 from pathlib import Path
-from typing import Dict, List, Optional
+from typing import Dict, List, Optional, Tuple
 
 import numpy as np
 
@@ -30,14 +41,19 @@ class HeartbeatMonitor:
     run_dir: str
     host_id: int = 0
 
+    def __post_init__(self):
+        self._dir: Optional[Path] = None  # created once, on first beat
+
     def beat(self, step: int, step_time_s: float, **metrics):
-        d = Path(self.run_dir) / "heartbeats"
-        d.mkdir(parents=True, exist_ok=True)
-        tmp = d / f".host{self.host_id:04d}.tmp"
+        if self._dir is None:
+            d = Path(self.run_dir) / "heartbeats"
+            d.mkdir(parents=True, exist_ok=True)
+            self._dir = d
+        tmp = self._dir / f".host{self.host_id:04d}.tmp"
         payload = {"host": self.host_id, "step": step, "t": time.time(),
                    "step_time_s": step_time_s, **metrics}
         tmp.write_text(json.dumps(payload))
-        tmp.rename(d / f"host{self.host_id:04d}.json")
+        tmp.rename(self._dir / f"host{self.host_id:04d}.json")
 
 
 @dataclasses.dataclass
@@ -47,6 +63,7 @@ class StragglerDetector:
     run_dir: str
     dead_after_s: float = 120.0
     straggler_factor: float = 2.0
+    skew_tolerance_s: float = 5.0
 
     def read(self) -> List[Dict]:
         d = Path(self.run_dir) / "heartbeats"
@@ -65,13 +82,62 @@ class StragglerDetector:
         beats = self.read()
         if not beats:
             return {"healthy": [], "dead": [], "stragglers": [],
-                    "median_step_s": None}
-        dead = [b["host"] for b in beats if now - b["t"] > self.dead_after_s]
-        alive = [b for b in beats if b["host"] not in dead]
+                    "skewed": [], "median_step_s": None}
+        # a timestamp from the future is a broken clock, not a fresh beat:
+        # the host's liveness cannot be assessed, so it is flagged instead
+        # of silently counting as alive until its skew drains
+        skewed = [b["host"] for b in beats
+                  if b["t"] - now > self.skew_tolerance_s]
+        dead = [b["host"] for b in beats
+                if b["host"] not in skewed and now - b["t"] > self.dead_after_s]
+        alive = [b for b in beats
+                 if b["host"] not in dead and b["host"] not in skewed]
         med = float(np.median([b["step_time_s"] for b in alive])) if alive \
             else None
         stragglers = [b["host"] for b in alive
                       if med and b["step_time_s"] > self.straggler_factor * med]
         healthy = [b["host"] for b in alive if b["host"] not in stragglers]
         return {"healthy": healthy, "dead": dead, "stragglers": stragglers,
-                "median_step_s": med}
+                "skewed": skewed, "median_step_s": med}
+
+
+@dataclasses.dataclass(frozen=True)
+class HealthSnapshot:
+    """One observation of a serving engine's health (``engine.health()``).
+
+    Gauges describe the instant the snapshot was taken; counters are
+    monotone totals since engine construction, so a monitor can difference
+    two snapshots for rates. ``quarantined_slots`` lists slots a contained
+    fault removed from the admission pool (``engine.rehabilitate()``
+    returns them after a row reset).
+    """
+
+    t: float                      # wall time of the observation
+    steps: int                    # decode dispatches so far (counter)
+    queue_depth: int              # requests waiting for a slot (gauge)
+    resident: int                 # occupied slots (gauge)
+    free_slots: int               # admissible slots (gauge)
+    quarantined_slots: Tuple[int, ...]  # suspect slots, out of the pool
+    resident_tokens: int          # committed tokens of queued+resident work
+    completed: int                # finished stop/length (counter)
+    cancelled: int                # finished cancelled (counter)
+    sheds: int                    # rejected at submit by admission control
+    timeouts: int                 # retired by deadline sweep (counter)
+    errors: int                   # retired by fault containment (counter)
+
+    def beat(self, monitor: HeartbeatMonitor, step_time_s: float = 0.0):
+        """Publish this snapshot through the training-side heartbeat file
+        protocol, so one :class:`StragglerDetector` watches both kinds of
+        host."""
+        monitor.beat(self.steps, step_time_s,
+                     **{k: v for k, v in dataclasses.asdict(self).items()
+                        if k not in ("t", "steps")})
+
+    def summary(self) -> str:
+        """One log line (what ``launch/serve.py`` prints)."""
+        q = ",".join(map(str, self.quarantined_slots)) or "-"
+        return (f"queue={self.queue_depth} resident={self.resident} "
+                f"free={self.free_slots} quarantined=[{q}] "
+                f"tokens={self.resident_tokens} done={self.completed} "
+                f"cancelled={self.cancelled} shed={self.sheds} "
+                f"timeout={self.timeouts} error={self.errors}")

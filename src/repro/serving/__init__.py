@@ -11,7 +11,49 @@ Submission
 ``temperature`` (0 → greedy), ``top_k`` (0 → off), ``top_p`` (1.0 → off),
 ``seed`` (the request's private RNG stream), ``stop`` (a set of token ids
 that terminate generation, honored in addition to the engine-wide
-``EngineConfig.eos_id``; the stop token is the last token of the output).
+``EngineConfig.eos_id``; the stop token is the last token of the output),
+``deadline_s`` / ``ttft_deadline_s`` (wall budgets measured from submit;
+None → none).
+
+Deadlines (v1.1)
+----------------
+The engine sweeps expirations at the start of every ``step()``: a request
+past ``deadline_s`` — or past ``ttft_deadline_s`` with no first token yet —
+retires with frozen ``finish_reason`` ``"timeout"``, wherever it is
+(queued, mid-prefill, or mid-decode), keeping the tokens it already
+produced. The freed slot is reusable at that same step's admission, and
+co-batched survivors are bit-unperturbed (the cancellation guarantee,
+extended to every retirement path).
+
+Admission control (v1.1)
+------------------------
+``EngineConfig.max_queue`` caps waiting requests and
+``EngineConfig.max_resident_tokens`` caps the committed token footprint
+(clipped prompt + generation budget) over queued + resident work. A submit
+that would exceed a cap is **shed** under ``admission_policy="reject"`` —
+the handle returns already finished with reason ``"rejected"`` and a
+human-readable ``error`` — or, under ``"block"``, drives ``step()`` until
+the fleet drains enough to accept (a request too large to *ever* fit is
+rejected regardless). Overload therefore degrades to fast rejections or
+progress-coupled blocking, never unbounded queue growth.
+
+Fault containment (v1.1)
+------------------------
+Non-finite logits detected for a row (checked on device every decode step
+and at prefill completion) and device dispatch exceptions retire the
+offending request with frozen reason ``"error"`` (detail in ``.error``) and
+quarantine its slot out of the admission pool (``engine.rehabilitate()``
+row-resets and restores quarantined slots); the engine keeps stepping and
+co-batched survivors are bit-unperturbed. ``engine.health()`` returns a
+``repro.runtime.monitor.HealthSnapshot`` (queue depth, occupancy,
+quarantined slots, shed/timeout/error counters). The deterministic
+fault-injection harness in ``repro.serving.faults`` (``FaultPlan`` /
+``FaultInjector`` / ``VirtualClock``) schedules all of the above
+repeatably; ``ServingEngine(..., injector=None)`` — the production default
+— compiles every injection input out.
+
+The full frozen ``finish_reason`` set (``api.FINISH_REASONS``):
+``"stop" | "length" | "cancelled" | "timeout" | "rejected" | "error"``.
 
 Consumption
 -----------
@@ -19,8 +61,9 @@ Consumption
 the engine step that produced it (it drives ``engine.step()`` on demand, so
 the first yield lands in the same step the prompt's prefill completes:
 stream TTFT **is** engine TTFT). ``RequestHandle.result()`` — block until
-finished, returning an immutable ``RequestResult`` (tokens, finish_reason
-``"stop" | "length" | "cancelled"``, ``truncated``, and the timing triplet
+finished, returning an immutable ``RequestResult`` (tokens, a
+``finish_reason`` from ``FINISH_REASONS``, ``truncated``, ``error`` detail
+for contained faults/sheds, and the timing triplet
 ``t_submit / t_first / t_done``). ``RequestHandle.cancel()`` — a queued
 request never admits; a resident one frees its slot immediately
 (mid-prefill or mid-decode) without perturbing co-resident requests.
@@ -47,16 +90,20 @@ admission baseline. Both implement the identical v1 contract, which is
 what makes the determinism guarantee scheduler-independent.
 """
 
-from repro.serving.api import RequestHandle, RequestResult, SamplingParams
-from repro.serving.engine import (EngineConfig, SerialAdmitEngine,
-                                  ServingEngine)
+from repro.runtime.monitor import HealthSnapshot
+from repro.serving.api import (FINISH_REASONS, RequestHandle, RequestResult,
+                               SamplingParams)
+from repro.serving.engine import (EngineConfig, EngineFault,
+                                  SerialAdmitEngine, ServingEngine)
+from repro.serving.faults import FaultInjector, FaultPlan, VirtualClock
 from repro.serving.sampling import (request_keys, sample_token, sample_tokens,
                                     sample_tokens_per_request,
                                     top_k_top_p_mask)
 
 __all__ = [
-    "SamplingParams", "RequestHandle", "RequestResult",
-    "ServingEngine", "SerialAdmitEngine", "EngineConfig",
+    "SamplingParams", "RequestHandle", "RequestResult", "FINISH_REASONS",
+    "ServingEngine", "SerialAdmitEngine", "EngineConfig", "EngineFault",
+    "FaultPlan", "FaultInjector", "VirtualClock", "HealthSnapshot",
     "sample_token", "sample_tokens", "sample_tokens_per_request",
     "request_keys", "top_k_top_p_mask",
 ]

@@ -29,6 +29,13 @@ from typing import Any, FrozenSet, Iterable, Iterator, List, Optional
 FINISH_STOP = "stop"          # hit a stop-token id (incl. EngineConfig.eos_id)
 FINISH_LENGTH = "length"      # produced max_new_tokens
 FINISH_CANCELLED = "cancelled"
+FINISH_TIMEOUT = "timeout"    # deadline_s / ttft_deadline_s expired
+FINISH_REJECTED = "rejected"  # shed at submit by admission control
+FINISH_ERROR = "error"        # fault contained to this request (see .error)
+
+#: every value ``RequestResult.finish_reason`` may take (the v1.1 frozen set)
+FINISH_REASONS = (FINISH_STOP, FINISH_LENGTH, FINISH_CANCELLED,
+                  FINISH_TIMEOUT, FINISH_REJECTED, FINISH_ERROR)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -51,6 +58,15 @@ class SamplingParams:
       stop: token ids that terminate generation (the stop token itself is
         the last token of the output, matching EOS semantics). The
         engine-wide ``EngineConfig.eos_id`` is always honored in addition.
+      deadline_s: end-to-end wall budget, measured from submit. The engine
+        sweeps expirations at the start of every ``step()``; an expired
+        request (queued or resident) retires with finish_reason
+        ``"timeout"``, keeping whatever tokens it already produced.
+        ``None`` disables.
+      ttft_deadline_s: budget for the *first* token, measured from submit.
+        A request that has not produced token 0 when it expires retires
+        with ``"timeout"``; once the first token lands this deadline is
+        satisfied and only ``deadline_s`` still applies. ``None`` disables.
     """
 
     max_new_tokens: int = 16
@@ -59,6 +75,8 @@ class SamplingParams:
     top_p: float = 1.0
     seed: int = 0
     stop: FrozenSet[int] = frozenset()
+    deadline_s: Optional[float] = None
+    ttft_deadline_s: Optional[float] = None
 
     def __post_init__(self):
         object.__setattr__(self, "stop", frozenset(self.stop))
@@ -70,6 +88,10 @@ class SamplingParams:
             raise ValueError("top_k must be >= 0 (0 disables)")
         if not 0.0 < self.top_p <= 1.0:
             raise ValueError("top_p must be in (0, 1] (1.0 disables)")
+        for name in ("deadline_s", "ttft_deadline_s"):
+            v = getattr(self, name)
+            if v is not None and v <= 0.0:
+                raise ValueError(f"{name} must be > 0 (None disables)")
 
     @property
     def needs_mask(self) -> bool:
@@ -83,11 +105,12 @@ class RequestResult:
 
     uid: int
     tokens: tuple                # generated token ids (prompt not included)
-    finish_reason: str           # "stop" | "length" | "cancelled"
+    finish_reason: str           # one of FINISH_REASONS
     truncated: bool              # prompt was clipped to engine capacity
-    t_submit: float              # perf_counter at submit()
-    t_first: float               # perf_counter at first generated token
-    t_done: float                # perf_counter at finish/cancel
+    t_submit: float              # engine clock at submit()
+    t_first: float               # engine clock at first generated token
+    t_done: float                # engine clock at finish/cancel/retire
+    error: Optional[str] = None  # contained-fault detail ("error"/"rejected")
 
     @property
     def ttft(self) -> float:
@@ -113,6 +136,7 @@ class RequestHandle:
         self.params = params
         self.output: List[int] = []   # generated tokens, grows per step
         self.finish_reason: Optional[str] = None
+        self.error: Optional[str] = None  # contained-fault / shed detail
         self.truncated = False
         self.t_submit = 0.0
         self.t_first = 0.0
@@ -154,7 +178,8 @@ class RequestHandle:
         return RequestResult(
             uid=self.uid, tokens=tuple(self.output),
             finish_reason=self.finish_reason, truncated=self.truncated,
-            t_submit=self.t_submit, t_first=self.t_first, t_done=self.t_done)
+            t_submit=self.t_submit, t_first=self.t_first, t_done=self.t_done,
+            error=self.error)
 
     def cancel(self) -> bool:
         """Cancel the request: a queued request never admits; a resident one

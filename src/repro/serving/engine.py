@@ -57,12 +57,28 @@ from repro.kernels.ternary_matmul.ops import resolve_backend
 from repro.models import (decode_step, init_decode_state, prefill,
                           prefill_chunk)
 from repro.models.common import matmul_backend
-from repro.serving.api import (FINISH_CANCELLED, FINISH_LENGTH, FINISH_STOP,
+from repro.runtime.monitor import HealthSnapshot
+from repro.serving.api import (FINISH_CANCELLED, FINISH_ERROR, FINISH_LENGTH,
+                               FINISH_REJECTED, FINISH_STOP, FINISH_TIMEOUT,
                                RequestHandle, SamplingParams, make_handle)
 from repro.serving.sampling import request_keys, sample_tokens_per_request
 
 __all__ = ["EngineConfig", "ServingEngine", "SerialAdmitEngine",
-           "SamplingParams", "RequestHandle"]
+           "SamplingParams", "RequestHandle", "EngineFault"]
+
+
+class EngineFault(RuntimeError):
+    """A device-dispatch failure attributed (when possible) to one slot.
+
+    Raised by fault injectors and used internally as the containment
+    envelope for real dispatch exceptions. ``slot`` is the offending batch
+    row, or None when the failure cannot be attributed — in that case every
+    request participating in the dispatch is retired (the containment unit
+    is the dispatch, never the engine)."""
+
+    def __init__(self, msg: str, slot: Optional[int] = None):
+        super().__init__(msg)
+        self.slot = slot
 
 
 @dataclasses.dataclass(frozen=True)
@@ -85,6 +101,21 @@ class EngineConfig:
     attn_backend: Optional[str] = None
     decode_chunk: int = 8        # tokens per jitted decode dispatch (K)
     prefill_chunk: int = 64      # max prompt tokens consumed per slot per step
+    # ---- admission control (None → unbounded, the pre-containment behavior)
+    # max_queue caps how many requests may *wait* for a slot; a submit that
+    # would exceed it is shed ("reject": the handle comes back already
+    # finished with reason "rejected") or blocks ("block": submit drives
+    # step() until space frees) — overload degrades to fast rejections or
+    # bounded blocking instead of unbounded queue growth.
+    max_queue: Optional[int] = None
+    # max_resident_tokens caps the committed token footprint (clipped prompt
+    # + max_new_tokens budget) summed over queued + resident requests.
+    max_resident_tokens: Optional[int] = None
+    admission_policy: str = "reject"   # "reject" | "block"
+    # how many engine steps a suspect slot sits out before it is row-reset
+    # and returned to the admission pool (observable cool-down; None →
+    # never automatically, only an explicit engine.rehabilitate())
+    quarantine_steps: Optional[int] = 2
     # decode chunk cap while any slot is mid-prefill: a long prompt reaches
     # its first token in ~L/prefill_chunk short engine steps instead of
     # waiting a full decode chunk between each of its prefill chunks
@@ -102,6 +133,12 @@ class EngineConfig:
         assert self.decode_chunk >= 1, "decode_chunk=0 would never emit"
         assert self.prefill_chunk >= 1, "prefill_chunk=0 would never admit"
         assert self.decode_chunk_prefilling >= 1
+        assert self.admission_policy in ("reject", "block"), \
+            self.admission_policy
+        assert self.max_queue is None or self.max_queue >= 1
+        assert self.max_resident_tokens is None \
+            or self.max_resident_tokens >= 1
+        assert self.quarantine_steps is None or self.quarantine_steps >= 0
 
 
 def _pow2ceil(n: int) -> int:
@@ -183,7 +220,8 @@ def _reset_rows_impl(state, mask):
 
 
 def _decode_loop(params, state, tokens, temps, active, seeds, gen_idx,
-                 top_k, top_p, stops, *, cfg, n_steps, use_mask):
+                 top_k, top_p, stops, poison, *, cfg, n_steps, use_mask,
+                 use_poison=False):
     """K fused decode steps with on-device per-request sampling.
 
     Args:
@@ -199,13 +237,28 @@ def _decode_loop(params, state, tokens, temps, active, seeds, gen_idx,
       top_p:   (B,) f32, 1.0 disables per row (traced iff ``use_mask``).
       stops:   (B, W) int32 stop-token ids, -1-padded (W static; a hit
         freezes the row exactly like the pre-v1 EOS check).
+      poison:  (B,) int32 fault-injection gen-index per row, -1 = never
+        (traced iff ``use_poison``, i.e. only for engines built with a
+        fault injector — the production loop compiles it out). When row b's
+        gen counter equals ``poison[b]`` its logits are overwritten with
+        NaN *on device*, exercising the real non-finite containment path.
     Returns:
-      (new_state, toks) with toks (n_steps, B) — the sampled token per step.
+      (new_state, (toks, bad)): toks (n_steps, B) — the sampled token per
+      step; bad (n_steps, B) bool — True where the row's logits for that
+      step were non-finite (the host retires such rows with reason
+      ``"error"`` and discards the garbage token). The reduction is a
+      per-row ``isfinite`` all — numerics of surviving rows are untouched,
+      so adding the health output preserves bit-identity.
     """
 
     def body(carry, _):
         state, tok, active, gen = carry
         logits, state = decode_step(params, cfg, state, tok, active)
+        if use_poison:
+            logits = jnp.where((gen == poison)[:, None] & active[:, None],
+                               jnp.nan, logits)
+        bad = jnp.logical_and(
+            active, jnp.logical_not(jnp.all(jnp.isfinite(logits), axis=-1)))
         keys = request_keys(seeds, gen)
         nxt = sample_tokens_per_request(
             logits, keys, temps,
@@ -214,22 +267,33 @@ def _decode_loop(params, state, tokens, temps, active, seeds, gen_idx,
         nxt = jnp.where(active, nxt, tok)  # frozen slots repeat (host drops)
         gen = gen + active.astype(gen.dtype)
         hit = jnp.any(nxt[:, None] == stops, axis=-1)
-        active = jnp.logical_and(active, jnp.logical_not(hit))
-        return (state, nxt, active, gen), nxt
+        # a poisoned/non-finite row freezes too: its state is garbage from
+        # here on and the host is about to retire it anyway
+        active = jnp.logical_and(active,
+                                 jnp.logical_not(jnp.logical_or(hit, bad)))
+        return (state, nxt, active, gen), (nxt, bad)
 
     # Full unroll: the scan body is op-overhead-bound at decode shapes, and
     # unrolling lets XLA fuse across steps (measured ~40% per-token on CPU).
-    (state, _, _, _), toks = jax.lax.scan(
+    (state, _, _, _), (toks, bad) = jax.lax.scan(
         body, (state, tokens, active, gen_idx), None, length=n_steps,
         unroll=min(n_steps, 16))
-    return state, toks
+    return state, (toks, bad)
 
 
 class ServingEngine:
     """Bucketed/chunked-prefill scheduler behind the v1 handle API (see
-    module docstring)."""
+    module docstring).
 
-    def __init__(self, params, model_cfg, engine_cfg: EngineConfig):
+    ``injector`` (optional) is a fault-injection hook implementing the
+    :class:`repro.serving.faults.FaultInjector` protocol: it may substitute
+    the engine's clock (deterministic deadline tests), raise from a chosen
+    dispatch, and poison chosen rows' logits with NaN on device. Production
+    engines pass None and compile the poison input out entirely.
+    """
+
+    def __init__(self, params, model_cfg, engine_cfg: EngineConfig, *,
+                 injector=None):
         self.params = params
         if engine_cfg.attn_backend is not None:
             model_cfg = dataclasses.replace(
@@ -248,7 +312,7 @@ class ServingEngine:
         # unpack is paid once per engine, not once per dispatch
         self._serve_params = _preunpack_params(params) if pre else params
         self.preunpack_decode = pre
-        self._loop_cache: Dict[Tuple[int, bool, int], Any] = {}
+        self._loop_cache: Dict[Tuple[int, bool, int, bool], Any] = {}
         self._prefill_cache: Dict[int, Any] = {}
         self._reset_jit = None
         # per-slot prompt progress: clipped prompt + tokens already consumed
@@ -260,6 +324,19 @@ class ServingEngine:
         self.steps = 0           # decode steps dispatched (tokens per slot)
         self.prefill_steps = 0   # prefill_chunk dispatches
         self.admits = 0
+        # ---- fault containment / admission control state
+        self._injector = injector
+        clock = getattr(injector, "clock", None) if injector else None
+        self._clock = clock if clock is not None else time.perf_counter
+        # suspect slots → engine step at which they may auto-rehabilitate
+        self.quarantined: Dict[int, int] = {}
+        self.engine_steps = 0    # step() calls (injector schedule index)
+        self._dispatch_counts = {"prefill": 0, "decode": 0}
+        self.completed = 0       # finished stop/length
+        self.cancelled = 0
+        self.sheds = 0           # rejected at submit
+        self.timeouts = 0        # retired by the deadline sweep
+        self.errors = 0          # retired by fault containment
 
     # ------------------------------------------------------------------ API
     def submit(self, prompt, params: Optional[SamplingParams] = None, *,
@@ -268,20 +345,76 @@ class ServingEngine:
 
         ``prompt`` is a token-id list; ``params`` is its
         ``SamplingParams`` (default greedy).
+
+        Admission control: when ``EngineConfig.max_queue`` or
+        ``max_resident_tokens`` is set and accepting this request would
+        exceed it, the request is **shed** — under policy ``"reject"`` the
+        handle returns already finished with reason ``"rejected"`` (a fast,
+        bounded failure the caller can retry elsewhere); under ``"block"``
+        submit drives ``step()`` until the fleet drains enough to accept.
         """
         if uid is None:
             uid, self._next_uid = self._next_uid, self._next_uid + 1
         h = make_handle(self, prompt, params, uid)
         self._next_uid = max(self._next_uid, h.uid + 1)  # explicit uids must
         # not collide with auto-assigned ones
+        h.t_submit = self._clock()  # the engine clock owns all timestamps
         stop = frozenset(h.params.stop)
         if self.ecfg.eos_id is not None:
             stop |= {self.ecfg.eos_id}
         h._stop_ids = stop
         # the truncation that _admit will apply, surfaced at submit time
         h.truncated = len(h.prompt) > self.ecfg.capacity
+        never_fits = (self.ecfg.max_resident_tokens is not None
+                      and self._committed_tokens(h)
+                      > self.ecfg.max_resident_tokens)
+        if not self._admissible(h):
+            if self.ecfg.admission_policy == "reject" or never_fits:
+                # never_fits: blocking would spin forever — an empty engine
+                # still could not hold it, so shed regardless of policy
+                h.error = self._overload_reason(h)
+                self._finish(h, FINISH_REJECTED, self._clock())
+                return h
+            while not self._admissible(h):  # "block": bounded latency is
+                if not self.queue and all(s is None for s in self.slots):
+                    # fully drained and still over cap: blocking could never
+                    # succeed (e.g. every slot quarantined), so shed instead
+                    h.error = self._overload_reason(h)
+                    self._finish(h, FINISH_REJECTED, self._clock())
+                    return h
+                self.step()                 # traded for progress-coupled wait
         self.queue.append(h)
         return h
+
+    def _committed_tokens(self, h: RequestHandle) -> int:
+        """Token footprint a request commits the engine to: its clipped
+        prompt plus its full generation budget."""
+        return min(len(h.prompt), self.ecfg.capacity) + h.params.max_new_tokens
+
+    def resident_tokens(self) -> int:
+        """Committed tokens across queued + resident requests (the load
+        number ``max_resident_tokens`` caps)."""
+        live = list(self.queue) + [s for s in self.slots if s is not None]
+        return sum(self._committed_tokens(h) for h in live)
+
+    def _admissible(self, h: RequestHandle) -> bool:
+        if self.ecfg.max_queue is not None \
+                and len(self.queue) >= self.ecfg.max_queue:
+            return False
+        if self.ecfg.max_resident_tokens is not None \
+                and self.resident_tokens() + self._committed_tokens(h) \
+                > self.ecfg.max_resident_tokens:
+            return False
+        return True
+
+    def _overload_reason(self, h: RequestHandle) -> str:
+        if self.ecfg.max_queue is not None \
+                and len(self.queue) >= self.ecfg.max_queue:
+            return (f"queue full ({len(self.queue)}/{self.ecfg.max_queue} "
+                    "waiting)")
+        return (f"resident-token cap ({self.resident_tokens()} committed + "
+                f"{self._committed_tokens(h)} requested > "
+                f"{self.ecfg.max_resident_tokens})")
 
     def cancel(self, handle: RequestHandle) -> bool:
         """Cancel a request (``RequestHandle.cancel`` delegates here).
@@ -302,7 +435,7 @@ class ServingEngine:
             if slot is None:
                 return False  # not ours
             self._free_slot(slot)
-        self._finish(handle, FINISH_CANCELLED, time.perf_counter())
+        self._finish(handle, FINISH_CANCELLED, self._clock())
         return True
 
     def run(self, max_steps: int = 10_000) -> List[RequestHandle]:
@@ -336,15 +469,17 @@ class ServingEngine:
                        self.ecfg.decode_chunk_prefilling))
         idle = jnp.zeros((nb,), bool)
         z32 = jnp.zeros((nb,), jnp.int32)
+        use_poison = self._injector is not None
         for n in sorted(chunks):
             for masked in (False, True):
-                self.state, _ = self._loop_fn(n, masked, 1)(
+                self.state, _ = self._loop_fn(n, masked, 1, use_poison)(
                     self._serve_params, self.state,
                     jnp.asarray(self.last_tokens),
                     jnp.zeros((nb,), jnp.float32), idle,
                     jnp.zeros((nb,), jnp.uint32), z32, z32,
                     jnp.ones((nb,), jnp.float32),
-                    jnp.full((nb, 1), -1, jnp.int32))
+                    jnp.full((nb, 1), -1, jnp.int32),
+                    jnp.full((nb,), -1, jnp.int32))
         self._reset_rows(np.zeros((nb,), bool))
 
     def _warm_prefill(self):
@@ -369,7 +504,9 @@ class ServingEngine:
         lengths ≤ prefill_chunk, so ``n_prefill_compiles`` is bounded by
         ``prefill_bucket_bound`` = log2(next_pow2(prefill_chunk)) + 1; the
         decode entries are (power-of-two chunk length ≤ decode_chunk,
-        masked-sampling?, stop-width bucket) triples. The serial-admit
+        masked-sampling?, stop-width bucket, poison-injection?) quadruples
+        — the last axis only ever True under a fault injector, so the
+        production cache stays the PR-5 triple set. The serial-admit
         baseline instead caches one prefill entry per distinct prompt
         length (up to `capacity` of them).
         """
@@ -421,16 +558,22 @@ class ServingEngine:
 
     # ----------------------------------------------------------------- step
     def step(self) -> List[RequestHandle]:
-        """Admit into all free slots, advance prefill one chunk, decode one
-        chunk; returns the requests that finished this step.
+        """Sweep deadlines, admit into all free slots, advance prefill one
+        chunk, decode one chunk; returns the requests that finished this
+        step (including ones retired by the sweep or fault containment).
 
         The decode chunk length adapts to the largest remaining token budget
         among decoding slots, rounded up to a power of two (compile count
         stays O(log K)) — a fleet that only needs 3 more tokens never pays
         for a 16-step dispatch.
         """
+        self.engine_steps += 1
+        if self._injector is not None:
+            self._injector.on_step(self)
+        done_now = self._sweep_deadlines()
+        self._auto_rehabilitate()
         self._admit()
-        done_now = self._admit_finished
+        done_now += self._admit_finished
         self._admit_finished = []
         done_now = done_now + self._prefill_step()
         dec = [i for i in range(len(self.slots)) if self._decoding(i)]
@@ -449,11 +592,151 @@ class ServingEngine:
         # where the chunk boundaries fell
         gen0 = jnp.asarray([len(self.slots[i].output) if self._decoding(i)
                             else 0 for i in range(len(self.slots))], jnp.int32)
-        self.state, toks = self._loop_fn(n_steps, use_mask, stop_w)(
-            self._serve_params, self.state, jnp.asarray(self.last_tokens),
-            temps, active, seeds, gen0, top_k, top_p, stops)
+        use_poison = self._injector is not None
+        poison = self._poison_array(gen0, n_steps) if use_poison \
+            else jnp.full((len(self.slots),), -1, jnp.int32)
+        try:
+            self._guard_dispatch("decode", dec)
+            self.state, (toks, bad) = self._loop_fn(
+                n_steps, use_mask, stop_w, use_poison)(
+                self._serve_params, self.state, jnp.asarray(self.last_tokens),
+                temps, active, seeds, gen0, top_k, top_p, stops, poison)
+        except Exception as exc:  # containment unit: this dispatch only
+            return done_now + self._contain("decode", dec, exc)
         self.steps += n_steps
-        return done_now + self._collect(np.asarray(toks))
+        return done_now + self._collect(np.asarray(toks), np.asarray(bad))
+
+    # ------------------------------------------------- deadlines / containment
+    def _expired(self, h: RequestHandle, now: float) -> Optional[str]:
+        p = h.params
+        if p.deadline_s is not None and now - h.t_submit > p.deadline_s:
+            return f"deadline_s={p.deadline_s} exceeded"
+        if p.ttft_deadline_s is not None and not h.t_first \
+                and now - h.t_submit > p.ttft_deadline_s:
+            return f"ttft_deadline_s={p.ttft_deadline_s} exceeded"
+        return None
+
+    def _sweep_deadlines(self) -> List[RequestHandle]:
+        """Retire every queued or resident request past its deadline with
+        frozen reason ``"timeout"``. Freed slots are reusable at this very
+        step's admission; neighbors are bit-unperturbed (the same guarantee
+        cancellation gives — retirement only ever *removes* a row)."""
+        now = self._clock()
+        out: List[RequestHandle] = []
+        for h in list(self.queue):
+            why = self._expired(h, now)
+            if why is not None:
+                self.queue.remove(h)
+                h.error = why
+                self._finish(h, FINISH_TIMEOUT, now)
+                out.append(h)
+        for slot, h in enumerate(self.slots):
+            if h is None:
+                continue
+            why = self._expired(h, now)
+            if why is not None:
+                self._free_slot(slot)
+                h.error = why
+                self._finish(h, FINISH_TIMEOUT, now)
+                out.append(h)
+        return out
+
+    def _poison_array(self, gen0, n_steps: int):
+        """(B,) int32 gen-index at which to NaN each row's logits, -1 =
+        never (asked of the injector per decode dispatch)."""
+        nb = len(self.slots)
+        poison = np.full((nb,), -1, np.int32)
+        g = np.asarray(gen0)
+        for i in range(nb):
+            if not self._decoding(i):
+                continue
+            k = self._injector.poison_index(self.slots[i].uid, int(g[i]),
+                                            n_steps)
+            if k is not None:
+                poison[i] = k
+        return jnp.asarray(poison)
+
+    def _guard_dispatch(self, kind: str, slots: List[int]):
+        """Count the dispatch and let the injector veto it (raising
+        :class:`EngineFault`) — injected faults fire *before* the device
+        call so the batch state is never half-written."""
+        idx = self._dispatch_counts[kind]
+        self._dispatch_counts[kind] = idx + 1
+        if self._injector is not None:
+            self._injector.before_dispatch(self, kind, idx, slots)
+
+    def _contain(self, kind: str, slots: List[int],
+                 exc: Exception) -> List[RequestHandle]:
+        """Quarantine a failed dispatch to the offending request/slot.
+
+        An :class:`EngineFault` carrying a slot retires exactly that
+        request; an unattributed exception retires every request that
+        participated in the dispatch (the honest containment unit — their
+        rows' states cannot be trusted). Either way the slot(s) are marked
+        suspect and leave the admission pool until :meth:`rehabilitate`,
+        and the engine keeps stepping: the dispatch that failed was never
+        applied, so surviving rows retry it untouched next step.
+        """
+        hit = getattr(exc, "slot", None)
+        bad_slots = [hit] if hit is not None and hit in slots else list(slots)
+        now = self._clock()
+        out: List[RequestHandle] = []
+        for slot in bad_slots:
+            h = self.slots[slot]
+            if h is None:
+                continue
+            self._free_slot(slot)
+            self._quarantine(slot)
+            h.error = f"{kind} dispatch failed: {exc!r}"
+            self._finish(h, FINISH_ERROR, now)
+            out.append(h)
+        return out
+
+    def _quarantine(self, slot: int):
+        cool = self.ecfg.quarantine_steps
+        until = (self.engine_steps + cool) if cool is not None else -1
+        self.quarantined[slot] = until
+
+    def _restore(self, slots: List[int]):
+        mask = np.zeros((len(self.slots),), bool)
+        mask[slots] = True
+        self._reset_rows(mask)
+        for s in slots:
+            self.quarantined.pop(s, None)
+        self._slot_arrays = None
+
+    def _auto_rehabilitate(self):
+        """Return suspect slots whose cool-down elapsed to the pool (after
+        a row reset). ``quarantine_steps=None`` disables — only an explicit
+        :meth:`rehabilitate` restores them."""
+        if self.ecfg.quarantine_steps is None:
+            return
+        due = [s for s, until in self.quarantined.items()
+               if self.engine_steps >= until]
+        if due:
+            self._restore(due)
+
+    def rehabilitate(self) -> List[int]:
+        """Row-reset every quarantined slot and return it to the admission
+        pool immediately; returns the slots restored. (The operator
+        override of the ``quarantine_steps`` cool-down.)"""
+        back = sorted(self.quarantined)
+        if back:
+            self._restore(back)
+        return back
+
+    def health(self) -> HealthSnapshot:
+        """Current engine health (see :class:`repro.runtime.monitor.
+        HealthSnapshot`); cheap — reads host-side bookkeeping only."""
+        resident = sum(1 for s in self.slots if s is not None)
+        return HealthSnapshot(
+            t=self._clock(), steps=self.steps,
+            queue_depth=len(self.queue), resident=resident,
+            free_slots=len(self.slots) - resident - len(self.quarantined),
+            quarantined_slots=tuple(sorted(self.quarantined)),
+            resident_tokens=self.resident_tokens(),
+            completed=self.completed, cancelled=self.cancelled,
+            sheds=self.sheds, timeouts=self.timeouts, errors=self.errors)
 
     # ------------------------------------------------------------- internals
     def _prefilling(self, slot: int) -> bool:
@@ -477,6 +760,16 @@ class ServingEngine:
     def _finish(self, h: RequestHandle, reason: str, now: float):
         h.finish_reason = reason
         h.t_done = now
+        if reason in (FINISH_STOP, FINISH_LENGTH):
+            self.completed += 1
+        elif reason == FINISH_CANCELLED:
+            self.cancelled += 1
+        elif reason == FINISH_TIMEOUT:
+            self.timeouts += 1
+        elif reason == FINISH_REJECTED:
+            self.sheds += 1
+        elif reason == FINISH_ERROR:
+            self.errors += 1
 
     def _fleet_arrays(self):
         """Per-slot device arrays for the decode dispatch, cached until the
@@ -511,15 +804,17 @@ class ServingEngine:
                 use_mask, stop_w)
         return self._slot_arrays
 
-    def _loop_fn(self, n_steps: int, use_mask: bool, stop_w: int):
-        key = (n_steps, use_mask, stop_w)
+    def _loop_fn(self, n_steps: int, use_mask: bool, stop_w: int,
+                 use_poison: bool = False):
+        key = (n_steps, use_mask, stop_w, use_poison)
         if key not in self._loop_cache:
             # Donating the decode state lets XLA update the KV caches in
             # place; CPU has no donation support and would warn per dispatch.
             donate = (1,) if jax.default_backend() != "cpu" else ()
             self._loop_cache[key] = jax.jit(
                 functools.partial(_decode_loop, cfg=self.cfg,
-                                  n_steps=n_steps, use_mask=use_mask),
+                                  n_steps=n_steps, use_mask=use_mask,
+                                  use_poison=use_poison),
                 donate_argnums=donate)
         return self._loop_cache[key]
 
@@ -543,10 +838,12 @@ class ServingEngine:
         self.state = self._reset_jit(self.state, jnp.asarray(mask))
 
     def _admit(self):
-        """Drain the wait queue into *all* free slots in one go."""
+        """Drain the wait queue into *all* free, non-quarantined slots in
+        one go."""
         fresh = []
         for slot in range(len(self.slots)):
-            if self.slots[slot] is not None or not self.queue:
+            if self.slots[slot] is not None or not self.queue \
+                    or slot in self.quarantined:
                 continue
             h = self.queue.popleft()
             self.slots[slot] = h
@@ -610,9 +907,13 @@ class ServingEngine:
             tokens[i, :take] = self._prompts[i][
                 self._cursor[i]:self._cursor[i] + take]
             lengths[i] = take
-        logits, self.state = self._prefill_fn(length)(
-            self._serve_params, self.state, jnp.asarray(tokens),
-            jnp.asarray(lengths))
+        try:
+            self._guard_dispatch("prefill", pf)
+            logits, self.state = self._prefill_fn(length)(
+                self._serve_params, self.state, jnp.asarray(tokens),
+                jnp.asarray(lengths))
+        except Exception as exc:  # cursors untouched: survivors retry as-is
+            return self._contain("prefill", pf, exc)
         self.prefill_steps += 1
         finishers = [i for i in pf
                      if self._cursor[i] + int(lengths[i])
@@ -621,11 +922,32 @@ class ServingEngine:
             self._cursor[i] += int(lengths[i])
         if not finishers:
             return []
+        if self._injector is not None:
+            # token 0's logits can be poisoned too (gen index 0 lives in the
+            # prefill finisher, not the decode loop); row-local, so
+            # co-batched rows keep their exact logits
+            for i in finishers:
+                if self._injector.poison_index(self.slots[i].uid, 0, 1) == 0:
+                    logits = logits.at[i].set(jnp.nan)
+        # non-finite logits are contained *before* sampling: the offending
+        # row retires with "error", finite rows sample from untouched logits
+        row_ok = np.asarray(jnp.all(jnp.isfinite(logits), axis=-1))
+        now = self._clock()
+        finished: List[RequestHandle] = []
+        bad_rows = [i for i in finishers if not row_ok[i]]
+        for i in bad_rows:
+            h = self.slots[i]
+            self._free_slot(i)
+            self._quarantine(i)
+            h.error = "non-finite logits at prefill completion"
+            self._finish(h, FINISH_ERROR, now)
+            finished.append(h)
+        finishers = [i for i in finishers if row_ok[i]]
+        if not finishers:
+            return finished
         # the prompt's last logits yield the first generated token; one
         # vectorized sample covers every finishing row
         toks = self._sample_first(logits, finishers)
-        now = time.perf_counter()
-        finished: List[RequestHandle] = []
         for i in finishers:
             h = self.slots[i]
             tok = int(toks[i])
@@ -645,7 +967,8 @@ class ServingEngine:
             self._free_slot(i)
         return finished
 
-    def _collect(self, toks: np.ndarray) -> List[RequestHandle]:
+    def _collect(self, toks: np.ndarray,
+                 bad: Optional[np.ndarray] = None) -> List[RequestHandle]:
         """Fold a (K, B) chunk of tokens into the per-slot requests.
 
         A slot stops at its first stop-token hit (any id in the request's
@@ -653,13 +976,26 @@ class ServingEngine:
         device generated past that point within the chunk is discarded (the
         slot's state is reset by the next admission). Slots still mid-prefill
         took no decode step — their repeated tokens are skipped entirely.
+
+        ``bad`` (K, B) flags steps whose logits were non-finite for that
+        row: the garbage token is *not* appended — the request retires with
+        frozen reason ``"error"`` and the slot is quarantined, before the
+        poisoned value can reach the stream.
         """
         finished = []
-        now = time.perf_counter()
+        now = self._clock()
         for slot, h in enumerate(self.slots):
             if h is None or not self._decoding(slot):
                 continue
             for k in range(toks.shape[0]):
+                if bad is not None and bad[k, slot]:
+                    self._free_slot(slot)
+                    self._quarantine(slot)
+                    h.error = (f"non-finite logits at generated token "
+                               f"{len(h.output)}")
+                    self._finish(h, FINISH_ERROR, now)
+                    finished.append(h)
+                    break
                 tok = int(toks[k, slot])
                 h.output.append(tok)
                 self._mark_first(h, now)
@@ -728,27 +1064,44 @@ class SerialAdmitEngine(ServingEngine):
 
     def _admit(self):
         for slot in range(len(self.slots)):
-            if self.slots[slot] is not None or not self.queue:
+            if self.slots[slot] is not None or not self.queue \
+                    or slot in self.quarantined:
                 continue
             h = self.queue.popleft()
             self.admits += 1
             prompt = h.prompt[-self.ecfg.capacity:]
+            self.slots[slot] = h          # resident before the dispatch so
+            self._prompts[slot] = list(prompt)  # containment can attribute
+            self._cursor[slot] = 0        # not decoding until token 0 lands
             fn = self._prefill_len_fn(len(prompt))
-            logits, one_state = fn(self._serve_params,
-                                   jnp.asarray([prompt], jnp.int32))
+            try:
+                self._guard_dispatch("prefill", [slot])
+                logits, one_state = fn(self._serve_params,
+                                       jnp.asarray([prompt], jnp.int32))
+            except Exception as exc:  # serial admission: batch-1 containment
+                self._admit_finished.extend(
+                    self._contain("prefill", [slot], exc))
+                continue
             self.state = self._merge(self.state, one_state, slot)
             self.prefill_steps += 1
-            self.slots[slot] = h
-            self._prompts[slot] = list(prompt)
-            self._cursor[slot] = 0        # not decoding until token 0 lands
+            p = h.params
+            if self._injector is not None \
+                    and self._injector.poison_index(h.uid, 0, 1) == 0:
+                logits = logits.at[0].set(jnp.nan)
+            if not bool(np.asarray(jnp.all(jnp.isfinite(logits[0])))):
+                self._free_slot(slot)
+                self._quarantine(slot)
+                h.error = "non-finite logits at prefill completion"
+                self._finish(h, FINISH_ERROR, self._clock())
+                self._admit_finished.append(h)
+                continue
             # token 0 from the request's own stream (serial prefill logits
             # are batch-1: sample that one row directly)
-            p = h.params
             keys = request_keys(jnp.asarray([p.seed & 0xFFFFFFFF],
                                             jnp.uint32),
                                 jnp.zeros((1,), jnp.int32))
             tok = int(self._sample_first_row(logits, keys, p))
-            now = time.perf_counter()
+            now = self._clock()
             h.output.append(tok)
             self._mark_first(h, now)
             # the prefill-sampled token may already terminate the request

@@ -1,0 +1,257 @@
+"""Deterministic fault injection for the serving stack.
+
+The containment machinery in ``repro.serving.engine`` (deadline sweep,
+load-shedding, per-slot quarantine) is only trustworthy if it can be
+*proved* — and faults found in production are neither schedulable nor
+repeatable. This module makes them both:
+
+  * :class:`FaultPlan` — a declarative, seeded schedule of faults:
+    NaN-poison the logits that produce generated token *k* of request *r*
+    (on device, through the real non-finite detection path), raise from the
+    *n*-th prefill/decode dispatch (before the device call, so state is
+    never half-written), and stall the engine's wall clock past a deadline
+    at a chosen engine step.
+  * :class:`FaultInjector` — the engine-side hook that executes a plan.
+    Pass it to ``ServingEngine(..., injector=...)``; a ``None`` injector
+    (production) compiles every injection input out of the hot loop.
+  * :class:`VirtualClock` — a manually advanced time source substituted
+    for ``time.perf_counter`` so deadline expiry is exact and test suites
+    never sleep.
+  * :func:`corrupt_artifact_shard` / :func:`truncate_artifact_shard` —
+    flip a seeded byte in (or tear the tail off) an on-disk trit-plane
+    artifact, returning exactly what was damaged so tests can assert the
+    reader's integrity report names it.
+
+The keystone property (gated by ``tests/test_faults.py`` and the
+``bench_serving_api`` chaos scenario): under any plan, requests the plan
+does *not* touch finish with outputs bit-identical to a fault-free run —
+injection is row-local, dispatch vetoes happen pre-dispatch, and the
+per-request RNG contract makes retirement of a neighbor invisible.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import json
+from pathlib import Path
+from typing import Any, Dict, List, Optional, Tuple
+
+import numpy as np
+
+__all__ = ["VirtualClock", "FaultPlan", "FaultInjector",
+           "corrupt_artifact_shard", "truncate_artifact_shard"]
+
+
+class VirtualClock:
+    """A deterministic ``time.perf_counter`` stand-in: only advances when
+    told to. Engines built with an injector carrying one stamp every
+    timestamp (submit, first token, finish) from it."""
+
+    def __init__(self, start: float = 0.0):
+        self.now = float(start)
+
+    def __call__(self) -> float:
+        return self.now
+
+    def advance(self, dt: float) -> float:
+        assert dt >= 0.0, "time only moves forward"
+        self.now += dt
+        return self.now
+
+
+@dataclasses.dataclass(frozen=True)
+class _NanFault:
+    uid: int          # request to poison
+    gen_index: int    # generated-token index whose logits go NaN
+
+
+@dataclasses.dataclass(frozen=True)
+class _DispatchFault:
+    kind: str                 # "prefill" | "decode"
+    index: int                # which dispatch of that kind (0-based count)
+    uid: Optional[int] = None  # attribute to this request's slot (else the
+    #                            whole dispatch is the containment unit)
+
+
+@dataclasses.dataclass(frozen=True)
+class _ClockStall:
+    at_step: int      # engine step() ordinal (1-based, first step is 1)
+    advance_s: float  # seconds the virtual clock jumps before that step
+
+
+class FaultPlan:
+    """A schedulable set of faults, fully determined at construction.
+
+    The plan is data, not callbacks — two runs of the same plan against the
+    same trace inject the same faults at the same points, which is what
+    lets the chaos benchmark diff survivor outputs bit-for-bit against a
+    fault-free run. ``seed`` feeds only the artifact-corruption helpers
+    (choosing which byte to flip); the serving-side schedule is exact.
+    """
+
+    def __init__(self, seed: int = 0):
+        self.seed = seed
+        self.nans: List[_NanFault] = []
+        self.dispatch_faults: List[_DispatchFault] = []
+        self.stalls: List[_ClockStall] = []
+
+    # ------------------------------------------------------------- authoring
+    def nan_logits(self, uid: int, gen_index: int) -> "FaultPlan":
+        """NaN the logits that would produce generated token ``gen_index``
+        of request ``uid`` (0 = the prefill-finisher token)."""
+        assert gen_index >= 0
+        self.nans.append(_NanFault(uid, gen_index))
+        return self
+
+    def dispatch_error(self, kind: str, index: int,
+                       uid: Optional[int] = None) -> "FaultPlan":
+        """Raise :class:`~repro.serving.engine.EngineFault` from the
+        ``index``-th dispatch of ``kind`` ("prefill" | "decode"), attributed
+        to ``uid``'s slot when given (else unattributed — the engine must
+        contain the whole dispatch)."""
+        assert kind in ("prefill", "decode"), kind
+        self.dispatch_faults.append(_DispatchFault(kind, index, uid))
+        return self
+
+    def stall_clock(self, at_step: int, advance_s: float) -> "FaultPlan":
+        """Jump the virtual clock forward by ``advance_s`` seconds at the
+        start of engine step ``at_step`` — the deterministic way to expire
+        a deadline mid-flight."""
+        self.stalls.append(_ClockStall(at_step, advance_s))
+        return self
+
+    def describe(self) -> Dict[str, Any]:
+        """JSON-able summary (recorded by the chaos benchmark)."""
+        return {
+            "seed": self.seed,
+            "nan_logits": [dataclasses.asdict(f) for f in self.nans],
+            "dispatch_errors": [dataclasses.asdict(f)
+                                for f in self.dispatch_faults],
+            "clock_stalls": [dataclasses.asdict(f) for f in self.stalls],
+        }
+
+
+class FaultInjector:
+    """Executes a :class:`FaultPlan` against one engine.
+
+    The engine calls three hooks (see ``ServingEngine``):
+
+      * ``on_step(engine)``     — start of every ``step()``; applies clock
+        stalls scheduled for that step.
+      * ``before_dispatch(engine, kind, index, slots)`` — may raise
+        ``EngineFault`` per the plan (once per planned fault).
+      * ``poison_index(uid, gen0, n_steps)`` — the gen-index in
+        ``[gen0, gen0 + n_steps)`` at which to NaN that request's logits,
+        or None.
+
+    ``clock`` (a :class:`VirtualClock` or None for real time) becomes the
+    engine's single time source. One injector drives one engine: fired
+    dispatch faults are consumed, so a retried dispatch (survivors repeat
+    the step a contained fault skipped) is not re-failed.
+    """
+
+    def __init__(self, plan: Optional[FaultPlan] = None,
+                 clock: Optional[VirtualClock] = None):
+        self.plan = plan or FaultPlan()
+        self.clock = clock
+        self._fired: set = set()
+        self.log: List[Tuple[str, Any]] = []  # what actually fired, in order
+
+    # --------------------------------------------------------- engine hooks
+    def on_step(self, engine):
+        for s in self.plan.stalls:
+            key = ("stall", s.at_step, s.advance_s)
+            if engine.engine_steps == s.at_step and key not in self._fired:
+                self._fired.add(key)
+                if self.clock is None:
+                    raise RuntimeError("stall_clock needs a VirtualClock")
+                self.clock.advance(s.advance_s)
+                self.log.append(("stall", dataclasses.asdict(s)))
+
+    def before_dispatch(self, engine, kind: str, index: int,
+                        slots: List[int]):
+        from repro.serving.engine import EngineFault  # circular-free
+
+        for f in self.plan.dispatch_faults:
+            key = ("dispatch", f.kind, f.index)
+            if f.kind != kind or f.index != index or key in self._fired:
+                continue
+            self._fired.add(key)
+            slot = None
+            if f.uid is not None:
+                slot = next((i for i, h in enumerate(engine.slots)
+                             if h is not None and h.uid == f.uid), None)
+            self.log.append(("dispatch", dataclasses.asdict(f)))
+            raise EngineFault(
+                f"injected {kind} dispatch fault #{index}", slot=slot)
+
+    def poison_index(self, uid: int, gen0: int,
+                     n_steps: int) -> Optional[int]:
+        for f in self.plan.nans:
+            if f.uid == uid and gen0 <= f.gen_index < gen0 + n_steps:
+                key = ("nan", f.uid, f.gen_index)
+                if key not in self._fired:
+                    self._fired.add(key)
+                    self.log.append(("nan", dataclasses.asdict(f)))
+                return f.gen_index
+        return None
+
+
+# ---------------------------------------------------------------------------
+# artifact corruption (the torn/corrupt-shard axis of the plan)
+# ---------------------------------------------------------------------------
+
+def _load_manifest(artifact_dir) -> Dict[str, Any]:
+    from repro.artifacts.format import MANIFEST_NAME
+
+    return json.loads((Path(artifact_dir) / MANIFEST_NAME).read_text())
+
+
+def corrupt_artifact_shard(artifact_dir, *, seed: int = 0,
+                           tensor: Optional[str] = None,
+                           xor: int = 0xFF) -> Dict[str, Any]:
+    """Flip one seeded byte inside a committed artifact buffer.
+
+    Picks (deterministically from ``seed``) a tensor buffer — or a buffer
+    of the named ``tensor`` — and XORs one in-range byte of its shard.
+    Returns {tensor, buffer, shard, shard_offset, buffer_offset, crc32}
+    describing the damage, so a test can assert the reader's
+    checksum-failure report names exactly this buffer.
+    """
+    manifest = _load_manifest(artifact_dir)
+    rng = np.random.default_rng(seed)
+    names = sorted(manifest["tensors"])
+    if tensor is None:
+        tensor = names[int(rng.integers(len(names)))]
+    rec = manifest["tensors"][tensor]
+    bufs = sorted(rec["buffers"])
+    bname = bufs[int(rng.integers(len(bufs)))]
+    buf = rec["buffers"][bname]
+    off = buf["offset"] + int(rng.integers(buf["nbytes"]))
+    path = Path(artifact_dir) / buf["shard"]
+    mask = (xor & 0xFF) or 0x01  # xor=0 would be a no-op "corruption"
+    with open(path, "r+b") as f:
+        f.seek(off)
+        byte = f.read(1)
+        f.seek(off)
+        f.write(bytes([byte[0] ^ mask]))
+    return {"tensor": tensor, "buffer": bname, "shard": buf["shard"],
+            "shard_offset": off, "buffer_offset": off - buf["offset"],
+            "crc32": buf["crc32"]}
+
+
+def truncate_artifact_shard(artifact_dir, *, seed: int = 0,
+                            drop_bytes: int = 1) -> Dict[str, Any]:
+    """Tear the tail off a seeded shard file (a torn copy / partial
+    download). Returns {shard, old_size, new_size}; the reader's
+    ``verify="sizes"`` fast mode must reject the artifact without reading
+    any tensor bytes."""
+    manifest = _load_manifest(artifact_dir)
+    rng = np.random.default_rng(seed)
+    shard = manifest["shards"][int(rng.integers(len(manifest["shards"])))]
+    path = Path(artifact_dir) / shard["file"]
+    old = path.stat().st_size
+    new = max(old - int(drop_bytes), 0)
+    with open(path, "r+b") as f:
+        f.truncate(new)
+    return {"shard": shard["file"], "old_size": old, "new_size": new}

@@ -340,6 +340,45 @@ class TestIntegrity:
         with pytest.raises(ArtifactError):
             verify_artifact(out)
 
+    def test_checksum_error_pinpoints_damage(self, tmp_path):
+        """The failure report names the shard file, the buffer's byte
+        range, and both the expected and actual crc32 — enough to locate
+        the corruption without a bisection hunt."""
+        out = self._small_artifact(tmp_path)
+        m = read_manifest(out)
+        buf = m["tensors"]["/layer/kernel"]["buffers"]["alpha"]
+        p = out / buf["shard"]
+        raw = bytearray(p.read_bytes())
+        raw[buf["offset"] + 2] ^= 0x01
+        p.write_bytes(raw)
+        with pytest.raises(ArtifactError) as ei:
+            load_artifact(out, verify="full")
+        msg = str(ei.value)
+        assert buf["shard"] in msg
+        assert f"[{buf['offset']}, {buf['offset'] + buf['nbytes']})" in msg
+        assert f"{buf['crc32']:#010x}" in msg and "got 0x" in msg
+
+    def test_verify_sizes_mode(self, tmp_path):
+        """verify="sizes" stat-checks shard lengths against the manifest:
+        exact-length artifacts pass without reading tensor bytes; torn or
+        padded shards fail; bit-flips (sizes intact) pass — that is the
+        documented trade vs "full"."""
+        out = self._small_artifact(tmp_path)
+        tree, _ = load_artifact(out, verify="sizes")
+        assert "/layer/kernel".split("/")[1] in tree  # loaded fine
+        m = read_manifest(out)
+        p = out / m["shards"][0]["file"]
+        with open(p, "ab") as f:  # trailing garbage: size != committed
+            f.write(b"\0" * 3)
+        with pytest.raises(ArtifactError, match="oversized"):
+            load_artifact(out, verify="sizes")
+        with open(p, "r+b") as f:
+            f.truncate(m["shards"][0]["nbytes"] - 4)
+        with pytest.raises(ArtifactError, match="truncated"):
+            load_artifact(out, verify="sizes")
+        with pytest.raises(ValueError, match="verify"):
+            load_artifact(out, verify="checksums-please")
+
     def test_overwrite_keeps_old_artifact_until_finalize(self, tmp_path):
         """A crashed --overwrite re-quantize must not destroy the last good
         artifact: the old directory is only replaced at finalize()."""

@@ -123,3 +123,26 @@ class TestStragglers:
     def test_empty_fleet(self, tmp_path):
         rep = StragglerDetector(str(tmp_path)).assess()
         assert rep["healthy"] == [] and rep["median_step_s"] is None
+        assert rep["skewed"] == []
+
+    def test_clock_skew_flagged_not_alive(self, tmp_path):
+        """A heartbeat stamped in the future is a broken clock: the host is
+        reported "skewed" — excluded from healthy (its liveness cannot be
+        assessed) but also not "dead" (we have no evidence of death), and
+        its step time does not pollute the fleet median."""
+        run = str(tmp_path)
+        now = time.time()
+        for host, (step_t, skew) in enumerate([(1.0, 0), (1.2, 0),
+                                               (50.0, 900)]):
+            HeartbeatMonitor(run, host_id=host).beat(10, step_t)
+            if skew:  # host 2's clock runs 15 minutes ahead
+                p = Path(run) / "heartbeats" / f"host{host:04d}.json"
+                d = json.loads(p.read_text())
+                d["t"] = now + skew
+                p.write_text(json.dumps(d))
+        rep = StragglerDetector(run, dead_after_s=120,
+                                skew_tolerance_s=5.0).assess(now=now)
+        assert rep["skewed"] == [2]
+        assert rep["dead"] == [] and sorted(rep["healthy"]) == [0, 1]
+        # host 2's 50s step time is excluded from the median
+        assert rep["median_step_s"] == pytest.approx(1.1)

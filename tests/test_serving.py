@@ -299,6 +299,60 @@ class TestRequestAPI:
                                             temperature=1.0, seed=5))
         assert h4.result().tokens == ref
 
+    def test_retirements_preserve_neighbors_across_fleets(self, small_model):
+        """The cancellation guarantee extended to every retirement path:
+        a neighbor expiring on deadline, NaN-poisoned, or killed by a
+        dispatch fault leaves a seeded request bit-identical across the
+        same fleet compositions as the invariance test above."""
+        from repro.serving import FaultInjector, FaultPlan, VirtualClock
+
+        cfg, params = small_model
+        prompt = [5, 9, 17, 2]
+        sp = SamplingParams(**self.SP)
+        solo = ServingEngine(params, cfg,
+                             EngineConfig(max_slots=1, capacity=32))
+        ref = solo.submit(prompt, sp).result().tokens
+
+        # fleet 2: co-batched victim expires mid-flight (deadline sweep)
+        clock = VirtualClock()
+        e2 = ServingEngine(
+            params, cfg, EngineConfig(max_slots=3, capacity=32),
+            injector=FaultInjector(FaultPlan().stall_clock(2, 60.0),
+                                   clock=clock))
+        h2 = e2.submit(prompt, sp)
+        victim2 = e2.submit([1, 2], SamplingParams(
+            max_new_tokens=64, temperature=3.0, seed=9, deadline_s=30.0))
+        e2.submit([3, 4, 5], SamplingParams(max_new_tokens=3))
+        assert h2.result().tokens == ref
+        e2.run()  # h2 may finish before step 2; drain so the stall fires
+        assert victim2.finish_reason == "timeout"
+
+        # fleet 3: different chunk boundaries, victim NaN-poisoned on device
+        e3 = ServingEngine(
+            params, cfg, EngineConfig(max_slots=2, capacity=32,
+                                      decode_chunk=1, prefill_chunk=2),
+            injector=FaultInjector(FaultPlan().nan_logits(uid=7,
+                                                          gen_index=2)))
+        h3 = e3.submit(prompt, sp)
+        victim3 = e3.submit([7], SamplingParams(max_new_tokens=8,
+                                                temperature=0.5, seed=3),
+                            uid=7)
+        assert h3.result().tokens == ref
+        e3.run()
+        assert victim3.finish_reason == "error"
+
+        # fleet 4: the serial-admit scheduler, victim's dispatch raises
+        e4 = SerialAdmitEngine(
+            params, cfg, EngineConfig(max_slots=2, capacity=32),
+            injector=FaultInjector(
+                FaultPlan().dispatch_error("prefill", 1, uid=5)))
+        h4 = e4.submit(prompt, sp)
+        victim4 = e4.submit([1, 2, 3], SamplingParams(
+            max_new_tokens=4, temperature=1.0, seed=5), uid=5)
+        assert h4.result().tokens == ref
+        e4.run()
+        assert victim4.finish_reason == "error"
+
     def test_same_seed_same_output_repeated(self, small_model):
         cfg, params = small_model
         outs = []
