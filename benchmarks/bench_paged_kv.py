@@ -1,0 +1,304 @@
+"""Paged KV cache benchmark: requests per GB of resident KV, TTFT on
+90%-shared-prefix traffic, overcommitted pools, and eviction/COW churn —
+``kv_layout="paged"`` against the contiguous ``"ring"`` baseline.
+
+Four sections, one JSON:
+
+  * **shared** — the headline trace: every prompt is a common 96-token
+    prefix plus a short unique tail (the system-prompt fleet). One priming
+    request publishes the prefix pages, then the fleet runs on ring,
+    paged+prefix-cache, and paged-without-cache. Records per-request TTFT,
+    prefill dispatch counts (the deterministic proxy for the TTFT win:
+    warm requests skip the shared prefix in ``prefill_chunk`` units),
+    peak resident KV bytes, and ``requests_per_gb`` both ways — the
+    ``requests_per_gb_ratio`` is the acceptance number (>= 2x) and is
+    asserted, since it is pure page accounting, not wall clock. Outputs
+    are asserted identical across all three runs (greedy; the determinism
+    guarantee: shared vs recomputed prefix must not change a token).
+  * **overcommit** — the same fleet through a pool *half* the ring
+    footprint (``max_pages = max_slots * capacity / page_size / 2``):
+    page-budget admission makes the queue head wait instead of
+    corrupting; everything completes, outputs stay identical, and the
+    pool-bytes ratio (2x) is the served-requests-per-GB-of-*pool* story.
+  * **churn** — many distinct-prefix prompts through a deliberately tiny
+    pool: the prefix cache fills, LRU eviction recycles cache-only pages
+    under allocation pressure, and the fleet still drains. Records
+    evictions, hits, peak pages, and the allocator's invariant check.
+  * **cow** — one cached prefix, then a generation long enough to wrap
+    the ring over it: copy-on-write forks are counted and a third
+    request re-reading the cache is asserted bit-equal to a cold engine
+    (the fork protected the published pages).
+
+``PYTHONPATH=src python benchmarks/bench_paged_kv.py [--quick]``
+
+Writes benchmarks/results/BENCH_paged_kv.json and mirrors it to
+BENCH_paged_kv.json at the repo root.
+"""
+
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import json
+import sys
+from pathlib import Path
+
+import jax
+import numpy as np
+
+sys.path.insert(0, str(Path(__file__).resolve().parents[1]))  # script mode
+
+from benchmarks.common import save_result
+from repro import configs
+from repro.core.ptqtp import PTQTPConfig
+from repro.core.quantize_model import quantize_tree
+from repro.models import init_params
+from repro.serving import EngineConfig, SamplingParams, ServingEngine
+
+ROOT = Path(__file__).resolve().parents[1]
+
+BASE = dict(max_slots=4, capacity=128, prefill_chunk=32, decode_chunk=8,
+            page_size=16)
+
+
+def _fleet(n, seed=7):
+    """90%-shared prompts: one 96-token prefix + an 8-token unique tail."""
+    rng = np.random.default_rng(seed)
+    prefix = rng.integers(1, 500, size=96).tolist()
+    return prefix, [prefix + rng.integers(1, 500, size=8).tolist()
+                    for _ in range(n)]
+
+
+def _run_fleet(params, cfg, ecfg, prompts, max_new, *, prime=None):
+    """Prime (optional), reset the page peak, then offer every prompt at
+    t0 and drain. Returns the engine and per-request records."""
+    import time
+
+    eng = ServingEngine(params, cfg, ecfg)
+    if prime is not None:
+        eng.submit(prime, SamplingParams(max_new_tokens=4, temperature=0.0))
+        eng.run()
+        if eng.paged:  # steady-state accounting starts after the prime
+            eng.alloc.peak_used = eng.alloc.used_pages()
+        eng.prefill_steps = 0
+    handles = [eng.submit(p, SamplingParams(max_new_tokens=max_new,
+                                            temperature=0.0))
+               for p in prompts]
+    first_step = {}
+    step = 0
+    t0 = time.perf_counter()
+    while eng.queue or any(s is not None for s in eng.slots):
+        eng.step()
+        step += 1
+        for idx, h in enumerate(handles):
+            if idx not in first_step and h.output:
+                first_step[idx] = step
+    wall = time.perf_counter() - t0
+    assert all(h.done for h in handles)
+    ttft = [h.t_first - h.t_submit for h in handles]
+    return eng, {
+        "outputs": [tuple(h.output) for h in handles],
+        "ttft_mean_ms": 1e3 * float(np.mean(ttft)),
+        "ttft_p90_ms": 1e3 * float(np.quantile(ttft, 0.9)),
+        # engine steps submit -> first token: the deterministic,
+        # machine-independent TTFT (a warm request skips its shared
+        # prefix in whole prefill chunks, so it finishes prefill in
+        # strictly fewer steps)
+        "ttft_steps_mean": float(np.mean([first_step[i]
+                                          for i in range(len(handles))])),
+        "wall": wall,
+    }
+
+
+def _peak_resident_bytes(eng):
+    """Resident KV bytes at the page-usage high-water mark (null page and
+    table included — the honest footprint)."""
+    ms = eng.memory_stats()
+    if not eng.paged:
+        return ms["kv_resident_bytes"]
+    return (ms["kv_resident_bytes"]
+            + ms["kv_page_bytes"] * (eng.alloc.peak_used
+                                     - eng.alloc.used_pages()))
+
+
+# ---------------------------------------------------------------------------
+# shared-prefix fleet: requests/GB + TTFT, three ways
+# ---------------------------------------------------------------------------
+
+def _bench_shared(rows, log, params, cfg, quick):
+    n_req = 5 if quick else 12
+    max_new = 6 if quick else 12
+    prefix, prompts = _fleet(n_req)
+    variants = {
+        "ring": EngineConfig(**BASE, kv_layout="ring"),
+        "paged": EngineConfig(**BASE, kv_layout="paged"),
+        "paged_nocache": EngineConfig(**BASE, kv_layout="paged",
+                                      prefix_cache=False),
+    }
+    # heat each layout's jit paths so measured TTFTs hold no compiles
+    for ecfg in variants.values():
+        _run_fleet(params, cfg, ecfg, prompts[:2], max_new, prime=prompts[0])
+
+    engines, runs = {}, {}
+    for name, ecfg in variants.items():
+        engines[name], runs[name] = _run_fleet(
+            params, cfg, ecfg, prompts, max_new, prime=prompts[0])
+
+    assert (runs["ring"]["outputs"] == runs["paged"]["outputs"]
+            == runs["paged_nocache"]["outputs"])  # the keystone guarantee
+    rows["shared_outputs_identical"] = True
+    rows["shared_n_requests"] = n_req
+    rows["shared_prefix_len"] = len(prefix)
+    rows["shared_fraction"] = len(prefix) / len(prompts[0])
+
+    for name in variants:
+        eng, r = engines[name], runs[name]
+        resident = _peak_resident_bytes(eng)
+        rows[f"shared_ttft_mean_ms_{name}"] = r["ttft_mean_ms"]
+        rows[f"shared_ttft_p90_ms_{name}"] = r["ttft_p90_ms"]
+        rows[f"shared_ttft_steps_{name}"] = r["ttft_steps_mean"]
+        rows[f"shared_prefill_dispatches_{name}"] = eng.prefill_steps
+        rows[f"shared_peak_resident_kv_bytes_{name}"] = resident
+        rows[f"shared_requests_per_gb_{name}"] = n_req / (resident / 1e9)
+        log(f"bench_paged_kv,shared_ttft_mean_ms_{name},"
+            f"{r['ttft_mean_ms']:.2f}")
+
+    warm = engines["paged"]
+    rows["shared_prefix_hits"] = warm.alloc.hits
+    rows["shared_prefix_misses"] = warm.alloc.misses
+    rows["shared_peak_pages_paged"] = warm.alloc.peak_used
+    rows["shared_ttft_speedup_vs_ring"] = (
+        rows["shared_ttft_mean_ms_ring"] / rows["shared_ttft_mean_ms_paged"])
+    rows["shared_ttft_steps_speedup_vs_ring"] = (
+        rows["shared_ttft_steps_ring"] / rows["shared_ttft_steps_paged"])
+    rows["requests_per_gb_ratio"] = (
+        rows["shared_requests_per_gb_paged"]
+        / rows["shared_requests_per_gb_ring"])
+    # page accounting is deterministic — the acceptance floor is asserted,
+    # not just recorded; prefill-dispatch count is the deterministic proxy
+    # for the TTFT win (wall clock stays recorded, not asserted)
+    assert rows["requests_per_gb_ratio"] >= 2.0, rows["requests_per_gb_ratio"]
+    assert warm.alloc.hits > 0
+    assert (rows["shared_prefill_dispatches_paged"]
+            < rows["shared_prefill_dispatches_ring"])
+    assert (rows["shared_ttft_steps_paged"]
+            < rows["shared_ttft_steps_ring"])
+    warm.alloc.check()
+    for k in ("requests_per_gb_ratio", "shared_ttft_speedup_vs_ring",
+              "shared_ttft_steps_speedup_vs_ring",
+              "shared_prefix_hits", "shared_peak_pages_paged"):
+        log(f"bench_paged_kv,{k},{rows[k]}")
+
+
+# ---------------------------------------------------------------------------
+# overcommit: the same fleet through half the ring's pool
+# ---------------------------------------------------------------------------
+
+def _bench_overcommit(rows, log, params, cfg, quick):
+    n_req = 5 if quick else 12
+    max_new = 6 if quick else 12
+    _, prompts = _fleet(n_req)
+    half = BASE["max_slots"] * BASE["capacity"] // BASE["page_size"] // 2
+    ecfg = EngineConfig(**BASE, kv_layout="paged", max_pages=half)
+    eng, r = _run_fleet(params, cfg, ecfg, prompts, max_new,
+                        prime=prompts[0])
+    ring = EngineConfig(**BASE, kv_layout="ring")
+    ring_eng, ring_r = _run_fleet(params, cfg, ring, prompts, max_new,
+                                  prime=prompts[0])
+    assert r["outputs"] == ring_r["outputs"]  # waiting, not corrupting
+    assert eng.sheds == 0
+    eng.alloc.check()
+    pool = eng.memory_stats()["kv_pool_bytes"]
+    ring_pool = ring_eng.memory_stats()["kv_pool_bytes"]
+    rows["overcommit_pool_pages"] = half
+    rows["overcommit_pool_bytes"] = pool
+    rows["overcommit_pool_ratio_vs_ring"] = ring_pool / pool
+    rows["overcommit_completed"] = n_req
+    rows["overcommit_outputs_identical"] = True
+    rows["overcommit_peak_pages"] = eng.alloc.peak_used
+    for k in ("overcommit_pool_ratio_vs_ring", "overcommit_peak_pages"):
+        log(f"bench_paged_kv,{k},{rows[k]}")
+
+
+# ---------------------------------------------------------------------------
+# churn: distinct prefixes through a tiny pool (forced LRU eviction)
+# ---------------------------------------------------------------------------
+
+def _bench_churn(rows, log, params, cfg, quick):
+    n_req = 8 if quick else 20
+    rng = np.random.default_rng(23)
+    prompts = [rng.integers(1, 500, size=64).tolist() for _ in range(n_req)]
+    ecfg = EngineConfig(**BASE, kv_layout="paged", max_pages=12)
+    eng, r = _run_fleet(params, cfg, ecfg, prompts, 6)
+    assert eng.alloc.evictions > 0  # the tiny pool must have recycled cache
+    eng.alloc.check()
+    rows["churn_n_requests"] = n_req
+    rows["churn_pool_pages"] = 12
+    rows["churn_evictions"] = eng.alloc.evictions
+    rows["churn_prefix_hits"] = eng.alloc.hits
+    rows["churn_peak_pages"] = eng.alloc.peak_used
+    rows["churn_cached_pages_end"] = eng.alloc.cached_pages()
+    rows["churn_tokps"] = n_req * 6 / r["wall"]
+    for k in ("churn_evictions", "churn_peak_pages", "churn_tokps"):
+        log(f"bench_paged_kv,{k},{rows[k]}")
+
+
+# ---------------------------------------------------------------------------
+# cow: wrap over a shared prefix; the cache must come out pristine
+# ---------------------------------------------------------------------------
+
+def _bench_cow(rows, log, params, cfg, quick):
+    _, prompts = _fleet(1, seed=31)
+    prompt = prompts[0]
+    ecfg = EngineConfig(**{**BASE, "max_slots": 2}, kv_layout="paged")
+    eng = ServingEngine(params, cfg, ecfg)
+    eng.submit(prompt, SamplingParams(max_new_tokens=4, temperature=0.0))
+    eng.run()  # publishes the prefix
+    eng.submit(prompt, SamplingParams(max_new_tokens=40, temperature=0.0))
+    eng.run()  # 104 + 40 > 128: wraps over the shared pages -> forks
+    assert eng.alloc.forks > 0
+    warm = eng.submit(prompt, SamplingParams(max_new_tokens=8,
+                                             temperature=0.0))
+    eng.run()
+    cold_eng = ServingEngine(params, cfg, dataclasses.replace(
+        ecfg, prefix_cache=False))
+    cold = cold_eng.submit(prompt, SamplingParams(max_new_tokens=8,
+                                                  temperature=0.0))
+    cold_eng.run()
+    assert warm.output == cold.output  # the fork protected the cache
+    eng.alloc.check()
+    rows["cow_forks"] = eng.alloc.forks
+    rows["cow_cache_pristine_after_wrap"] = True
+    log(f"bench_paged_kv,cow_forks,{rows['cow_forks']}")
+
+
+def run(log=print, quick=False):
+    rows = {}
+    cfg = dataclasses.replace(configs.get_smoke_config("qwen2-1.5b"),
+                              kv_cache_dtype="int8")
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    qparams, _ = quantize_tree(params, PTQTPConfig(group_size=32, t_max=5))
+
+    _bench_shared(rows, log, qparams, cfg, quick)
+    _bench_overcommit(rows, log, qparams, cfg, quick)
+    _bench_churn(rows, log, qparams, cfg, quick)
+    _bench_cow(rows, log, qparams, cfg, quick)
+    rows["headline_requests_per_gb_ratio"] = rows["requests_per_gb_ratio"]
+    # headline TTFT is the step-count ratio: machine-independent, and the
+    # effect paging actually delivers (whole prefill chunks skipped). Wall
+    # TTFT stays recorded per variant — at smoke scale on CPU it is
+    # dispatch-overhead-dominated, which is not the deployment regime.
+    rows["headline_shared_ttft_speedup"] = (
+        rows["shared_ttft_steps_speedup_vs_ring"])
+    save_result("BENCH_paged_kv", rows)
+    (ROOT / "BENCH_paged_kv.json").write_text(
+        json.dumps(rows, indent=1, default=float))
+    return rows
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--quick", action="store_true",
+                    help="CI smoke sizes (seconds, not minutes)")
+    args = ap.parse_args()
+    run(quick=args.quick)

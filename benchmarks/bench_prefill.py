@@ -251,10 +251,72 @@ def _bench_longctx(rows, log, quick):
     rows["headline_longctx_ttft_speedup"] = rows[f"longctx{top}_ttft_speedup"]
 
 
+def _bench_crossover(rows, log, quick):
+    """The smoke-scale chunked-vs-serial crossover, recorded as a number.
+
+    Steady state (both engines hot for the exact length), one request at a
+    time: the serial engine prefills the whole prompt in one exact-length
+    dispatch, the bucketed engine walks it in prefill_chunk pieces.
+    ``crossover_prompt_len`` is the prompt length where their TTFTs cross:
+    the zero of a least-squares line through (length, serial - bucketed)
+    — single-point sign changes are dispatch noise on a shared box, the
+    fitted trend is not — clamped to -1 when the fit puts the crossing
+    outside the sweep (one engine wins the whole regime).
+    ``crossover_direction`` says who takes over past it. At smoke scale
+    the measured shape is: chunked wins short prompts (the serial path's
+    per-request admission overhead dominates) and serial overtakes once
+    its single large dispatch amortizes that against many chunk
+    dispatches — the PR-2 steady-state regression, now a number. On real
+    hardware, where compute dwarfs dispatch, the direction inverts.
+    """
+    cfg = configs.get_smoke_config("qwen2-1.5b")
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    lens = (8, 24, 48, 96) if quick else (8, 16, 32, 48, 64, 96, 128)
+    reps = 3 if quick else 5
+    max_new = 4
+    ecfg = EngineConfig(max_slots=1, capacity=256, decode_chunk=4,
+                        prefill_chunk=16)
+    rng = np.random.default_rng(13)
+    engines = {"serial": SerialAdmitEngine(params, cfg, ecfg),
+               "bucketed": ServingEngine(params, cfg, ecfg)}
+    diffs = []
+    for n in lens:
+        trace = [(0, rng.integers(1, 500, size=n).tolist())]
+        t = {}
+        for name, eng in engines.items():
+            _drive(eng, trace, max_new)  # heat: compile this exact length
+            _drive(eng, trace, max_new)
+            t[name] = min(_drive(eng, trace, max_new)["ttft_mean_ms"]
+                          for _ in range(reps))
+            rows[f"crossover_ttft_ms_{name}_len{n}"] = t[name]
+        diffs.append((n, t["serial"] - t["bucketed"]))
+        log(f"bench_prefill,crossover_len{n}_serial_minus_bucketed_ms,"
+            f"{diffs[-1][1]:.3f}")
+    xs = np.array([n for n, _ in diffs], np.float64)
+    ds = np.array([d for _, d in diffs], np.float64)
+    slope, intercept = np.polyfit(xs, ds, 1)
+    cross, direction = -1.0, "none"
+    if slope != 0.0:
+        zero = -intercept / slope
+        if lens[0] <= zero <= lens[-1]:
+            cross = float(zero)
+            direction = ("chunked_then_serial" if slope < 0
+                         else "serial_then_chunked")
+    rows["crossover_direction"] = direction
+    rows["crossover_chunked_wins_shortest"] = bool(diffs[0][1] >= 0)
+    rows["crossover_fit_slope_ms_per_tok"] = float(slope)
+    rows["crossover_sweep_lens"] = list(lens)
+    rows["crossover_sweep_max"] = lens[-1]
+    rows["crossover_prefill_chunk"] = ecfg.prefill_chunk
+    rows["crossover_prompt_len"] = float(cross)
+    log(f"bench_prefill,crossover_prompt_len,{cross:.1f}")
+
+
 def run(log=print, quick=False):
     rows = {}
     _bench(rows, log, quick)
     _bench_longctx(rows, log, quick)
+    _bench_crossover(rows, log, quick)
     # headline = the deployment config (PTQTP serving is the repo's story)
     rows["headline_ttft_speedup"] = rows["ptqtp_ttft_speedup"]
     rows["headline_mixed_tokps_speedup"] = rows["ptqtp_mixed_tokps_speedup"]

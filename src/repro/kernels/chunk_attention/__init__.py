@@ -63,17 +63,50 @@ Backends:
 ``ops.tracked_block_bytes`` gives the analytic peak score-block bytes per
 (shape, backend) — what the long-context benchmark and the O(L·tile) test
 assert; ``ops.peak_tracked_bytes()`` records the same figure at trace time.
+
+Paged variant (stable; ``ops.chunk_attention_paged``)
+-----------------------------------------------------
+::
+
+  chunk_attention_paged(q, k_new, v_new, k_pool, k_scale, v_pool, v_scale,
+                        pos_pool, table, positions, lengths, *,
+                        window=None, backend="auto", tile=None,
+                        interpret=None)
+      -> (B, L, KV, G, hd) float32
+
+The KV ring virtualized into fixed-size pages: ``k_pool``/``v_pool`` are
+(P, page_size, KV, hd) *physical* pages shared by the whole batch (int8
+with (P, page_size, KV) scales, or float with scales None), ``pos_pool``
+(P, page_size) their per-entry absolute positions, and ``table``
+(B, n_pages) int32 maps each row's logical page to a physical one. The op
+computes exactly ``chunk_attention`` over the virtual ring
+``ring[b, p·ps + o] = pool[table[b, p], o]`` (``ref.gather_pages``) with
+capacity ``n_pages · page_size`` — the same mask rule in logical
+positions, so prefill, decode (L = 1), ring wrap, and sliding windows are
+unchanged. Physical page 0 is the reserved **null page** (pos ≡ -1, never
+written): unmapped table entries point at it and gather safely, masked by
+the pos >= 0 rule — length-0 rows and partially mapped rings need no
+special cases. Backends mirror the contiguous op; ``stream``/``pallas``
+walk logical tiles through the table (tile divides page_size, one dynamic
+page index per tile — pages are just non-contiguous tiles), and with
+matching ``tile`` each backend is bit-identical to its contiguous-ring
+counterpart (``materialized`` is gather-then-oracle, bit-identical by
+construction). ``ops.paged_tile`` is the paged tile selector.
 """
 
 from repro.kernels.chunk_attention.ops import (
     chunk_attention,
+    chunk_attention_paged,
+    paged_tile,
     peak_tracked_bytes,
     reset_tracking,
     resolve_chunk_backend,
     tracked_block_bytes,
 )
+from repro.kernels.chunk_attention.ref import gather_pages
 
 __all__ = [
-    "chunk_attention", "resolve_chunk_backend", "tracked_block_bytes",
+    "chunk_attention", "chunk_attention_paged", "gather_pages", "paged_tile",
+    "resolve_chunk_backend", "tracked_block_bytes",
     "peak_tracked_bytes", "reset_tracking",
 ]

@@ -90,6 +90,110 @@ def _kernel(q_ref, kn_ref, vn_ref, k8_ref, ks_ref, v8_ref, vs_ref,
     o_ref[0, 0] = out.reshape(g, L, hd)
 
 
+def _paged_kernel(q_ref, kn_ref, vn_ref, kp_ref, ks_ref, vp_ref, vs_ref,
+                  posp_ref, pt_ref, pos_ref, len_ref, o_ref, *, tile: int,
+                  scale: float, reach: int, scaled: bool):
+    """Page-gather variant of ``_kernel``: same grid (one program per
+    (batch, kv-head)), same online-softmax walk over *logical* tiles, but
+    each tile is loaded through the page table with a dynamic page index
+    (``pl.dslice`` start) instead of a contiguous ring offset. Tile divides
+    page_size, so a tile never spans two physical pages. The mask rule is
+    untouched — positions come from the gathered pos page, so ring wrap,
+    windows, and the null page (pos ≡ -1) all fall out of the one rule.
+    """
+    g, L, hd = q_ref.shape[-3:]
+    ps = kp_ref.shape[1]
+    n_pages = pt_ref.shape[1]
+    tpp = ps // tile
+    q2 = (q_ref[0, 0].astype(jnp.float32) * scale).reshape(g * L, hd)
+    qpos = pos_ref[0]                                        # (L,)
+    length = len_ref[0]
+
+    def page_tile(i, carry):
+        pidx = i // tpp
+        off = (i % tpp) * tile
+        pid = pt_ref[0, pl.dslice(pidx, 1)][0]
+        k = kp_ref[pl.dslice(pid, 1), pl.dslice(off, tile), 0, :][0]
+        v = vp_ref[pl.dslice(pid, 1), pl.dslice(off, tile), 0, :][0]
+        k = k.astype(jnp.float32)
+        v = v.astype(jnp.float32)
+        if scaled:  # int8 pages: per-(entry, kv-head) absmax in-reg dequant
+            k = k * ks_ref[pl.dslice(pid, 1), pl.dslice(off, tile), 0][0][:, None]
+            v = v * vs_ref[pl.dslice(pid, 1), pl.dslice(off, tile), 0][0][:, None]
+        pb = posp_ref[pl.dslice(pid, 1), pl.dslice(off, tile)][0]
+        d = qpos[:, None] - pb[None, :]                      # (L, tile)
+        valid = (pb[None, :] >= 0) & (d >= 0) & (d < reach)
+        validg = jnp.broadcast_to(valid[None], (g, L, tile)).reshape(
+            g * L, tile)
+        return _online_update(q2, k, v, validg, *carry)
+
+    m0 = jnp.full((g * L,), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((g * L,), jnp.float32)
+    acc0 = jnp.zeros((g * L, hd), jnp.float32)
+    m, l, acc = jax.lax.fori_loop(0, n_pages * tpp, page_tile,
+                                  (m0, l0, acc0))
+
+    # the chunk's own keys: identical to the contiguous kernel's final tile
+    kn = kn_ref[0, :, 0, :].astype(jnp.float32)              # (L, hd)
+    vn = vn_ref[0, :, 0, :].astype(jnp.float32)
+    jidx = jax.lax.broadcasted_iota(jnp.int32, (L, L), 1)
+    d = qpos[:, None] - qpos[None, :]
+    valid = (jidx < length) & (d >= 0) & (d < reach)
+    validg = jnp.broadcast_to(valid[None], (g, L, L)).reshape(g * L, L)
+    m, l, acc = _online_update(q2, kn, vn, validg, m, l, acc)
+
+    out = acc / jnp.maximum(l, 1e-30)[:, None]               # 0s if unseen
+    o_ref[0, 0] = out.reshape(g, L, hd)
+
+
+def chunk_attention_paged_pallas(q, k_new, v_new, k_pool, k_scale, v_pool,
+                                 v_scale, pos_pool, table, positions,
+                                 lengths, *, window=None, tile: int = 512,
+                                 interpret: bool = True):
+    """Paged Pallas chunk attention. q is (B, KV, G, L, hd) (grid layout);
+    the public op transposes. Pools are (P, page_size, KV, hd) with
+    (P, page_size, KV) scales (int8) or scales None (float); table is
+    (B, n_pages) physical page ids. Returns (B, KV, G, L, hd) f32.
+    """
+    P, ps, kv, hd = k_pool.shape
+    b, n_pages = table.shape
+    g, L = q.shape[2], q.shape[3]
+    cap = n_pages * ps
+    t = min(tile, ps)
+    while ps % t:
+        t -= 1
+    reach = min(window, cap) if window else cap
+    scale = hd ** -0.5
+    scaled = k_scale is not None
+    if not scaled:  # float pages: 1-entry placeholder refs, never read
+        k_scale = v_scale = jnp.ones((1, 1, kv), jnp.float32)
+    sP, sps = (P, ps) if scaled else (1, 1)
+
+    kern = functools.partial(_paged_kernel, tile=t, scale=scale, reach=reach,
+                             scaled=scaled)
+    return pl.pallas_call(
+        kern,
+        grid=(b, kv),
+        in_specs=[
+            pl.BlockSpec((1, 1, g, L, hd), lambda i, j: (i, j, 0, 0, 0)),  # q
+            pl.BlockSpec((1, L, 1, hd), lambda i, j: (i, 0, j, 0)),   # k_new
+            pl.BlockSpec((1, L, 1, hd), lambda i, j: (i, 0, j, 0)),   # v_new
+            pl.BlockSpec((P, ps, 1, hd), lambda i, j: (0, 0, j, 0)),  # k pool
+            pl.BlockSpec((sP, sps, 1), lambda i, j: (0, 0, j)),       # ks
+            pl.BlockSpec((P, ps, 1, hd), lambda i, j: (0, 0, j, 0)),  # v pool
+            pl.BlockSpec((sP, sps, 1), lambda i, j: (0, 0, j)),       # vs
+            pl.BlockSpec((P, ps), lambda i, j: (0, 0)),               # pos pool
+            pl.BlockSpec((1, n_pages), lambda i, j: (i, 0)),          # table
+            pl.BlockSpec((1, L), lambda i, j: (i, 0)),                # positions
+            pl.BlockSpec((1,), lambda i, j: (i,)),                    # lengths
+        ],
+        out_specs=pl.BlockSpec((1, 1, g, L, hd), lambda i, j: (i, j, 0, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, kv, g, L, hd), jnp.float32),
+        interpret=interpret,
+    )(q, k_new, v_new, k_pool, k_scale, v_pool, v_scale, pos_pool,
+      table.astype(jnp.int32), positions, lengths)
+
+
 def chunk_attention_pallas(q, k_new, v_new, k_cache, k_scale, v_cache,
                            v_scale, pos_buf, positions, lengths, *,
                            window=None, tile: int = 512,

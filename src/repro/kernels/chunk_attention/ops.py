@@ -32,8 +32,9 @@ import jax
 import jax.numpy as jnp
 
 from repro.kernels.chunk_attention import ref as _ref
-from repro.kernels.chunk_attention.kernel import chunk_attention_pallas
-from repro.kernels.chunk_attention.ref import NEG_INF, reach_of
+from repro.kernels.chunk_attention.kernel import (chunk_attention_paged_pallas,
+                                                  chunk_attention_pallas)
+from repro.kernels.chunk_attention.ref import NEG_INF, gather_pages, reach_of
 
 DEFAULT_BACKEND = "auto"
 # target elements per (G·L, tile) score block — balances scan trip count
@@ -74,6 +75,29 @@ def _select_tile(cap: int, L: int) -> int:
     return best if best >= min(target, 64) else cap
 
 
+@functools.lru_cache(maxsize=None)
+def paged_tile(page_size: int, L: int) -> int:
+    """Largest divisor of page_size with L·tile <= _TILE_ELEMS.
+
+    Paged tiles must divide the page (one tile never spans two physical
+    pages — the gather stays a single dynamic slice), the paged analogue of
+    the divide-cap rule above. Page sizes are powers of two in practice, so
+    this is page_size itself until L·page_size crosses _TILE_ELEMS.
+    """
+    target = max(1, _TILE_ELEMS // max(L, 1))
+    if page_size <= target:
+        return page_size
+    best = 1
+    i = 1
+    while i * i <= page_size:
+        if page_size % i == 0:
+            for d in (i, page_size // i):
+                if best < d <= target:
+                    best = d
+        i += 1
+    return best
+
+
 def tracked_block_bytes(b: int, kv: int, g: int, L: int, cap: int, *,
                         backend: str, tile: Optional[int] = None) -> int:
     """Analytic peak f32 score-block bytes for one op call."""
@@ -98,6 +122,41 @@ def peak_tracked_bytes() -> int:
     return _TRACK["peak_bytes"]
 
 
+def _stream_update(qf, carry, k, v, valid):
+    """One online-softmax accumulation step, shared by the contiguous-ring
+    and paged stream paths (one implementation ⇒ the two walks are
+    bit-identical whenever they see the same logical tile sequence).
+
+    qf: (B, KV, G, L, hd) pre-scaled f32 queries; k/v: (B, C, KV, hd) f32;
+    valid: (B, L, C) bool; carry (m, l, acc).
+    """
+    m, l, acc = carry
+    s = jnp.einsum("bkgld,bckd->bkglc", qf, k)               # (B,KV,G,L,C)
+    s = jnp.where(valid[:, None, None], s, NEG_INF)
+    m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+    alpha = jnp.exp(m - m_new)
+    p = jnp.where(valid[:, None, None],
+                  jnp.exp(s - m_new[..., None]), 0.0)
+    acc = acc * alpha[..., None] + jnp.einsum("bkglc,bckd->bkgld", p, v)
+    l = l * alpha + jnp.sum(p, axis=-1)
+    return m_new, l, acc
+
+
+def _stream_carry0(b, kv, g, L, hd):
+    return (jnp.full((b, kv, g, L), NEG_INF, jnp.float32),
+            jnp.zeros((b, kv, g, L), jnp.float32),
+            jnp.zeros((b, kv, g, L, hd), jnp.float32))
+
+
+def _stream_finish(qf, carry, k_new, v_new, positions, lengths, reach):
+    """Fold the chunk's own keys in as the final tile and normalize."""
+    m, l, acc = _stream_update(qf, carry, k_new.astype(jnp.float32),
+                               v_new.astype(jnp.float32),
+                               _ref.chunk_mask(positions, lengths, reach))
+    out = acc / jnp.maximum(l, 1e-30)[..., None]             # 0s if unseen
+    return out.transpose(0, 3, 1, 2, 4)                      # (B,L,KV,G,hd)
+
+
 def _stream(q, k_new, v_new, k_cache, k_scale, v_cache, v_scale, pos_buf,
             positions, lengths, *, window, tile):
     """Online-softmax loop over ring tiles; chunk keys fold in last.
@@ -113,19 +172,6 @@ def _stream(q, k_new, v_new, k_cache, k_scale, v_cache, v_scale, pos_buf,
     scale = hd ** -0.5
     qf = q.astype(jnp.float32).transpose(0, 2, 3, 1, 4) * scale  # (B,KV,G,L,hd)
 
-    def update(carry, k, v, valid):
-        """k/v: (B, C, KV, hd) f32; valid: (B, L, C) bool."""
-        m, l, acc = carry
-        s = jnp.einsum("bkgld,bckd->bkglc", qf, k)           # (B,KV,G,L,C)
-        s = jnp.where(valid[:, None, None], s, NEG_INF)
-        m_new = jnp.maximum(m, jnp.max(s, axis=-1))
-        alpha = jnp.exp(m - m_new)
-        p = jnp.where(valid[:, None, None],
-                      jnp.exp(s - m_new[..., None]), 0.0)
-        acc = acc * alpha[..., None] + jnp.einsum("bkglc,bckd->bkgld", p, v)
-        l = l * alpha + jnp.sum(p, axis=-1)
-        return m_new, l, acc
-
     def ring_tile(i, carry):
         sl = lambda a: jax.lax.dynamic_slice_in_dim(a, i * tile, tile, axis=1)
         k = _ref._deq(sl(k_cache), sl(k_scale) if k_scale is not None
@@ -135,22 +181,58 @@ def _stream(q, k_new, v_new, k_cache, k_scale, v_cache, v_scale, pos_buf,
         pt = sl(pos_buf)
         d = positions[:, :, None] - pt[:, None, :]           # (B, L, tile)
         valid = (pt[:, None, :] >= 0) & (d >= 0) & (d < reach)
-        return update(carry, k, v, valid)
+        return _stream_update(qf, carry, k, v, valid)
 
     n_tiles = cap // tile
-    m0 = jnp.full((b, kv, g, L), NEG_INF, jnp.float32)
-    l0 = jnp.zeros((b, kv, g, L), jnp.float32)
-    acc0 = jnp.zeros((b, kv, g, L, hd), jnp.float32)
+    carry0 = _stream_carry0(b, kv, g, L, hd)
     if n_tiles == 1:  # decode fast path: no loop machinery for one tile
-        carry = ring_tile(0, (m0, l0, acc0))
+        carry = ring_tile(0, carry0)
     else:
-        carry = jax.lax.fori_loop(0, n_tiles, ring_tile, (m0, l0, acc0))
+        carry = jax.lax.fori_loop(0, n_tiles, ring_tile, carry0)
+    return _stream_finish(qf, carry, k_new, v_new, positions, lengths, reach)
 
-    m, l, acc = update(carry, k_new.astype(jnp.float32),
-                       v_new.astype(jnp.float32),
-                       _ref.chunk_mask(positions, lengths, reach))
-    out = acc / jnp.maximum(l, 1e-30)[..., None]             # 0s if unseen
-    return out.transpose(0, 3, 1, 2, 4)                      # (B,L,KV,G,hd)
+
+def _stream_paged(q, k_new, v_new, k_pool, k_scale, v_pool, v_scale,
+                  pos_pool, table, positions, lengths, *, window, tile):
+    """Paged stream path: the same online-softmax walk over *logical* tiles,
+    each gathered through the page table (tile divides page_size, so one
+    tile never spans two physical pages). Tile i covers logical slots
+    [i·tile, (i+1)·tile) of the virtual ring ``gather_pages`` defines; with
+    equal tile sizes the (k, v, valid) sequence matches the contiguous-ring
+    walk exactly, so the two are bit-identical per backend.
+    """
+    b, L, kv, g, hd = q.shape
+    ps = k_pool.shape[1]
+    n_pages = table.shape[1]
+    cap = n_pages * ps
+    reach = reach_of(cap, window)
+    scale = hd ** -0.5
+    qf = q.astype(jnp.float32).transpose(0, 2, 3, 1, 4) * scale
+    tpp = ps // tile                                         # tiles per page
+
+    def page_tile(i, carry):
+        pidx = i // tpp
+        off = (i % tpp) * tile
+        phys = jax.lax.dynamic_index_in_dim(table, pidx, axis=1,
+                                            keepdims=False)  # (B,)
+        sl = lambda pool: jax.lax.dynamic_slice_in_dim(
+            jnp.take(pool, phys, axis=0), off, tile, axis=1)
+        k = _ref._deq(sl(k_pool), sl(k_scale) if k_scale is not None
+                      else None)                             # (B, tile, KV, hd)
+        v = _ref._deq(sl(v_pool), sl(v_scale) if v_scale is not None
+                      else None)
+        pt = sl(pos_pool)
+        d = positions[:, :, None] - pt[:, None, :]           # (B, L, tile)
+        valid = (pt[:, None, :] >= 0) & (d >= 0) & (d < reach)
+        return _stream_update(qf, carry, k, v, valid)
+
+    n_tiles = n_pages * tpp
+    carry0 = _stream_carry0(b, kv, g, L, hd)
+    if n_tiles == 1:
+        carry = page_tile(0, carry0)
+    else:
+        carry = jax.lax.fori_loop(0, n_tiles, page_tile, carry0)
+    return _stream_finish(qf, carry, k_new, v_new, positions, lengths, reach)
 
 
 def chunk_attention(q, k_new, v_new, k_cache, k_scale, v_cache, v_scale,
@@ -187,6 +269,65 @@ def chunk_attention(q, k_new, v_new, k_cache, k_scale, v_cache, v_scale,
         out = chunk_attention_pallas(
             q.transpose(0, 2, 3, 1, 4), k_new, v_new, k_cache, k_scale,
             v_cache, v_scale, pos_buf, positions,
+            lengths.astype(jnp.int32), window=window, tile=t,
+            interpret=interpret)
+        return out.transpose(0, 3, 1, 2, 4)
+    raise ValueError(f"unknown chunk-attention backend {backend!r}")
+
+
+def chunk_attention_paged(q, k_new, v_new, k_pool, k_scale, v_pool, v_scale,
+                          pos_pool, table, positions, lengths, *,
+                          window: Optional[int] = None,
+                          backend: str = DEFAULT_BACKEND,
+                          tile: Optional[int] = None,
+                          interpret: Optional[bool] = None):
+    """Chunk attention over a *paged* ring: identical semantics to
+    ``chunk_attention`` on the virtual ring ``ref.gather_pages(pool,
+    table)`` defines (mask rule unchanged, expressed in logical positions
+    carried by ``pos_pool`` — prefill and decode L=1 stay unified).
+
+    Extra operands vs the contiguous op: ``k_pool``/``v_pool`` are
+    (P, page_size, KV, hd) physical pages (int8 with (P, page_size, KV)
+    scales, or float with scales None), ``pos_pool`` (P, page_size) the
+    per-entry absolute positions, ``table`` (B, n_pages) int32 physical
+    page ids per logical page. Physical page 0 is the reserved null page
+    (pos ≡ -1, never written): unmapped entries point at it and mask out.
+
+    Backends mirror the contiguous op: ``materialized`` gathers the pages
+    into a contiguous ring and runs ``chunk_attention_ref`` (the oracle by
+    construction); ``stream``/``pallas`` walk logical tiles through the
+    table without materializing the gather — with matching ``tile`` each
+    is bit-identical to its contiguous-ring counterpart.
+    """
+    b, L, kv, g, hd = q.shape
+    ps = k_pool.shape[1]
+    n_pages = table.shape[1]
+    cap = n_pages * ps
+    backend = resolve_chunk_backend(backend)
+    t = tile if tile is not None else paged_tile(ps, L)
+    t = min(t, ps)
+    while ps % t:  # tiles must divide the page — a spanning tile would need
+        t -= 1     # a two-page gather
+    _TRACK["peak_bytes"] = max(
+        _TRACK["peak_bytes"],
+        tracked_block_bytes(b, kv, g, L, cap, backend=backend, tile=t))
+    if backend == "materialized":
+        return _ref.chunk_attention_ref(
+            q, k_new, v_new, gather_pages(k_pool, table),
+            None if k_scale is None else gather_pages(k_scale, table),
+            gather_pages(v_pool, table),
+            None if v_scale is None else gather_pages(v_scale, table),
+            gather_pages(pos_pool, table), positions, lengths, window=window)
+    if backend == "stream":
+        return _stream_paged(q, k_new, v_new, k_pool, k_scale, v_pool,
+                             v_scale, pos_pool, table, positions, lengths,
+                             window=window, tile=t)
+    if backend == "pallas":
+        if interpret is None:
+            interpret = jax.default_backend() != "tpu"
+        out = chunk_attention_paged_pallas(
+            q.transpose(0, 2, 3, 1, 4), k_new, v_new, k_pool, k_scale,
+            v_pool, v_scale, pos_pool, table, positions,
             lengths.astype(jnp.int32), window=window, tile=t,
             interpret=interpret)
         return out.transpose(0, 3, 1, 2, 4)

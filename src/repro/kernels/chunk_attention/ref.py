@@ -51,6 +51,22 @@ def _deq(c, scale):
     return c if scale is None else c * scale[..., None].astype(jnp.float32)
 
 
+def gather_pages(pool, table):
+    """Materialize the logical (B, n_pages·page_size, ...) ring of a paged
+    cache: ``ring[b, p*ps + o] = pool[table[b, p], o]``.
+
+    ``pool`` is (P, ps, ...) physical pages; ``table`` (B, n_pages) int32
+    physical page ids. Physical page 0 is the reserved *null page* (pos ≡
+    -1, never written), so unmapped table entries gather safely and the
+    mask rule hides them — no special cases anywhere downstream. This
+    helper defines paged semantics: every paged backend must equal
+    ``chunk_attention_ref`` over this gather.
+    """
+    b, n = table.shape
+    flat = pool[table.reshape(-1)]                           # (B·n, ps, ...)
+    return flat.reshape((b, n * pool.shape[1]) + pool.shape[2:])
+
+
 def chunk_attention_ref(q, k_new, v_new, k_cache, k_scale, v_cache, v_scale,
                         pos_buf, positions, lengths, *,
                         window: Optional[int] = None):

@@ -29,6 +29,12 @@ with ``--admission-policy`` choosing shed-on-submit (``reject``, the
 default) vs progress-coupled blocking (``block``). The final line prints
 ``engine.health().summary()`` — the same one-line snapshot a monitor
 scrapes.
+
+Paged KV (v1.2): ``--kv-layout paged`` serves from fixed-size physical KV
+pages (``--page-size``, pool ``--max-pages``) with copy-on-write prefix
+reuse across requests (``--prefix-cache`` / ``--no-prefix-cache``); the
+boot breakdown prints the page pool and the health line gains page-pool
+gauges. Outputs are bit-identical to ``--kv-layout ring``.
 """
 
 from __future__ import annotations
@@ -112,6 +118,23 @@ def main(argv=None):
                          "chunk_attention): auto = Pallas on TPU, the "
                          "streaming online-softmax fallback elsewhere; "
                          "materialized = the full-score-block baseline")
+    ap.add_argument("--kv-layout", choices=("ring", "paged"), default="ring",
+                    help="KV-cache storage: 'ring' = contiguous per-slot "
+                         "(baseline + bit-identity oracle); 'paged' = "
+                         "fixed-size pages from a shared pool with COW "
+                         "prefix reuse (serving contract v1.2)")
+    ap.add_argument("--page-size", type=int, default=16,
+                    help="tokens per physical KV page (paged layout); must "
+                         "divide --capacity and align with the attention "
+                         "tile selection")
+    ap.add_argument("--max-pages", type=int, default=None, metavar="N",
+                    help="physical page pool size (paged layout; default "
+                         "slots*capacity/page_size = the ring footprint; "
+                         "lower overcommits against prefix sharing)")
+    ap.add_argument("--prefix-cache", action=argparse.BooleanOptionalAction,
+                    default=True,
+                    help="COW prefix-page reuse across requests (paged "
+                         "layout; cache-hit prompt pages skip prefill)")
     ap.add_argument("--warmup", action="store_true",
                     help="precompile every dispatch bucket before serving")
     ap.add_argument("--no-quantize", action="store_true",
@@ -122,6 +145,31 @@ def main(argv=None):
                          "stream seeded seed+i (reproducible regardless "
                          "of co-batched traffic)")
     args = ap.parse_args(argv)
+
+    if args.kv_layout == "paged":
+        if args.scheduler == "serial":
+            ap.error("--kv-layout paged requires the bucketed scheduler "
+                     "(the serial baseline prefills into a private ring)")
+        if args.capacity % args.page_size:
+            ap.error(f"--capacity {args.capacity} must be a whole number "
+                     f"of pages (--page-size {args.page_size})")
+        # page boundaries must align with the attention tile walk: the
+        # paged kernels tile at paged_tile(page_size, L) which divides the
+        # page by construction, and bit-identity with the ring baseline
+        # additionally wants the ring tile to land on page boundaries
+        from repro.kernels.chunk_attention import paged_tile
+        from repro.kernels.chunk_attention.ops import _select_tile
+        for L in (1, args.prefill_chunk):
+            t_ring = _select_tile(args.capacity, L)
+            t_paged = paged_tile(args.page_size, L)
+            if args.page_size % t_paged:
+                ap.error(f"--page-size {args.page_size} admits no clean "
+                         f"attention tile at chunk length {L}")
+            if t_ring % args.page_size and args.page_size % t_ring:
+                ap.error(f"--page-size {args.page_size} does not divide "
+                         f"the attention tile selection cleanly (ring "
+                         f"tile {t_ring} at chunk length {L}); pick a "
+                         "power-of-two page size dividing --capacity")
 
     boot = {}  # phase -> seconds (startup breakdown)
     t_boot = time.time()
@@ -167,9 +215,17 @@ def main(argv=None):
         prefill_chunk=args.prefill_chunk, attn_backend=args.attn_backend,
         max_queue=args.max_queue,
         max_resident_tokens=args.max_resident_tokens,
-        admission_policy=args.admission_policy))
+        admission_policy=args.admission_policy,
+        kv_layout=args.kv_layout, page_size=args.page_size,
+        max_pages=args.max_pages, prefix_cache=args.prefix_cache))
     boot["engine_init"] = time.time() - t0
     mem = engine.memory_stats()
+    if args.kv_layout == "paged":
+        print(f"[serve] paged KV: pool {engine.alloc.n_pages} pages x "
+              f"{args.page_size} tokens ({mem['kv_pool_bytes'] / 1e6:.2f} MB"
+              f", {mem['kv_page_bytes'] / 1e3:.1f} KB/page across layers), "
+              f"prefix cache {'on' if engine._prefix_reuse else 'off'}; "
+              f"resident KV {mem['kv_resident_bytes'] / 1e6:.2f} MB")
     if mem["preunpack_decode"]:
         # honest resident-state accounting: pre-unpacked decode planes are
         # int8 trits, 4x the packed bytes a weight-only count would suggest

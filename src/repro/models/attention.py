@@ -28,7 +28,8 @@ from typing import Any, Dict, Optional, Tuple
 import jax
 import jax.numpy as jnp
 
-from repro.kernels.chunk_attention.ops import chunk_attention
+from repro.kernels.chunk_attention.ops import (chunk_attention,
+                                               chunk_attention_paged)
 from repro.models.common import apply_rope, dense, dense_init, norm_init, rms_norm
 
 NEG_INF = -1e30
@@ -154,13 +155,21 @@ def attention_forward(
 # ---------------------------------------------------------------------------
 
 def cache_init(cfg, batch: int, capacity: int, window: Optional[int],
-               dtype) -> Dict[str, Any]:
+               dtype, *, kv_spec: Optional[Dict[str, int]] = None
+               ) -> Dict[str, Any]:
     """Ring cache. capacity = min(window, max_context) for local layers.
 
     kv_cache_dtype="int8" (§Perf it. 5, beyond-paper): k/v stored int8 with
     per-(slot, kv-head) absmax scales — halves cache HBM capacity AND the
     decode-read traffic that dominates the decode_32k memory term.
+
+    ``kv_spec = {"page_size": ps, "max_pages": n}`` selects the *paged*
+    layout instead (see :func:`paged_cache_init`).
     """
+    if kv_spec is not None:
+        return paged_cache_init(cfg, batch, capacity, window, dtype,
+                                page_size=kv_spec["page_size"],
+                                max_pages=kv_spec["max_pages"])
     cap = min(window, capacity) if window else capacity
     hd = cfg.head_dim
     cache = {"pos": jnp.full((batch, cap), -1, jnp.int32)}
@@ -172,6 +181,55 @@ def cache_init(cfg, batch: int, capacity: int, window: Optional[int],
     else:
         cache["k"] = jnp.zeros((batch, cap, cfg.n_kv_heads, hd), dtype)
         cache["v"] = jnp.zeros((batch, cap, cfg.n_kv_heads, hd), dtype)
+    return cache
+
+
+def paged_cache_init(cfg, batch: int, capacity: int, window: Optional[int],
+                     dtype, *, page_size: int, max_pages: int
+                     ) -> Dict[str, Any]:
+    """Paged KV cache: one batch-global pool of fixed-size pages plus a
+    per-row page table (``repro.kernels.chunk_attention`` paged contract).
+
+    Pool leaves are named ``pages_*`` — they are *physical* storage owned
+    by the allocator, not per-row state, and the engine's row reset skips
+    them. ``table`` (B, n_pages) int32 is per-row; entry 0 points at the
+    reserved null page (``pages_pos[0] ≡ -1``, never written), so an
+    unmapped logical page reads as empty. The pool holds ``max_pages``
+    allocatable pages + the null page.
+
+    Sliding-window layers are rejected: paging virtualizes one uniform
+    logical capacity per row, and a window < capacity layer would need its
+    own shorter ring (use ``kv_layout="ring"`` for such models).
+    """
+    if window is not None and window < capacity:
+        raise ValueError(
+            f"paged KV layout requires full-capacity attention layers "
+            f"(window {window} < capacity {capacity}); use the ring layout "
+            "for sliding-window models")
+    if capacity % page_size:
+        raise ValueError(f"page_size {page_size} must divide "
+                         f"capacity {capacity}")
+    hd = cfg.head_dim
+    n_pages = capacity // page_size
+    P = max_pages + 1  # + the reserved null page 0
+    cache = {
+        "pages_pos": jnp.full((P, page_size), -1, jnp.int32),
+        "table": jnp.zeros((batch, n_pages), jnp.int32),
+    }
+    if cfg.kv_cache_dtype == "int8":
+        cache["pages_k"] = jnp.zeros((P, page_size, cfg.n_kv_heads, hd),
+                                     jnp.int8)
+        cache["pages_v"] = jnp.zeros((P, page_size, cfg.n_kv_heads, hd),
+                                     jnp.int8)
+        cache["pages_ks"] = jnp.zeros((P, page_size, cfg.n_kv_heads),
+                                      jnp.float32)
+        cache["pages_vs"] = jnp.zeros((P, page_size, cfg.n_kv_heads),
+                                      jnp.float32)
+    else:
+        cache["pages_k"] = jnp.zeros((P, page_size, cfg.n_kv_heads, hd),
+                                     dtype)
+        cache["pages_v"] = jnp.zeros((P, page_size, cfg.n_kv_heads, hd),
+                                     dtype)
     return cache
 
 
@@ -224,6 +282,34 @@ def _scatter_slots(buf, slots, vals):
     return jax.vmap(per_batch)(buf, slots, vals)
 
 
+def _scatter_pages(pool, table, slots, vals):
+    """Paged analogue of ``_scatter_slots``: write logical ring slots
+    through the page table into the physical pool.
+
+    pool: (P, ps, ...); table: (B, n_pages) int32; slots: (B, S) *logical*
+    slot ids where slot == n_pages·ps means "drop" (same sentinel rule as
+    the contiguous path); vals: (B, S, ...).
+
+    Writes resolving to the null page (table entry 0 — an unmapped logical
+    page) are dropped too: the null page's pos ≡ -1 invariant is what makes
+    unmapped gathers safe, so nothing may ever dirty it. Distinct rows
+    never map a writable logical page to the same physical page (the
+    allocator copy-on-write-forks shared pages before any dispatch that
+    writes them), so the flattened scatter has no cross-row collisions.
+    """
+    P, ps = pool.shape[0], pool.shape[1]
+    n_pages = table.shape[1]
+    page = jnp.clip(slots // ps, 0, n_pages - 1)
+    phys = jnp.take_along_axis(table, page, axis=1)          # (B, S)
+    flat = phys * ps + slots % ps
+    drop = (slots >= n_pages * ps) | (phys == 0)
+    flat = jnp.where(drop, P * ps, flat)                     # out of range
+    fp = pool.reshape((P * ps,) + pool.shape[2:])
+    fp = fp.at[flat.reshape(-1)].set(
+        vals.reshape((-1,) + vals.shape[2:]).astype(pool.dtype), mode="drop")
+    return fp.reshape(pool.shape)
+
+
 def attention_prefill_chunk(
     params: Dict[str, Any],
     cfg,
@@ -256,17 +342,26 @@ def attention_prefill_chunk(
     b, L, _ = x.shape
     hd = cfg.head_dim
     kv, g = cfg.n_kv_heads, cfg.n_heads // cfg.n_kv_heads
-    cap = cache["k"].shape[1]
+    paged = "table" in cache
+    cap = (cache["table"].shape[1] * cache["pages_k"].shape[1] if paged
+           else cache["k"].shape[1])
 
     q, k, v = _qkv(params, cfg, x, positions)
     qh = q.reshape(b, L, kv, g, hd)
 
     valid = jnp.arange(L)[None, :] < lengths[:, None]        # (B, L)
-    y = chunk_attention(
-        qh, k, v, cache["k"], cache.get("k_scale"), cache["v"],
-        cache.get("v_scale"), cache["pos"], positions,
-        lengths.astype(jnp.int32), window=window,
-        backend=cfg.attn_backend)
+    if paged:
+        y = chunk_attention_paged(
+            qh, k, v, cache["pages_k"], cache.get("pages_ks"),
+            cache["pages_v"], cache.get("pages_vs"), cache["pages_pos"],
+            cache["table"], positions, lengths.astype(jnp.int32),
+            window=window, backend=cfg.attn_backend)
+    else:
+        y = chunk_attention(
+            qh, k, v, cache["k"], cache.get("k_scale"), cache["v"],
+            cache.get("v_scale"), cache["pos"], positions,
+            lengths.astype(jnp.int32), window=window,
+            backend=cfg.attn_backend)
     y = y.reshape(b, L, cfg.n_heads * hd).astype(x.dtype)
     y = dense(params["wo"], y)
 
@@ -274,6 +369,8 @@ def attention_prefill_chunk(
     row_end = positions[:, :1] + lengths[:, None]            # (B, 1)
     keep = valid & (positions >= row_end - cap)
     slots = jnp.where(keep, positions % cap, cap).astype(jnp.int32)
+    if paged:
+        return y, _write_pages(cache, slots, k, v, positions)
     out = {"pos": _scatter_slots(cache["pos"], slots,
                                  positions.astype(jnp.int32))}
     if "k_scale" in cache:
@@ -287,6 +384,27 @@ def attention_prefill_chunk(
         out["k"] = _scatter_slots(cache["k"], slots, k.astype(cache["k"].dtype))
         out["v"] = _scatter_slots(cache["v"], slots, v.astype(cache["v"].dtype))
     return y, out
+
+
+def _write_pages(cache, slots, k, v, positions):
+    """Scatter chunk k/v (B, S, KV, hd) at logical ``slots`` (sentinel
+    n_pages·ps = drop) through the page table; shared by the chunked
+    prefill and decode (S = 1) write paths."""
+    table = cache["table"]
+    out = {"table": table,
+           "pages_pos": _scatter_pages(cache["pages_pos"], table, slots,
+                                       positions.astype(jnp.int32))}
+    if "pages_ks" in cache:  # int8 pages: quantize the written entries
+        kq, ks = _q8(k)
+        vq, vs = _q8(v)
+        out["pages_k"] = _scatter_pages(cache["pages_k"], table, slots, kq)
+        out["pages_v"] = _scatter_pages(cache["pages_v"], table, slots, vq)
+        out["pages_ks"] = _scatter_pages(cache["pages_ks"], table, slots, ks)
+        out["pages_vs"] = _scatter_pages(cache["pages_vs"], table, slots, vs)
+    else:
+        out["pages_k"] = _scatter_pages(cache["pages_k"], table, slots, k)
+        out["pages_v"] = _scatter_pages(cache["pages_v"], table, slots, v)
+    return out
 
 
 def attention_decode(
@@ -316,7 +434,9 @@ def attention_decode(
     b, _ = x_t.shape
     hd = cfg.head_dim
     kv, g = cfg.n_kv_heads, cfg.n_heads // cfg.n_kv_heads
-    cap = cache["k"].shape[1]
+    paged = "table" in cache
+    cap = (cache["table"].shape[1] * cache["pages_k"].shape[1] if paged
+           else cache["k"].shape[1])
 
     q = dense(params["wq"], x_t).reshape(b, cfg.n_heads, hd)
     k_t = dense(params["wk"], x_t).reshape(b, kv, hd)
@@ -327,17 +447,28 @@ def attention_decode(
     qh = q.reshape(b, 1, kv, g, hd)
     lengths = (active.astype(jnp.int32) if active is not None
                else jnp.ones((b,), jnp.int32))
-    y = chunk_attention(
-        qh, k_t[:, None], v_t[:, None], cache["k"], cache.get("k_scale"),
-        cache["v"], cache.get("v_scale"), cache["pos"],
-        pos[:, None].astype(jnp.int32), lengths, window=window,
-        backend=cfg.attn_backend)
+    if paged:
+        y = chunk_attention_paged(
+            qh, k_t[:, None], v_t[:, None], cache["pages_k"],
+            cache.get("pages_ks"), cache["pages_v"], cache.get("pages_vs"),
+            cache["pages_pos"], cache["table"],
+            pos[:, None].astype(jnp.int32), lengths, window=window,
+            backend=cfg.attn_backend)
+    else:
+        y = chunk_attention(
+            qh, k_t[:, None], v_t[:, None], cache["k"], cache.get("k_scale"),
+            cache["v"], cache.get("v_scale"), cache["pos"],
+            pos[:, None].astype(jnp.int32), lengths, window=window,
+            backend=cfg.attn_backend)
     y = y.reshape(b, cfg.n_heads * hd).astype(x_t.dtype)
     y = dense(params["wo"], y)
 
     slot = (pos % cap).astype(jnp.int32)  # (B,)
     if active is not None:
         slot = jnp.where(active, slot, cap)  # cap = out of ring → dropped
+    if paged:
+        return y, _write_pages(cache, slot[:, None], k_t[:, None],
+                               v_t[:, None], pos[:, None])
     upd = lambda bf, s_, v_: bf.at[s_].set(v_, mode="drop")
     pc = jax.vmap(upd)(cache["pos"], slot, pos.astype(jnp.int32))
     new_cache = {"pos": pc}

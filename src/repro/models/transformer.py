@@ -103,7 +103,8 @@ def _block_forward(kind: str, p, cfg, x, positions):
     return x + y
 
 
-def _block_cache_init(kind: str, cfg, batch: int, capacity: int, dtype):
+def _block_cache_init(kind: str, cfg, batch: int, capacity: int, dtype,
+                      kv_spec=None):
     if kind == "rwkv":
         h = cfg.d_model // cfg.rwkv_head_dim
         return {
@@ -118,7 +119,10 @@ def _block_cache_init(kind: str, cfg, batch: int, capacity: int, dtype):
             "h": jnp.zeros((batch, r), jnp.float32),
             "conv": jnp.zeros((batch, cfg.conv_width - 1, r), dtype),
         }
-    return attn.cache_init(cfg, batch, capacity, _mixer_window(kind, cfg), dtype)
+    # recurrent states above are per-row and tiny — kv_spec (the paged KV
+    # layout) applies to the attention ring caches only
+    return attn.cache_init(cfg, batch, capacity, _mixer_window(kind, cfg),
+                           dtype, kv_spec=kv_spec)
 
 
 def _block_prefill(kind: str, p, cfg, x, positions, cache):
@@ -299,11 +303,15 @@ def loss_fn(params, cfg, batch) -> jax.Array:
 # decode state / prefill / decode_step
 # ---------------------------------------------------------------------------
 
-def init_decode_state(cfg, batch: int, capacity: int) -> Dict[str, Any]:
+def init_decode_state(cfg, batch: int, capacity: int, *,
+                      kv_spec=None) -> Dict[str, Any]:
+    """Zeroed decode state. ``kv_spec = {"page_size": ps, "max_pages": n}``
+    selects the paged KV layout for every attention layer (pool leaves
+    ``pages_*`` + per-row ``table``); None keeps the per-row ring."""
     adt = dtype_of(cfg.activation_dtype)
 
     def stack_cache(kind):
-        one = _block_cache_init(kind, cfg, batch, capacity, adt)
+        one = _block_cache_init(kind, cfg, batch, capacity, adt, kv_spec)
         # broadcast (not zeros!) so sentinel values (e.g. pos = -1) survive
         return jax.tree.map(
             lambda a: jnp.broadcast_to(a[None], (cfg.n_periods,) + a.shape)
@@ -311,11 +319,13 @@ def init_decode_state(cfg, batch: int, capacity: int) -> Dict[str, Any]:
 
     return {
         "pos": jnp.zeros((batch,), jnp.int32),
-        "prefix": {f"p{i}": _block_cache_init(kind, cfg, batch, capacity, adt)
+        "prefix": {f"p{i}": _block_cache_init(kind, cfg, batch, capacity,
+                                              adt, kv_spec)
                    for i, kind in enumerate(cfg.prefix_pattern)},
         "blocks": {f"b{pidx}": stack_cache(kind)
                    for pidx, kind in enumerate(cfg.block_pattern)},
-        "suffix": {f"s{i}": _block_cache_init(kind, cfg, batch, capacity, adt)
+        "suffix": {f"s{i}": _block_cache_init(kind, cfg, batch, capacity,
+                                              adt, kv_spec)
                    for i, kind in enumerate(cfg.remainder_pattern)},
     }
 

@@ -124,6 +124,14 @@ class HealthSnapshot:
     sheds: int                    # rejected at submit by admission control
     timeouts: int                 # retired by deadline sweep (counter)
     errors: int                   # retired by fault containment (counter)
+    # ---- page-pool gauges (paged KV engines only; None/0 under the ring
+    # layout so pre-paging snapshots and heartbeats stay comparable)
+    pages_free: Optional[int] = None    # unowned physical pages (gauge)
+    pages_used: Optional[int] = None    # pages with ref > 0 (gauge)
+    pages_shared: Optional[int] = None  # pages with ref > 1, COW-protected
+    prefix_hits: int = 0          # prefix-cache pages reused (counter)
+    prefix_misses: int = 0        # lookups that ended cold (counter)
+    prefix_evictions: int = 0     # cache entries dropped under pressure
 
     def beat(self, monitor: HeartbeatMonitor, step_time_s: float = 0.0):
         """Publish this snapshot through the training-side heartbeat file
@@ -136,8 +144,13 @@ class HealthSnapshot:
     def summary(self) -> str:
         """One log line (what ``launch/serve.py`` prints)."""
         q = ",".join(map(str, self.quarantined_slots)) or "-"
-        return (f"queue={self.queue_depth} resident={self.resident} "
+        line = (f"queue={self.queue_depth} resident={self.resident} "
                 f"free={self.free_slots} quarantined=[{q}] "
                 f"tokens={self.resident_tokens} done={self.completed} "
                 f"cancelled={self.cancelled} shed={self.sheds} "
                 f"timeout={self.timeouts} error={self.errors}")
+        if self.pages_free is not None:
+            line += (f" pages={self.pages_used}u/{self.pages_free}f"
+                     f"/{self.pages_shared}s prefix={self.prefix_hits}h"
+                     f"/{self.prefix_misses}m/{self.prefix_evictions}e")
+        return line

@@ -55,6 +55,46 @@ repeatably; ``ServingEngine(..., injector=None)`` — the production default
 The full frozen ``finish_reason`` set (``api.FINISH_REASONS``):
 ``"stop" | "length" | "cancelled" | "timeout" | "rejected" | "error"``.
 
+Paged KV cache (v1.2)
+---------------------
+``EngineConfig.kv_layout="paged"`` virtualizes every slot's KV ring into
+``page_size``-token physical pages drawn from one pool of ``max_pages``
+pages shared by the whole fleet (default: exactly the ring footprint,
+``max_slots · capacity/page_size``; set lower to overcommit). Semantics:
+
+* **Paged semantics.** A slot's logical ring is unchanged — same
+  capacity, same sliding-window/wrap masking, same int8 quantization —
+  only its storage is indirected through a per-slot page table
+  (``repro.kernels.chunk_attention.chunk_attention_paged``). ``"ring"``
+  remains the default layout and the bit-identity oracle.
+* **COW prefix sharing** (``EngineConfig.prefix_cache``, default on).
+  Fully prompt-filled pages are published under their *exact* prompt-
+  prefix token tuple (never a hash — a collision would splice one
+  request's KV into another). A later request adopts the longest cached
+  run read-only and those tokens skip prefill entirely (lower TTFT); any
+  write to a shared page forks it first, so readers keep bit-identical
+  history. Reuse auto-disables for models with recurrent mixers (their
+  state cannot skip tokens) and for truncated prompts.
+* **Determinism guarantee.** A request's output remains a pure function
+  of (params, prompt, ``SamplingParams``) — bit-identical whether its
+  prefix was shared or recomputed, and identical to the ``"ring"``
+  layout. (The skipped-prefix length is trimmed to a ``prefill_chunk``
+  multiple so warm runs replay the cold run's dispatch sequence.)
+* **Page-budget admission rule.** Admission reserves a request's
+  worst-case page need up front — ``min(ceil((clipped_prompt +
+  max_new_tokens)/page_size), capacity/page_size)`` pages, counting COW
+  fork targets for wrap-bound requests — composing with ``max_queue`` /
+  ``max_resident_tokens``: the queue head waits (strict FIFO) until the
+  pool can cover it, a request whose worst case exceeds the whole pool
+  sheds at submit, and every retirement path (finish, cancel, timeout,
+  error) returns its pages. Under pool pressure, unreferenced prefix-
+  cache pages evict LRU-first.
+
+``engine.health()`` gains page-pool gauges (``pages_free/used/shared``,
+``prefix_hits/misses/evictions``) and ``engine.memory_stats()`` reports
+``kv_resident_bytes`` — bytes of *used* pages, the requests-per-GB number
+— under paging.
+
 Consumption
 -----------
 ``RequestHandle.tokens()`` — a generator yielding each generated token in
@@ -96,6 +136,7 @@ from repro.serving.api import (FINISH_REASONS, RequestHandle, RequestResult,
 from repro.serving.engine import (EngineConfig, EngineFault,
                                   SerialAdmitEngine, ServingEngine)
 from repro.serving.faults import FaultInjector, FaultPlan, VirtualClock
+from repro.serving.paging import PageAllocator
 from repro.serving.sampling import (request_keys, sample_token, sample_tokens,
                                     sample_tokens_per_request,
                                     top_k_top_p_mask)
@@ -104,6 +145,7 @@ __all__ = [
     "SamplingParams", "RequestHandle", "RequestResult", "FINISH_REASONS",
     "ServingEngine", "SerialAdmitEngine", "EngineConfig", "EngineFault",
     "FaultPlan", "FaultInjector", "VirtualClock", "HealthSnapshot",
+    "PageAllocator",
     "sample_token", "sample_tokens", "sample_tokens_per_request",
     "request_keys", "top_k_top_p_mask",
 ]

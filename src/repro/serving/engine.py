@@ -35,6 +35,16 @@ ids (``SamplingParams.stop`` ∪ ``EngineConfig.eos_id``) freeze the row
 on device and truncate the host-side stream at the first hit, wherever in a
 chunk (or in the prefill-finisher sample) it lands.
 
+Paged KV: ``EngineConfig.kv_layout="paged"`` virtualizes every slot's KV
+ring into ``page_size``-token physical pages drawn from one shared,
+refcounted pool (``repro.serving.paging``), with copy-on-write prefix
+sharing keyed by *exact* prompt-prefix token tuples — cache-hit pages are
+adopted read-only and their tokens skip prefill entirely. Admission
+reserves each request's worst-case page budget up front (including COW
+fork targets for wrap-bound requests), so a resident request can never
+run out of pages; the v1.2 contract section in ``repro.serving`` states
+the determinism guarantee.
+
 Works identically for dense and PTQTP-quantized params (`dense` dispatches
 on the kernel leaf type), which is the paper's deployment story.
 """
@@ -61,6 +71,7 @@ from repro.runtime.monitor import HealthSnapshot
 from repro.serving.api import (FINISH_CANCELLED, FINISH_ERROR, FINISH_LENGTH,
                                FINISH_REJECTED, FINISH_STOP, FINISH_TIMEOUT,
                                RequestHandle, SamplingParams, make_handle)
+from repro.serving.paging import PageAllocator
 from repro.serving.sampling import request_keys, sample_tokens_per_request
 
 __all__ = ["EngineConfig", "ServingEngine", "SerialAdmitEngine",
@@ -127,6 +138,17 @@ class EngineConfig:
     # 4x plane bytes (int8 trits vs 2-bit fields, still 2x under fp16) for
     # not re-unpacking every weight at every decode step.
     preunpack_decode: Optional[bool] = None
+    # ---- paged KV cache ("paged" virtualizes every slot's ring into
+    # page_size-token physical pages drawn from one shared pool; "ring" is
+    # the contiguous per-slot layout, kept as the baseline and the
+    # bit-identity oracle)
+    kv_layout: str = "ring"            # "ring" | "paged"
+    page_size: int = 16                # tokens per physical page
+    # pool size in pages (None → max_slots · capacity/page_size: exactly the
+    # ring footprint, so paging alone never reduces admissible load — set it
+    # lower to overcommit against prefix sharing)
+    max_pages: Optional[int] = None
+    prefix_cache: bool = True          # COW prefix reuse across requests
 
     def __post_init__(self):
         assert self.max_slots >= 1 and self.capacity >= 1
@@ -139,6 +161,16 @@ class EngineConfig:
         assert self.max_resident_tokens is None \
             or self.max_resident_tokens >= 1
         assert self.quarantine_steps is None or self.quarantine_steps >= 0
+        assert self.kv_layout in ("ring", "paged"), self.kv_layout
+        if self.kv_layout == "paged":
+            assert self.page_size >= 1
+            assert self.capacity % self.page_size == 0, \
+                (f"capacity {self.capacity} must be a whole number of "
+                 f"pages (page_size {self.page_size})")
+            # max_pages below one slot's worth is allowed: requests whose
+            # worst case can't fit the pool shed at submit; shorter ones
+            # still serve (deliberate overcommit against prefix sharing)
+            assert self.max_pages is None or self.max_pages >= 1
 
 
 def _pow2ceil(n: int) -> int:
@@ -198,23 +230,66 @@ def _merge_slot(batch_state, one_state, slot):
     return _merge_jit(batch_state, one_state, slot)
 
 
-def _reset_rows_impl(state, mask):
+def _reset_rows_impl(state, mask, pos0):
     """Clear the per-row decode state for rows in `mask` (new admissions).
 
     Ring-cache position leaves reset to -1 (nothing valid), everything else
-    (KV, recurrent states, absolute pos) to zero — one fused dispatch no
-    matter how many rows reset, so a burst of admits costs one round-trip.
+    (KV, recurrent states, page tables) to zero, and the absolute position
+    to ``pos0`` (nonzero when a paged admission skips prefix-cached prompt
+    pages — the row resumes mid-prompt) — one fused dispatch no matter how
+    many rows reset, so a burst of admits costs one round-trip.
+
+    Paged pool leaves (``pages_*``) have no batch axis — they are shared
+    physical storage, owned by the host-side :class:`PageAllocator` — so
+    they pass through untouched; the engine's page maintenance op clears
+    freshly allocated pages instead.
     """
 
     def walk(node, path):
         if isinstance(node, dict):
             return {k: walk(v, f"{path}/{k}") for k, v in node.items()}
+        if path.rsplit("/", 1)[-1].startswith("pages_"):
+            return node
         axis = 1 if "/blocks/" in path else 0  # stacked caches: (L, B, ...)
         shape = [1] * node.ndim
         shape[axis] = node.shape[axis]
-        reset = -1 if (path.endswith("/pos") and path != "/pos") else 0
+        if path == "/pos":
+            return jnp.where(mask, pos0.astype(node.dtype), node)
+        reset = -1 if path.endswith("/pos") else 0
         return jnp.where(mask.reshape(shape),
                          jnp.asarray(reset, node.dtype), node)
+
+    return walk(state, "")
+
+
+def _page_maint_impl(state, src, dst, clear, tables):
+    """One fused dispatch for all device-side page bookkeeping of a step:
+    COW copies (``pool[dst] = pool[src]`` on every ``pages_*`` leaf, every
+    layer), invalidation of freshly allocated pages (``pages_pos[clear] =
+    -1`` — a recycled page's stale positions would otherwise satisfy the
+    gather mask), and the authoritative host page-table push. Index args
+    are power-of-two padded with 0 by the caller: page 0 is the reserved
+    null page, so ``copy 0→0`` and ``clear 0`` are identities.
+    """
+
+    def walk(node, path):
+        if isinstance(node, dict):
+            return {k: walk(v, f"{path}/{k}") for k, v in node.items()}
+        name = path.rsplit("/", 1)[-1]
+        if name == "table":
+            t = tables.astype(node.dtype)
+            return jnp.broadcast_to(t[None], node.shape) if node.ndim == 3 \
+                else t
+        if not name.startswith("pages_"):
+            return node
+        axis = 1 if "/blocks/" in path else 0  # stacked pools: (L, P, ...)
+        idx = [slice(None)] * node.ndim
+        idx[axis] = dst
+        node = node.at[tuple(idx)].set(jnp.take(node, src, axis=axis))
+        if name == "pages_pos":
+            idx[axis] = clear
+            node = node.at[tuple(idx)].set(-1)
+        return node
 
     return walk(state, "")
 
@@ -302,8 +377,45 @@ class ServingEngine:
         self.ecfg = engine_cfg
         self.queue: deque[RequestHandle] = deque()
         self.slots: List[Optional[RequestHandle]] = [None] * engine_cfg.max_slots
+        # ---- paged KV layout (see _plan_pages for the admission story)
+        self.paged = engine_cfg.kv_layout == "paged"
+        kv_spec = None
+        if self.paged:
+            ps = engine_cfg.page_size
+            self._per_slot = engine_cfg.capacity // ps
+            total = engine_cfg.max_pages
+            if total is None:
+                total = engine_cfg.max_slots * self._per_slot
+            kinds = (tuple(model_cfg.prefix_pattern)
+                     + tuple(model_cfg.block_pattern)
+                     + tuple(model_cfg.remainder_pattern))
+            # prefix reuse splices cached KV pages under a later request —
+            # sound only when attention is the *only* stateful mixer (a
+            # recurrent rwkv/rglru state summarizes every prior token and
+            # cannot skip the shared prefix), so it auto-disables otherwise
+            attn_only = all(k != "rwkv" and not k.startswith("rglru")
+                            for k in kinds)
+            self._prefix_reuse = engine_cfg.prefix_cache and attn_only
+            self.alloc = PageAllocator(total, ps,
+                                       prefix_cache=self._prefix_reuse)
+            # host-authoritative logical→physical page map per slot; pushed
+            # to the device "table" leaves by _page_maintenance
+            self._tables = np.zeros((engine_cfg.max_slots, self._per_slot),
+                                    np.int32)
+            self._tables_dirty = False
+            self._registered = [0] * engine_cfg.max_slots
+            self._cacheable = [False] * engine_cfg.max_slots
+            # COW fork targets pre-reserved at admission (so a wrap-time
+            # fork can never fail mid-request)
+            self._reserve: List[List[int]] = \
+                [[] for _ in range(engine_cfg.max_slots)]
+            self._maint_jit = None
+            kv_spec = {"page_size": ps, "max_pages": total}
+        else:
+            self.alloc = None
+            self._prefix_reuse = False
         self.state = init_decode_state(model_cfg, engine_cfg.max_slots,
-                                       engine_cfg.capacity)
+                                       engine_cfg.capacity, kv_spec=kv_spec)
         self.last_tokens = np.zeros((engine_cfg.max_slots,), np.int32)
         pre = engine_cfg.preunpack_decode
         if pre is None:
@@ -368,6 +480,13 @@ class ServingEngine:
         never_fits = (self.ecfg.max_resident_tokens is not None
                       and self._committed_tokens(h)
                       > self.ecfg.max_resident_tokens)
+        if self.paged and self._worst_pages(h) > self.alloc.n_pages:
+            # an empty pool could not hold its worst case: shed now rather
+            # than let the queue head wait for pages that can never free
+            h.error = (f"page budget ({self._worst_pages(h)} worst-case "
+                       f"pages > pool of {self.alloc.n_pages})")
+            self._finish(h, FINISH_REJECTED, self._clock())
+            return h
         if not self._admissible(h):
             if self.ecfg.admission_policy == "reject" or never_fits:
                 # never_fits: blocking would spin forever — an empty engine
@@ -415,6 +534,118 @@ class ServingEngine:
         return (f"resident-token cap ({self.resident_tokens()} committed + "
                 f"{self._committed_tokens(h)} requested > "
                 f"{self.ecfg.max_resident_tokens})")
+
+    # -------------------------------------------------- paged KV internals
+    def _worst_pages(self, h: RequestHandle) -> int:
+        """Worst-case physical pages a request can ever hold at once: its
+        committed tokens in pages, clipped to the slot's logical ring (a
+        wrapping request reuses its own pages). This is exactly what
+        admission reserves — shared prefix pages reduce *fresh* demand but
+        wrap-bound requests pre-reserve matching COW fork targets, so the
+        pool draw is this number regardless of cache luck."""
+        ps = self.ecfg.page_size
+        return min(-(-self._committed_tokens(h) // ps), self._per_slot)
+
+    def _plan_pages(self, h: RequestHandle):
+        """Reserve the whole worst-case page budget for ``h`` up front, or
+        return None if the pool can't cover it yet (the queue head then
+        waits — FIFO, nothing jumps it).
+
+        Returns (prompt, shared, fresh, reserve, cacheable):
+          shared   — prefix-cache pages adopted read-only (logical pages
+                     0..len(shared)-1; their tokens skip prefill entirely);
+          fresh    — private pages for the rest of the logical ring;
+          reserve  — unmapped COW fork targets, one per shared page, taken
+                     only when generation will wrap the ring (every shared
+                     page is then eventually overwritten and must fork —
+                     reserving at admission makes the fork infallible);
+          cacheable — whether this row's own prompt pages may be published
+                     (truncated prompts never: their page keys would claim
+                     tokens the row didn't see; wrap-bound rows never:
+                     their prompt pages get overwritten by generation).
+
+        The skipped-prefix length is trimmed to a multiple of
+        ``prefill_chunk`` so a warm run replays the cold run's exact
+        prefill dispatch sequence from the skip point — chunk boundaries,
+        and therefore logits, stay deterministic under cache hits.
+        """
+        ps, cap = self.ecfg.page_size, self.ecfg.capacity
+        prompt = list(h.prompt[-cap:])
+        plen = len(prompt)
+        will_wrap = plen + h.params.max_new_tokens > cap
+        n_req = self._worst_pages(h)
+        shared: List[int] = []
+        n_keys = 0
+        if self._prefix_reuse and not h.truncated:
+            # page j is lookup-able iff fully prompt-filled; at least one
+            # token always prefills (the finisher samples from the last
+            # prompt position's logits)
+            n_keys = (plen - 1) // ps
+            shared = self.alloc.cache_lookup(
+                [tuple(prompt[:(j + 1) * ps]) for j in range(n_keys)])
+            chunk = self.ecfg.prefill_chunk
+            while shared and (len(shared) * ps) % chunk:
+                self.alloc.release(shared.pop())  # determinism trim
+        need = n_req - len(shared) + (len(shared) if will_wrap else 0)
+        if self.alloc.available() < need:
+            for pid in shared:
+                self.alloc.release(pid)
+            return None
+        fresh = self.alloc.alloc(need)
+        reserve = fresh[n_req - len(shared):]
+        fresh = fresh[:n_req - len(shared)]
+        self.alloc.hits += len(shared)
+        self.alloc.misses += 1 if n_keys > len(shared) else 0
+        cacheable = (self._prefix_reuse and not h.truncated
+                     and not will_wrap)
+        return prompt, shared, fresh, reserve, cacheable
+
+    def _page_maintenance(self, copies=(), clear=()):
+        """Apply COW copies + fresh-page invalidation on device and push
+        the host page tables (one fused jitted dispatch; index operands are
+        power-of-two padded with the null page so compile count stays
+        O(log pool))."""
+        def pad(ids):
+            out = list(ids)
+            out += [0] * (_pow2ceil(max(len(out), 1)) - len(out))
+            return jnp.asarray(out, jnp.int32)
+
+        if self._maint_jit is None:
+            donate = (0,) if jax.default_backend() != "cpu" else ()
+            self._maint_jit = jax.jit(_page_maint_impl,
+                                      donate_argnums=donate)
+        self.state = self._maint_jit(
+            self.state, pad([s for s, _ in copies]),
+            pad([d for _, d in copies]), pad(clear),
+            jnp.asarray(self._tables))
+        self._tables_dirty = False
+
+    def _fork_writes(self, spans):
+        """Copy-on-write, before the dispatch that writes: for each
+        upcoming write span (slot, first position, token count), any
+        touched logical page whose physical page is shared (ref > 1 — held
+        by the prefix cache and/or another slot) forks to this row's
+        pre-reserved target; readers keep the original bit-for-bit.
+        Spans are worst case (a row may freeze mid-chunk): a wasted fork
+        costs one page copy, never correctness."""
+        ps = self.ecfg.page_size
+        copies = []
+        for slot, start, n in spans:
+            if n <= 0:
+                continue
+            for p in range(start // ps, (start + n - 1) // ps + 1):
+                j = p % self._per_slot
+                pid = int(self._tables[slot, j])
+                if pid == 0 or self.alloc.ref[pid] <= 1:
+                    continue
+                new = self._reserve[slot].pop()
+                self._tables[slot, j] = new
+                self._tables_dirty = True
+                copies.append((pid, new))
+                self.alloc.release(pid)
+                self.alloc.forks += 1
+        if copies:
+            self._page_maintenance(copies=copies)
 
     def cancel(self, handle: RequestHandle) -> bool:
         """Cancel a request (``RequestHandle.cancel`` delegates here).
@@ -546,7 +777,7 @@ class ServingEngine:
         param_bytes = sum(int(x.nbytes)
                           for x in jax.tree.leaves(self._serve_params))
         state_bytes = sum(int(x.nbytes) for x in jax.tree.leaves(self.state))
-        return {
+        out = {
             "preunpack_decode": self.preunpack_decode,
             "packed_plane_bytes": packed,
             "resident_plane_bytes": resident,
@@ -554,7 +785,45 @@ class ServingEngine:
             "param_bytes": param_bytes,
             "decode_state_bytes": state_bytes,
             "resident_total_bytes": param_bytes + state_bytes,
+            "kv_layout": self.ecfg.kv_layout,
         }
+        out.update(self._kv_bytes())
+        return out
+
+    def _kv_bytes(self) -> Dict[str, Any]:
+        """KV-cache byte accounting by leaf name. Under the ring layout the
+        whole allocation is resident per slot; under paging only *used*
+        pages hold live KV — ``kv_resident_bytes`` is what a request
+        actually costs, the number the paged-KV bench turns into
+        requests/GB."""
+        pool_bytes = table_bytes = kv_bytes = 0
+        n_phys = 1
+
+        def walk(node, path):
+            nonlocal pool_bytes, table_bytes, kv_bytes, n_phys
+            if isinstance(node, dict):
+                for k, v in node.items():
+                    walk(v, f"{path}/{k}")
+                return
+            name = path.rsplit("/", 1)[-1]
+            if name.startswith("pages_"):
+                pool_bytes += int(node.nbytes)
+                n_phys = node.shape[1 if "/blocks/" in path else 0]
+            elif name == "table":
+                table_bytes += int(node.nbytes)
+            elif name in ("k", "v", "k_scale", "v_scale") \
+                    or (name == "pos" and path != "/pos"):
+                kv_bytes += int(node.nbytes)
+
+        walk(self.state, "")
+        if not self.paged:
+            return {"kv_pool_bytes": kv_bytes, "kv_resident_bytes": kv_bytes}
+        per_page = pool_bytes // n_phys  # one physical page, all layers
+        return {"kv_pool_bytes": pool_bytes + table_bytes,
+                "kv_page_bytes": per_page,
+                # used pages + the always-resident null page + the tables
+                "kv_resident_bytes":
+                    per_page * (self.alloc.used_pages() + 1) + table_bytes}
 
     # ----------------------------------------------------------------- step
     def step(self) -> List[RequestHandle]:
@@ -585,6 +854,15 @@ class ServingEngine:
         if any(self._prefilling(i) for i in range(len(self.slots))):
             chunk = min(chunk, self.ecfg.decode_chunk_prefilling)
         n_steps = min(chunk, _pow2ceil(remaining))
+        if self.paged:
+            # decode writes positions pos..pos+n_steps-1 (worst case); a
+            # wrapping row is about to overwrite its oldest pages, which
+            # may be cache-shared prefix — fork them first (COW)
+            self._fork_writes(
+                [(i, len(self._prompts[i]) + len(self.slots[i].output) - 1,
+                  n_steps) for i in dec])
+            if self._tables_dirty:
+                self._page_maintenance()
         (temps, active, seeds, top_k, top_p, stops), use_mask, stop_w = \
             self._fleet_arrays()
         # tokens generated so far per row: the on-device draw for a row's
@@ -729,6 +1007,14 @@ class ServingEngine:
         """Current engine health (see :class:`repro.runtime.monitor.
         HealthSnapshot`); cheap — reads host-side bookkeeping only."""
         resident = sum(1 for s in self.slots if s is not None)
+        pages = {}
+        if self.paged:
+            pages = dict(pages_free=self.alloc.free_pages,
+                         pages_used=self.alloc.used_pages(),
+                         pages_shared=self.alloc.shared_pages(),
+                         prefix_hits=self.alloc.hits,
+                         prefix_misses=self.alloc.misses,
+                         prefix_evictions=self.alloc.evictions)
         return HealthSnapshot(
             t=self._clock(), steps=self.steps,
             queue_depth=len(self.queue), resident=resident,
@@ -736,7 +1022,8 @@ class ServingEngine:
             quarantined_slots=tuple(sorted(self.quarantined)),
             resident_tokens=self.resident_tokens(),
             completed=self.completed, cancelled=self.cancelled,
-            sheds=self.sheds, timeouts=self.timeouts, errors=self.errors)
+            sheds=self.sheds, timeouts=self.timeouts, errors=self.errors,
+            **pages)
 
     # ------------------------------------------------------------- internals
     def _prefilling(self, slot: int) -> bool:
@@ -748,6 +1035,24 @@ class ServingEngine:
                 and self._cursor[slot] >= len(self._prompts[slot]))
 
     def _free_slot(self, slot: int):
+        if self.paged and self.slots[slot] is not None:
+            # retirement — every retirement path (finish, cancel, timeout,
+            # error containment) funnels through here, so pages always
+            # return: table refs drop (cache-held pages survive at ref 1,
+            # evictable; private pages free instantly), unused COW
+            # reserves free, and the device table row goes stale-but-
+            # harmless (lengths-0/inactive rows are fully masked) until
+            # the next maintenance push
+            for pid in self._tables[slot]:
+                if pid:
+                    self.alloc.release(int(pid))
+            for pid in self._reserve[slot]:
+                self.alloc.release(pid)
+            self._reserve[slot] = []
+            self._tables[slot, :] = 0
+            self._registered[slot] = 0
+            self._cacheable[slot] = False
+            self._tables_dirty = True
         self.slots[slot] = None
         self._prompts[slot] = None
         self._cursor[slot] = 0
@@ -831,30 +1136,60 @@ class ServingEngine:
             self._prefill_cache[length] = jax.jit(impl, donate_argnums=donate)
         return self._prefill_cache[length]
 
-    def _reset_rows(self, mask: np.ndarray):
+    def _reset_rows(self, mask: np.ndarray, pos0=None):
         if self._reset_jit is None:
             donate = (0,) if jax.default_backend() != "cpu" else ()
             self._reset_jit = jax.jit(_reset_rows_impl, donate_argnums=donate)
-        self.state = self._reset_jit(self.state, jnp.asarray(mask))
+        if pos0 is None:
+            pos0 = np.zeros((len(self.slots),), np.int32)
+        self.state = self._reset_jit(self.state, jnp.asarray(mask),
+                                     jnp.asarray(pos0))
 
     def _admit(self):
         """Drain the wait queue into *all* free, non-quarantined slots in
-        one go."""
-        fresh = []
+        one go. Under the paged layout a slot admits only when the queue
+        head's worst-case page budget is reservable right now; otherwise
+        the head waits (strict FIFO — a shorter request behind it never
+        jumps the line) until retirements return pages to the pool."""
+        fresh_rows = []
+        pos0 = np.zeros((len(self.slots),), np.int32)
+        clear: List[int] = []
         for slot in range(len(self.slots)):
             if self.slots[slot] is not None or not self.queue \
                     or slot in self.quarantined:
                 continue
-            h = self.queue.popleft()
-            self.slots[slot] = h
-            self._prompts[slot] = list(h.prompt[-self.ecfg.capacity:])
-            self._cursor[slot] = 0
-            fresh.append(slot)
+            if self.paged:
+                plan = self._plan_pages(self.queue[0])
+                if plan is None:
+                    break  # head waits for pages; FIFO holds
+                prompt, shared, fresh, reserve, cacheable = plan
+                h = self.queue.popleft()
+                self.slots[slot] = h
+                self._prompts[slot] = prompt
+                skip = len(shared) * self.ecfg.page_size
+                self._cursor[slot] = skip   # cache-hit tokens never prefill
+                pos0[slot] = skip
+                ids = shared + fresh
+                self._tables[slot, :] = 0
+                self._tables[slot, :len(ids)] = ids
+                self._tables_dirty = True
+                self._registered[slot] = len(shared)
+                self._cacheable[slot] = cacheable
+                self._reserve[slot] = reserve
+                clear.extend(fresh)
+            else:
+                h = self.queue.popleft()
+                self.slots[slot] = h
+                self._prompts[slot] = list(h.prompt[-self.ecfg.capacity:])
+                self._cursor[slot] = 0
+            fresh_rows.append(slot)
             self.admits += 1
-        if fresh:
+        if fresh_rows:
             mask = np.zeros((len(self.slots),), bool)
-            mask[fresh] = True
-            self._reset_rows(mask)
+            mask[fresh_rows] = True
+            self._reset_rows(mask, pos0)
+            if self.paged:
+                self._page_maintenance(clear=clear)
             self._slot_arrays = None
 
     def _sample_first(self, logits, rows: List[int]) -> np.ndarray:
@@ -907,6 +1242,15 @@ class ServingEngine:
             tokens[i, :take] = self._prompts[i][
                 self._cursor[i]:self._cursor[i] + take]
             lengths[i] = take
+        if self.paged:
+            # prefill only ever writes this row's private unregistered
+            # pages (skip starts past the shared prefix and registration
+            # trails the cursor), so these are no-ops — kept as the single
+            # COW choke point guarding *every* write dispatch
+            self._fork_writes([(i, self._cursor[i], int(lengths[i]))
+                               for i in pf])
+            if self._tables_dirty:
+                self._page_maintenance()
         try:
             self._guard_dispatch("prefill", pf)
             logits, self.state = self._prefill_fn(length)(
@@ -932,6 +1276,11 @@ class ServingEngine:
         # non-finite logits are contained *before* sampling: the offending
         # row retires with "error", finite rows sample from untouched logits
         row_ok = np.asarray(jnp.all(jnp.isfinite(logits), axis=-1))
+        if self.paged:
+            # registration rides the finisher sync that happens anyway — a
+            # per-chunk publish would cost a blocking device round-trip on
+            # every prefill step
+            self._register_pages(finishers, row_ok)
         now = self._clock()
         finished: List[RequestHandle] = []
         bad_rows = [i for i in finishers if not row_ok[i]]
@@ -966,6 +1315,27 @@ class ServingEngine:
             finished.append(h)
             self._free_slot(i)
         return finished
+
+    def _register_pages(self, finishers: List[int], row_ok):
+        """Publish a finished prompt's fully-filled pages to the prefix
+        cache, at prefill completion (the step that already syncs logits
+        for the first token — containment granularity, PR 6). A row whose
+        completion logits are non-finite never publishes — its KV pages
+        can't be trusted and must never splice into other requests.
+        """
+        ps = self.ecfg.page_size
+        for i in finishers:
+            if not self._cacheable[i]:
+                continue
+            if not row_ok[i]:
+                self._cacheable[i] = False
+                continue
+            prompt = self._prompts[i]
+            upto = min(self._cursor[i], len(prompt)) // ps
+            for j in range(self._registered[i], upto):
+                self.alloc.cache_insert(tuple(prompt[:(j + 1) * ps]),
+                                        int(self._tables[i, j]))
+            self._registered[i] = upto
 
     def _collect(self, toks: np.ndarray,
                  bad: Optional[np.ndarray] = None) -> List[RequestHandle]:
@@ -1021,6 +1391,16 @@ class SerialAdmitEngine(ServingEngine):
     identical to `ServingEngine`, so a request's output is bit-identical
     across the two schedulers.
     """
+
+    def __init__(self, params, model_cfg, engine_cfg: EngineConfig, *,
+                 injector=None):
+        if engine_cfg.kv_layout != "ring":
+            raise ValueError(
+                "SerialAdmitEngine prefills through prefill() into a "
+                "private ring state and merges it by slot — the paged "
+                "layout is a bucketed-scheduler feature; use "
+                "kv_layout='ring' here")
+        super().__init__(params, model_cfg, engine_cfg, injector=injector)
 
     def _warm_prefill(self):
         # Best effort only: compiles the power-of-two prompt lengths, but

@@ -1,0 +1,393 @@
+"""Paged int8 KV cache: page-gather attention bit-identity, the refcounted
+page allocator, and engine-level COW prefix reuse.
+
+Three layers of guarantee:
+
+  * **kernel** — ``chunk_attention_paged`` on every backend is
+    *bit-identical* to its contiguous-ring counterpart under random page
+    permutations (with matching tile the logical tile walk is the same
+    float program; ``materialized`` is gather-then-oracle by
+    construction), across ring wrap, sliding windows, GQA, decode L = 1,
+    length-0 rows, and the all-null-page table;
+  * **allocator** — refcounts partition the pool, COW forks preserve the
+    original, LRU eviction only ever takes cache-only pages, failed
+    allocation rolls back;
+  * **engine** — a 90%-shared-prefix fleet produces outputs identical to
+    cold-start and to the ring layout; every retirement path (finish,
+    cancel, timeout, error containment — the fault-harness paths) returns
+    its pages to the pool; admission waits for pages FIFO and sheds
+    never-fits requests at submit.
+"""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import configs
+from repro.kernels.chunk_attention import (chunk_attention,
+                                           chunk_attention_paged,
+                                           gather_pages, paged_tile)
+from repro.kernels.chunk_attention.ref import chunk_attention_ref
+from repro.models import init_params
+from repro.serving import (EngineConfig, FaultInjector, FaultPlan,
+                           PageAllocator, SamplingParams, SerialAdmitEngine,
+                           ServingEngine, VirtualClock)
+from tests.test_chunk_attention_kernel import make_case
+
+BACKENDS = ("materialized", "stream", "pallas")
+
+
+def paginate(rng, ring_args, page_size):
+    """Scatter a contiguous-ring case into randomly permuted physical
+    pages: per-row page p of the ring lands at a random distinct physical
+    id >= 1; physical page 0 is the reserved null page (pos = -1)."""
+    (q, kn, vn, kc, ks, vc, vs, pb, positions, lengths) = ring_args
+    b, cap = pb.shape
+    ps = page_size
+    assert cap % ps == 0
+    n = cap // ps
+    P = b * n + 1
+    perm = rng.permutation(np.arange(1, P))
+    table = perm.reshape(b, n)
+
+    def pool_of(ring, fill=0):
+        if ring is None:
+            return None
+        pool = np.full((P, ps) + ring.shape[2:], fill, np.asarray(ring).dtype)
+        src = np.asarray(ring).reshape((b, n, ps) + ring.shape[2:])
+        pool[table.reshape(-1)] = src.reshape((b * n, ps) + ring.shape[2:])
+        return jnp.asarray(pool)
+
+    pos_pool = np.full((P, ps), -1, np.int32)
+    pos_pool[table.reshape(-1)] = np.asarray(pb).reshape(b * n, ps)
+    return (q, kn, vn, pool_of(kc), pool_of(ks), pool_of(vc), pool_of(vs),
+            jnp.asarray(pos_pool), jnp.asarray(table, jnp.int32),
+            positions, lengths)
+
+
+PAGED_CASES = [
+    # (b, L, kv, g, hd, cap, ps, window, int8, wrap)
+    pytest.param(2, 8, 2, 2, 16, 32, 8, None, True, False, id="gqa-full"),
+    pytest.param(2, 8, 1, 4, 16, 32, 8, None, True, True, id="gqa-wrap"),
+    pytest.param(2, 8, 4, 1, 16, 32, 16, 8, True, True, id="window-wrap"),
+    pytest.param(2, 6, 1, 3, 8, 24, 8, 5, True, True, id="ps8-cap24"),
+    pytest.param(3, 1, 2, 2, 8, 16, 4, None, True, True, id="decode-L1"),
+    pytest.param(3, 1, 2, 2, 8, 16, 8, 8, True, True, id="decode-window"),
+    pytest.param(2, 4, 2, 2, 8, 16, 4, None, False, False, id="float-cache"),
+]
+
+
+class TestPageGatherBitIdentity:
+    @pytest.mark.parametrize("backend", BACKENDS)
+    @pytest.mark.parametrize("b,L,kv,g,hd,cap,ps,window,int8,wrap",
+                             PAGED_CASES)
+    def test_paged_equals_ring_bitwise(self, backend, b, L, kv, g, hd, cap,
+                                       ps, window, int8, wrap):
+        """Random page permutation, matching tile → the paged op walks the
+        identical logical tile sequence as the contiguous op: outputs must
+        be equal to the last bit, per backend."""
+        rng = np.random.default_rng(hash((b, L, cap, ps, int8)) % 2**31)
+        ring = make_case(rng, b, L, kv, g, hd, cap, int8=int8, wrap=wrap)
+        paged = paginate(rng, ring, ps)
+        want = np.asarray(chunk_attention(*ring, window=window,
+                                          backend=backend, tile=ps))
+        got = np.asarray(chunk_attention_paged(*paged, window=window,
+                                               backend=backend, tile=ps))
+        np.testing.assert_array_equal(got, want, err_msg=backend)
+
+    def test_materialized_is_gather_then_oracle(self):
+        """The paged materialized path is literally gather_pages + the
+        contiguous oracle — pin that construction."""
+        rng = np.random.default_rng(11)
+        ring = make_case(rng, 2, 8, 2, 2, 8, 32, int8=True, wrap=True)
+        paged = paginate(rng, ring, 8)
+        (q, kn, vn, kp, ksp, vp, vsp, posp, table, positions, lengths) = paged
+        want = chunk_attention_ref(
+            q, kn, vn, gather_pages(kp, table), gather_pages(ksp, table),
+            gather_pages(vp, table), gather_pages(vsp, table),
+            gather_pages(posp, table), positions, lengths, window=None)
+        got = chunk_attention_paged(*paged, backend="materialized")
+        np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+        # and the gathered ring reconstructs the original exactly
+        np.testing.assert_array_equal(np.asarray(gather_pages(posp, table)),
+                                      np.asarray(ring[7]))
+
+    @pytest.mark.parametrize("backend", BACKENDS)
+    def test_null_page_table_is_safe(self, backend):
+        """An all-zero table (nothing mapped — warmup, freed rows) gathers
+        only the null page: everything masked, output finite."""
+        rng = np.random.default_rng(3)
+        ring = make_case(rng, 2, 4, 2, 2, 8, 16,
+                         lengths=np.zeros((2,), np.int64))
+        paged = paginate(rng, ring, 4)
+        paged = paged[:8] + (jnp.zeros_like(paged[8]),) + paged[9:]
+        out = np.asarray(chunk_attention_paged(*paged, backend=backend))
+        assert np.isfinite(out).all(), backend
+
+    def test_paged_tile_divides_page(self):
+        for ps in (4, 8, 16, 128, 4096):
+            for L in (1, 8, 64, 512):
+                t = paged_tile(ps, L)
+                assert ps % t == 0 and t >= 1
+        assert paged_tile(16, 8) == 16     # whole page per tile
+        assert paged_tile(4096, 64) < 4096  # budget-bound splits the page
+
+
+class TestPageAllocator:
+    def test_alloc_release_partitions_pool(self):
+        a = PageAllocator(8, 16)
+        got = a.alloc(5)
+        assert len(set(got)) == 5 and 0 not in got
+        assert a.used_pages() == 5 and a.free_pages == 3
+        a.check()
+        for pid in got:
+            a.release(pid)
+        assert a.used_pages() == 0 and a.free_pages == 8
+        a.check()
+
+    def test_alloc_rolls_back_on_failure(self):
+        a = PageAllocator(4, 16)
+        held = a.alloc(3)
+        with pytest.raises(MemoryError):
+            a.alloc(2)
+        assert a.free_pages == 1  # the partial grab was returned
+        a.check()
+        assert held == a.alloc(0) + held  # held pages untouched
+
+    def test_refcounts_and_fork(self):
+        a = PageAllocator(4, 16)
+        (pid,) = a.alloc(1)
+        a.retain(pid)
+        assert a.shared_pages() == 1
+        new = a.fork(pid)
+        assert new != pid and a.forks == 1
+        assert a.ref[pid] == 1 and a.ref[new] == 1  # fork dropped one ref
+        with pytest.raises(RuntimeError):
+            a.fork(pid)  # unshared pages must not fork
+        a.release(pid)
+        with pytest.raises(RuntimeError):
+            a.release(pid)  # double free
+
+    def test_cache_eviction_is_lru_and_ref_safe(self):
+        a = PageAllocator(3, 16)
+        p = a.alloc(3)
+        for i, pid in enumerate(p):
+            a.cache_insert((i,), pid)
+            a.release(pid)  # cache holds the only ref now
+        assert a.available() == 3 and a.free_pages == 0
+        a.cache_lookup([(0,)])  # touch LRU; also retains for "a request"
+        got = a.alloc(1)  # must evict (1,), the LRU *unreferenced* entry
+        assert a.evictions == 1 and got[0] == p[1]
+        assert a.cache_lookup([(1,)]) == []  # gone
+        assert a.cache_lookup([(2,)]) == [p[2]]  # survivors intact
+        a.check()
+
+    def test_disabled_cache_never_serves(self):
+        a = PageAllocator(2, 16, prefix_cache=False)
+        (pid,) = a.alloc(1)
+        a.cache_insert((1, 2), pid)
+        assert a.cache_lookup([(1, 2)]) == [] and a.cached_pages() == 0
+
+
+@pytest.fixture(scope="module")
+def paged_model():
+    cfg = dataclasses.replace(configs.get_smoke_config("qwen2-1.5b"),
+                              kv_cache_dtype="int8")
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    return cfg, params
+
+
+def paged_cfg(**kw):
+    base = dict(max_slots=4, capacity=128, prefill_chunk=32, decode_chunk=8,
+                kv_layout="paged", page_size=16)
+    base.update(kw)
+    return EngineConfig(**base)
+
+
+def shared_fleet(n=6, seed=7, vocab=500):
+    rng = np.random.default_rng(seed)
+    prefix = rng.integers(1, vocab, size=96).tolist()  # 90% of the prompt
+    return [prefix + rng.integers(1, vocab, size=8).tolist()
+            for _ in range(n)]
+
+
+class TestEnginePrefixReuse:
+    def test_shared_prefix_fleet_matches_cold_and_ring(self, paged_model):
+        """The tentpole guarantee: outputs are identical whether a prefix
+        was shared (paged + cache), recomputed (paged, cache off), or
+        served from the contiguous ring — and the cache actually hit."""
+        cfg, params = paged_model
+        prompts = shared_fleet()
+
+        def run(**kw):
+            eng = ServingEngine(params, cfg, paged_cfg(**kw))
+            hs = [eng.submit(p, SamplingParams(max_new_tokens=10,
+                                               temperature=0.8, seed=i))
+                  for i, p in enumerate(prompts)]
+            eng.run()
+            return eng, [h.output for h in hs]
+
+        ring_eng, ring_out = run(kv_layout="ring")
+        warm_eng, warm_out = run()
+        cold_eng, cold_out = run(prefix_cache=False)
+        assert warm_out == cold_out == ring_out
+        assert warm_eng.alloc.hits > 0
+        assert cold_eng.alloc.hits == 0
+        # cache reuse showed up as skipped prefill work
+        assert warm_eng.prefill_steps < cold_eng.prefill_steps
+
+    def test_pages_return_to_baseline_after_drain(self, paged_model):
+        cfg, params = paged_model
+        eng = ServingEngine(params, cfg, paged_cfg())
+        for i, p in enumerate(shared_fleet(4)):
+            eng.submit(p, SamplingParams(max_new_tokens=6, seed=i))
+        eng.run()
+        eng.alloc.check()
+        # only prefix-cache holds survive; nothing leaks
+        assert eng.alloc.used_pages() == eng.alloc.cached_pages()
+        assert eng.alloc.shared_pages() == 0
+        snap = eng.health()
+        assert snap.pages_used == eng.alloc.used_pages()
+        assert snap.pages_free == eng.alloc.free_pages
+        assert snap.prefix_hits == eng.alloc.hits
+
+    def test_cow_fork_on_wrap_keeps_cache_pristine(self, paged_model):
+        """Generation that wraps the ring overwrites the request's oldest
+        pages — shared prefix pages must fork (COW), and a later request
+        must still see the untouched prefix."""
+        cfg, params = paged_model
+        ecfg = paged_cfg(max_slots=2)
+        eng = ServingEngine(params, cfg, ecfg)
+        prompt = shared_fleet(1)[0]
+        eng.submit(prompt, SamplingParams(max_new_tokens=4, seed=0))
+        eng.run()  # registers the prefix
+        assert eng.alloc.forks == 0
+        eng.submit(prompt, SamplingParams(max_new_tokens=40, seed=1))
+        eng.run()  # 104 + 40 > 128: wraps, must fork shared pages
+        assert eng.alloc.forks > 0
+        eng.alloc.check()
+        # third request reuses the (pristine) cached prefix; a cache-off
+        # engine recomputes it — identical outputs prove no corruption
+        warm = eng.submit(prompt, SamplingParams(max_new_tokens=8, seed=5))
+        eng.run()
+        cold_eng = ServingEngine(params, cfg,
+                                 dataclasses.replace(ecfg,
+                                                     prefix_cache=False))
+        cold = cold_eng.submit(prompt, SamplingParams(max_new_tokens=8,
+                                                      seed=5))
+        cold_eng.run()
+        assert warm.output == cold.output
+
+    def test_prefix_reuse_disabled_for_recurrent_models(self, paged_model):
+        """A recurrent mixer can't skip tokens: prefix_cache auto-disables
+        (the engine still pages) instead of serving wrong state."""
+        cfg, params = paged_model
+        rec = dataclasses.replace(cfg, prefix_pattern=("rwkv",))
+        try:
+            eng = ServingEngine(params, rec, paged_cfg())
+        except Exception:
+            pytest.skip("recurrent smoke state not buildable here")
+        assert not eng._prefix_reuse
+        assert not eng.alloc.prefix_cache_enabled
+
+
+class TestEnginePageLifecycle:
+    def _baseline(self, eng):
+        return eng.alloc.used_pages() - eng.alloc.cached_pages()
+
+    def test_cancel_releases_pages(self, paged_model):
+        cfg, params = paged_model
+        eng = ServingEngine(params, cfg, paged_cfg(max_slots=2))
+        h = eng.submit(shared_fleet(1)[0],
+                       SamplingParams(max_new_tokens=30, seed=0))
+        eng.step()
+        assert self._baseline(eng) > 0  # resident and holding pages
+        assert h.cancel()
+        assert self._baseline(eng) == 0
+        eng.alloc.check()
+
+    def test_timeout_releases_pages(self, paged_model):
+        cfg, params = paged_model
+        clock = VirtualClock()
+        eng = ServingEngine(params, cfg, paged_cfg(max_slots=2),
+                            injector=FaultInjector(FaultPlan(), clock=clock))
+        h = eng.submit(shared_fleet(1)[0],
+                       SamplingParams(max_new_tokens=64, deadline_s=5.0))
+        eng.step()
+        assert self._baseline(eng) > 0
+        clock.advance(6.0)
+        eng.step()
+        assert h.finish_reason == "timeout"
+        assert self._baseline(eng) == 0
+        eng.alloc.check()
+
+    def test_error_containment_releases_pages(self, paged_model):
+        """A dispatch fault retires the request through _contain — its
+        pages must come back even though the slot is quarantined."""
+        cfg, params = paged_model
+        plan = FaultPlan().dispatch_error("decode", 0)
+        eng = ServingEngine(params, cfg, paged_cfg(max_slots=2),
+                            injector=FaultInjector(plan,
+                                                   clock=VirtualClock()))
+        h = eng.submit([1, 2, 3, 4], SamplingParams(max_new_tokens=8))
+        eng.run()
+        assert h.finish_reason == "error"
+        assert self._baseline(eng) == 0
+        assert eng.quarantined or eng.errors == 1
+        eng.alloc.check()
+
+    def test_admission_waits_for_pages_fifo(self, paged_model):
+        """With a pool sized for one resident request, the second queues
+        until the first retires — and admits as soon as pages free."""
+        cfg, params = paged_model
+        # 64-token capacity, 4-page pool: each request's worst case is
+        # ceil((32+32)/16) = 4 pages → exactly one resident at a time
+        eng = ServingEngine(params, cfg, paged_cfg(
+            max_slots=2, capacity=64, page_size=16, max_pages=4,
+            prefix_cache=False))
+        a = eng.submit(list(range(1, 33)), SamplingParams(max_new_tokens=32))
+        b = eng.submit(list(range(2, 34)), SamplingParams(max_new_tokens=32))
+        eng.step()
+        assert eng.slots.count(None) == 1  # b is page-blocked, not admitted
+        assert eng.queue and eng.queue[0] is b
+        eng.run()
+        assert a.finish_reason == "length" and b.finish_reason == "length"
+        assert len(a.output) == 32 and len(b.output) == 32
+        eng.alloc.check()
+
+    def test_never_fits_sheds_at_submit(self, paged_model):
+        cfg, params = paged_model
+        eng = ServingEngine(params, cfg, paged_cfg(
+            max_slots=2, capacity=64, page_size=16, max_pages=2))
+        h = eng.submit(list(range(1, 40)), SamplingParams(max_new_tokens=32))
+        assert h.finish_reason == "rejected" and "page budget" in h.error
+        assert eng.sheds == 1
+        ok = eng.submit([1, 2, 3], SamplingParams(max_new_tokens=2))
+        eng.run()
+        assert ok.finish_reason == "length"  # small requests still serve
+
+    def test_memory_stats_reports_paged_kv(self, paged_model):
+        cfg, params = paged_model
+        eng = ServingEngine(params, cfg, paged_cfg())
+        ms = eng.memory_stats()
+        assert ms["kv_layout"] == "paged"
+        empty = ms["kv_resident_bytes"]
+        h = eng.submit(shared_fleet(1)[0],
+                       SamplingParams(max_new_tokens=20, seed=0))
+        eng.step()
+        grown = eng.memory_stats()["kv_resident_bytes"]
+        assert grown > empty  # used pages cost bytes
+        assert grown <= ms["kv_pool_bytes"]
+        h.cancel()
+        ring = ServingEngine(params, cfg, paged_cfg(kv_layout="ring"))
+        rms = ring.memory_stats()
+        assert rms["kv_layout"] == "ring"
+        assert rms["kv_resident_bytes"] == rms["kv_pool_bytes"]
+
+    def test_serial_engine_rejects_paged(self, paged_model):
+        cfg, params = paged_model
+        with pytest.raises(ValueError, match="ring"):
+            SerialAdmitEngine(params, cfg, paged_cfg())
