@@ -25,14 +25,26 @@ itself is checked before boot:
 
 from __future__ import annotations
 
+import contextlib
 import json
 from pathlib import Path
-from typing import Any, Dict, Tuple, Union
+from typing import Any, Dict, Optional, Tuple, Union
 
 import numpy as np
 
 from repro.artifacts import format as afmt
 from repro.artifacts.format import MANIFEST_NAME, ArtifactError
+
+
+def _boot_span(obs, name: str, **args):
+    """A boot-phase span on the observability bundle's "boot" track, or a
+    no-op when the caller didn't pass one (the reader stays importable and
+    usable without the serving stack)."""
+    if obs is None:
+        return contextlib.nullcontext()
+    from repro.serving.observability import TRACK_BOOT
+
+    return obs.span(name, track=TRACK_BOOT, cat="boot", args=args or None)
 
 
 def read_manifest(artifact_dir: str | Path) -> Dict[str, Any]:
@@ -103,7 +115,8 @@ def check_shard_sizes(artifact_dir: str | Path,
 
 
 def load_artifact(artifact_dir: str | Path, *,
-                  verify: Union[bool, str] = False
+                  verify: Union[bool, str] = False,
+                  obs: Optional[Any] = None
                   ) -> Tuple[Dict[str, Any], Dict[str, Any]]:
     """-> (params_tree, manifest) with memmap-backed leaves.
 
@@ -111,45 +124,57 @@ def load_artifact(artifact_dir: str | Path, *,
     the manifest), ``"sizes"`` (stat-only shard-length check, no tensor
     reads), or ``"full"``/``True`` (sizes plus an eager crc32 re-checksum of
     every buffer — reads the whole artifact once). See module docstring.
+
+    ``obs`` (optional, a ``repro.serving.observability.Observability``)
+    records each boot phase — manifest read, shard size check, mmap,
+    tensor assembly — as spans on the trace's "boot" track, so a served
+    boot timeline shows where artifact-load time went.
     """
     artifact_dir = Path(artifact_dir)
     mode = _verify_mode(verify)
-    manifest = read_manifest(artifact_dir)
+    with _boot_span(obs, "manifest_read", verify=mode):
+        manifest = read_manifest(artifact_dir)
     if mode in ("sizes", "full"):
-        check_shard_sizes(artifact_dir, manifest)
+        with _boot_span(obs, "shard_size_check",
+                        shards=len(manifest["shards"])):
+            check_shard_sizes(artifact_dir, manifest)
     mmaps: Dict[str, np.memmap] = {}
-    for shard in manifest["shards"]:
-        p = artifact_dir / shard["file"]
-        if not p.exists() or p.stat().st_size < shard["nbytes"]:
-            raise ArtifactError(f"shard {p} missing or truncated "
-                                f"(need {shard['nbytes']} bytes)")
-        mmaps[shard["file"]] = np.memmap(p, dtype=np.uint8, mode="r")
+    with _boot_span(obs, "mmap", shards=len(manifest["shards"])):
+        for shard in manifest["shards"]:
+            p = artifact_dir / shard["file"]
+            if not p.exists() or p.stat().st_size < shard["nbytes"]:
+                raise ArtifactError(f"shard {p} missing or truncated "
+                                    f"(need {shard['nbytes']} bytes)")
+            mmaps[shard["file"]] = np.memmap(p, dtype=np.uint8, mode="r")
 
     flat: Dict[str, Any] = {}
-    for path, rec in manifest["tensors"].items():
-        views = {}
-        for name, buf in rec["buffers"].items():
-            view = _buffer_view(mmaps[buf["shard"]], buf, f"{path}:{name}")
-            if mode == "full":
-                actual = afmt.checksum(view)
-                if actual != buf["crc32"]:
-                    end = buf["offset"] + buf["nbytes"]
-                    raise ArtifactError(
-                        f"checksum mismatch for tensor {path!r} buffer "
-                        f"{name!r}: shard {artifact_dir / buf['shard']} "
-                        f"bytes [{buf['offset']}, {end}) expected "
-                        f"crc32 {buf['crc32']:#010x}, got {actual:#010x} — "
-                        "artifact is corrupt; re-run the quantize CLI with "
-                        "--overwrite")
-            views[name] = view
-        if rec["kind"] == "ptqtp":
-            m = rec["meta"]
-            fields = {f"{afmt.QK_KEY_PREFIX}{k}": v for k, v in views.items()}
-            fields[afmt.QK_META_KEY] = np.asarray(
-                [m["d_in"], m["d_out"], m["group_size"]], np.int64)
-            flat[path] = afmt.decode_quantized_kernel(fields)
-        else:
-            flat[path] = views["data"]
+    with _boot_span(obs, "tensor_assemble",
+                    tensors=len(manifest["tensors"]), checksum=mode == "full"):
+        for path, rec in manifest["tensors"].items():
+            views = {}
+            for name, buf in rec["buffers"].items():
+                view = _buffer_view(mmaps[buf["shard"]], buf, f"{path}:{name}")
+                if mode == "full":
+                    actual = afmt.checksum(view)
+                    if actual != buf["crc32"]:
+                        end = buf["offset"] + buf["nbytes"]
+                        raise ArtifactError(
+                            f"checksum mismatch for tensor {path!r} buffer "
+                            f"{name!r}: shard {artifact_dir / buf['shard']} "
+                            f"bytes [{buf['offset']}, {end}) expected "
+                            f"crc32 {buf['crc32']:#010x}, got {actual:#010x} "
+                            "— artifact is corrupt; re-run the quantize CLI "
+                            "with --overwrite")
+                views[name] = view
+            if rec["kind"] == "ptqtp":
+                m = rec["meta"]
+                fields = {f"{afmt.QK_KEY_PREFIX}{k}": v
+                          for k, v in views.items()}
+                fields[afmt.QK_META_KEY] = np.asarray(
+                    [m["d_in"], m["d_out"], m["group_size"]], np.int64)
+                flat[path] = afmt.decode_quantized_kernel(fields)
+            else:
+                flat[path] = views["data"]
     return afmt.unflatten_paths(flat), manifest
 
 

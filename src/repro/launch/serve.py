@@ -35,12 +35,26 @@ pages (``--page-size``, pool ``--max-pages``) with copy-on-write prefix
 reuse across requests (``--prefix-cache`` / ``--no-prefix-cache``); the
 boot breakdown prints the page pool and the health line gains page-pool
 gauges. Outputs are bit-identical to ``--kv-layout ring``.
+
+Observability (v1.3): ``--trace-out trace.json`` records the per-request
+lifecycle + per-step engine-phase trace (load it in ui.perfetto.dev or
+chrome://tracing; boot phases appear on their own track);
+``--metrics-out metrics.prom`` writes the Prometheus text exposition at
+shutdown plus a ``.jsonl`` snapshot stream next to it;
+``--metrics-interval N`` prints a one-line stats digest (req/s, resident
+slots, pages free, p99 TTFT so far) every N engine steps and appends a
+registry snapshot to the JSONL stream. The shutdown summary prints a
+per-request latency table (queue wait, TTFT, total) and the non-zero
+registry metrics. All of it is zero-perturbation: tokens are
+bit-identical with tracing on, off, or unconfigured.
 """
 
 from __future__ import annotations
 
 import argparse
+import contextlib
 import time
+from pathlib import Path
 
 import jax
 
@@ -52,6 +66,7 @@ from repro.data.tokenizer import ByteTokenizer
 from repro.models import init_params
 from repro.serving import (EngineConfig, SamplingParams, SerialAdmitEngine,
                            ServingEngine)
+from repro.serving.observability import TRACK_BOOT, Observability
 
 PROMPTS = [
     "the model computes two trit planes",
@@ -59,6 +74,35 @@ PROMPTS = [
     "slot 42 holds 7 ;",
     "12 plus 30 equals",
 ]
+
+
+@contextlib.contextmanager
+def _boot_phase(obs, boot, name, **span_args):
+    """Time one boot phase into the printed breakdown dict *and* record it
+    as a span on the trace's boot track (when tracing is on)."""
+    t0 = time.time()
+    with obs.span(name, track=TRACK_BOOT, cat="boot", args=span_args or None):
+        yield
+    boot[name] = time.time() - t0
+
+
+def _stats_line(engine, t_serve0):
+    """The periodic one-line digest: everything read off the registry, so
+    what the operator watches and what a scraper collects can't diverge."""
+    reg = engine.obs.registry
+    elapsed = max(time.time() - t_serve0, 1e-9)
+    done = reg.value("serving_requests_completed_total")
+    line = (f"[serve] step {engine.engine_steps}: "
+            f"{done / elapsed:.2f} req/s "
+            f"resident={reg.value('serving_resident_slots')} "
+            f"queue={reg.value('serving_queue_depth')} "
+            f"tokens={reg.value('serving_tokens_generated_total')}")
+    if "serving_pages_free" in reg:
+        line += f" pages_free={reg.value('serving_pages_free')}"
+    ttft = reg.get_histogram("serving_ttft_seconds")
+    if ttft.count:
+        line += f" p99_ttft={1e3 * ttft.percentile(99):.1f}ms"
+    return line
 
 
 def main(argv=None):
@@ -144,6 +188,20 @@ def main(argv=None):
                     help="base seed; request i samples from its own "
                          "stream seeded seed+i (reproducible regardless "
                          "of co-batched traffic)")
+    ap.add_argument("--trace-out", default=None, metavar="PATH",
+                    help="write a Chrome/Perfetto trace.json of boot "
+                         "phases, engine step phases, and per-request "
+                         "lifecycle spans at shutdown (zero-perturbation: "
+                         "tokens are bit-identical with tracing off)")
+    ap.add_argument("--metrics-out", default=None, metavar="PATH",
+                    help="write the Prometheus text exposition of the "
+                         "metrics registry at shutdown; a .jsonl snapshot "
+                         "stream is written next to it when "
+                         "--metrics-interval is set")
+    ap.add_argument("--metrics-interval", type=int, default=0, metavar="N",
+                    help="print a one-line stats digest (and append a "
+                         "registry snapshot to the JSONL stream) every N "
+                         "engine steps while draining (0 = off)")
     args = ap.parse_args(argv)
 
     if args.kv_layout == "paged":
@@ -171,17 +229,23 @@ def main(argv=None):
                          f"tile {t_ring} at chunk length {L}); pick a "
                          "power-of-two page size dividing --capacity")
 
+    # one observability bundle for the whole process: boot spans land on
+    # its trace before the engine exists, then bind_engine() (inside the
+    # constructor) attaches the registry to the engine's counters
+    obs = Observability(trace=args.trace_out is not None)
+
     boot = {}  # phase -> seconds (startup breakdown)
     t_boot = time.time()
     if args.artifact:
-        t0 = time.time()
-        params, manifest = load_artifact(args.artifact,
-                                         verify=args.verify_artifact)
-        cfg = load_model_config(manifest)
+        with _boot_phase(obs, boot, "artifact_load",
+                         verify=args.verify_artifact):
+            params, manifest = load_artifact(args.artifact,
+                                             verify=args.verify_artifact,
+                                             obs=obs)
+            cfg = load_model_config(manifest)
         if not cfg.embed_inputs:
             ap.error(f"artifact model {cfg.name} has a stub modality "
                      "frontend; token serving applies to LM archs")
-        boot["artifact_load"] = time.time() - t0
         stats = manifest.get("stats", {})
         print(f"[serve] artifact: {manifest['arch']} "
               f"({stats.get('n_quantized', '?')} quantized kernels, "
@@ -193,15 +257,13 @@ def main(argv=None):
             ap.error(f"{args.arch} has a stub modality frontend; token "
                      "serving applies to LM archs (see launch/dryrun.py "
                      "for its cells)")
-        t0 = time.time()
-        params = init_params(cfg, jax.random.PRNGKey(args.seed))
-        boot["weight_init"] = time.time() - t0
+        with _boot_phase(obs, boot, "weight_init"):
+            params = init_params(cfg, jax.random.PRNGKey(args.seed))
         if not args.no_quantize:
-            t0 = time.time()
-            gs = min(128, cfg.d_model)
-            params, report = quantize_tree(
-                params, PTQTPConfig(group_size=gs, t_max=args.t_max))
-            boot["quantize"] = time.time() - t0
+            with _boot_phase(obs, boot, "quantize", t_max=args.t_max):
+                gs = min(128, cfg.d_model)
+                params, report = quantize_tree(
+                    params, PTQTPConfig(group_size=gs, t_max=args.t_max))
             tot = report["__total__"]
             print(f"[serve] PTQTP: {tot['n_quantized']} kernels, "
                   f"{tot['compression']:.2f}x compression, "
@@ -209,16 +271,16 @@ def main(argv=None):
 
     tok = ByteTokenizer()
     cls = ServingEngine if args.scheduler == "bucketed" else SerialAdmitEngine
-    t0 = time.time()
-    engine = cls(params, cfg, EngineConfig(
-        max_slots=args.slots, capacity=args.capacity,
-        prefill_chunk=args.prefill_chunk, attn_backend=args.attn_backend,
-        max_queue=args.max_queue,
-        max_resident_tokens=args.max_resident_tokens,
-        admission_policy=args.admission_policy,
-        kv_layout=args.kv_layout, page_size=args.page_size,
-        max_pages=args.max_pages, prefix_cache=args.prefix_cache))
-    boot["engine_init"] = time.time() - t0
+    with _boot_phase(obs, boot, "engine_init", scheduler=args.scheduler):
+        engine = cls(params, cfg, EngineConfig(
+            max_slots=args.slots, capacity=args.capacity,
+            prefill_chunk=args.prefill_chunk, attn_backend=args.attn_backend,
+            max_queue=args.max_queue,
+            max_resident_tokens=args.max_resident_tokens,
+            admission_policy=args.admission_policy,
+            kv_layout=args.kv_layout, page_size=args.page_size,
+            max_pages=args.max_pages, prefix_cache=args.prefix_cache),
+            observability=obs)
     mem = engine.memory_stats()
     if args.kv_layout == "paged":
         print(f"[serve] paged KV: pool {engine.alloc.n_pages} pages x "
@@ -236,9 +298,8 @@ def main(argv=None):
               f"decode state {mem['decode_state_bytes'] / 1e6:.2f} MB; "
               f"total resident {mem['resident_total_bytes'] / 1e6:.2f} MB")
     if args.warmup:
-        t0 = time.time()
-        engine.warmup()
-        boot["warmup"] = time.time() - t0
+        with _boot_phase(obs, boot, "warmup"):
+            engine.warmup()
         print(f"[serve] warmup: {engine.compile_stats()['n_prefill_compiles']}"
               f" prefill programs in {boot['warmup']:.1f}s")
     breakdown = " ".join(f"{k}={v:.2f}s" for k, v in boot.items())
@@ -274,8 +335,24 @@ def main(argv=None):
         print(f"[serve] streamed [{handles[0].uid}] -> {''.join(pieces)!r} "
               f"(ttft {1e3 * (handles[0].t_first - handles[0].t_submit):.1f}"
               "ms)")
-    results = [h.result() for h in handles]  # drives any remaining work
+
+    # explicit drive loop (rather than letting result() drive implicitly)
+    # so the periodic stats digest and JSONL snapshots can interleave with
+    # engine steps at a known cadence
+    interval = max(args.metrics_interval, 0)
+    jsonl_path = (Path(args.metrics_out).with_suffix(".jsonl")
+                  if args.metrics_out and interval else None)
+    jsonl_f = open(jsonl_path, "w") if jsonl_path else None
+    reg = engine.obs.registry
+    while engine.queue or any(s is not None for s in engine.slots):
+        engine.step()
+        if interval and engine.engine_steps % interval == 0:
+            print(_stats_line(engine, t0))
+            if jsonl_f is not None:
+                jsonl_f.write(reg.jsonl_line() + "\n")
+    results = [h.result() for h in handles]  # all retired; just collects
     dt = time.time() - t0
+
     n_tok = sum(len(r.tokens) for r in results)
     ttft = sorted(1e3 * r.ttft for r in results)
     stats = engine.compile_stats()
@@ -289,7 +366,33 @@ def main(argv=None):
     for r in sorted(results, key=lambda r: r.uid)[:4]:
         print(f"  [{r.uid}] ({r.finish_reason}) -> "
               f"{tok.decode(list(r.tokens))!r}")
+
+    # per-request latency table from the handles' own timestamps (the same
+    # numbers the trace spans are built from, so the two always reconcile)
+    print("[serve] request latency (ms):")
+    print(f"  {'uid':>4} {'reason':>9} {'tok':>4} {'queue':>8} "
+          f"{'ttft':>8} {'total':>8}")
+    for r in sorted(results, key=lambda r: r.uid):
+        total = (r.t_done - r.t_submit) if r.t_done else 0.0
+        print(f"  {r.uid:>4} {r.finish_reason:>9} {len(r.tokens):>4} "
+              f"{1e3 * r.queue_wait:>8.1f} {1e3 * r.ttft:>8.1f} "
+              f"{1e3 * total:>8.1f}")
+    print("[serve] metrics summary:")
+    for line in reg.summary_table().splitlines():
+        print(f"  {line}")
     print(f"[serve] health: {engine.health().summary()}")
+
+    if jsonl_f is not None:
+        jsonl_f.write(reg.jsonl_line() + "\n")  # final snapshot
+        jsonl_f.close()
+        print(f"[serve] metrics snapshots -> {jsonl_path}")
+    if args.metrics_out:
+        Path(args.metrics_out).write_text(reg.render_prometheus())
+        print(f"[serve] metrics -> {args.metrics_out}")
+    if args.trace_out:
+        engine.obs.trace.write(args.trace_out)
+        print(f"[serve] trace ({len(engine.obs.trace)} events) -> "
+              f"{args.trace_out}")
     return results
 
 

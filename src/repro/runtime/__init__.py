@@ -1,7 +1,11 @@
+from repro.runtime import clock
 from repro.runtime.checkpoint import (CheckpointManager, load_checkpoint,
                                       save_checkpoint)
-from repro.runtime.monitor import HeartbeatMonitor, StragglerDetector
+from repro.runtime.clock import MONOTONIC, WALL, Clock
+from repro.runtime.monitor import (HEARTBEAT_SCHEMA, HeartbeatMonitor,
+                                   StragglerDetector)
 from repro.runtime.preempt import PreemptionGuard
 
 __all__ = ["CheckpointManager", "save_checkpoint", "load_checkpoint",
-           "HeartbeatMonitor", "StragglerDetector", "PreemptionGuard"]
+           "HeartbeatMonitor", "StragglerDetector", "PreemptionGuard",
+           "Clock", "MONOTONIC", "WALL", "clock", "HEARTBEAT_SCHEMA"]

@@ -1,0 +1,69 @@
+"""The single injectable time source for the serving stack.
+
+Every timestamp in ``repro.serving`` and ``repro.models`` flows through a
+:class:`Clock` instance (or this module's :func:`now` / :func:`wall_now`
+helpers), never through a raw ``time.time()`` / ``time.perf_counter()``
+call — the invariant that lets ``repro.serving.faults.VirtualClock`` swap
+deterministic time under an entire engine (deadlines, lifecycle
+timestamps, trace spans, histogram observations) without a single sleep,
+and that keeps wall-clock reads out of (and fully substitutable around)
+the jitted loops. The invariant is enforced *statically*: a tier-1 guard
+test greps those trees for raw calls (see tests/test_observability.py).
+
+Two concrete clocks:
+
+* :class:`MonotonicClock` (module singleton :data:`MONOTONIC`) — wraps
+  ``time.perf_counter``; the default for latency measurement (TTFT,
+  queue wait, step phases). Its origin is arbitrary: only differences
+  are meaningful.
+* :class:`WallClock` (module singleton :data:`WALL`) — wraps
+  ``time.time``; for timestamps that must be comparable *across hosts*
+  (heartbeat files, artifact manifests).
+
+A clock is just a zero-arg callable returning seconds as ``float``, so
+``repro.serving.faults.VirtualClock`` (advance-on-demand) and any test
+stub satisfy the interface without inheriting from :class:`Clock`.
+"""
+
+from __future__ import annotations
+
+import time
+
+__all__ = ["Clock", "MonotonicClock", "WallClock", "MONOTONIC", "WALL",
+           "now", "wall_now"]
+
+
+class Clock:
+    """Zero-arg callable returning seconds (float). Subclass or duck-type."""
+
+    def __call__(self) -> float:  # pragma: no cover - abstract
+        raise NotImplementedError
+
+
+class MonotonicClock(Clock):
+    """``time.perf_counter`` — monotone, arbitrary origin, high resolution."""
+
+    def __call__(self) -> float:
+        return time.perf_counter()
+
+
+class WallClock(Clock):
+    """``time.time`` — epoch seconds, comparable across hosts (NTP caveats
+    apply; see ``runtime.monitor``'s clock-skew handling)."""
+
+    def __call__(self) -> float:
+        return time.time()
+
+
+MONOTONIC = MonotonicClock()
+WALL = WallClock()
+
+
+def now() -> float:
+    """Monotonic seconds (the default latency clock)."""
+    return MONOTONIC()
+
+
+def wall_now() -> float:
+    """Wall-clock epoch seconds (for cross-host timestamps)."""
+    return WALL()

@@ -27,11 +27,21 @@ from __future__ import annotations
 
 import dataclasses
 import json
-import time
 from pathlib import Path
 from typing import Dict, List, Optional, Tuple
 
 import numpy as np
+
+from repro.runtime import clock as rtclock
+
+#: Heartbeat payload schema version. History:
+#:   1 (implicit) — {host, step, t, step_time_s, **metrics}; pre-PR-8
+#:     payloads carry no "schema" key and are read as v1.
+#:   2 — adds "schema" and (for serving hosts) the observability metrics
+#:     digest. Readers must tolerate missing keys beyond {host, t}: the
+#:     fleet never upgrades atomically, so one detector version always
+#:     overlaps older writers.
+HEARTBEAT_SCHEMA = 2
 
 
 @dataclasses.dataclass
@@ -50,7 +60,8 @@ class HeartbeatMonitor:
             d.mkdir(parents=True, exist_ok=True)
             self._dir = d
         tmp = self._dir / f".host{self.host_id:04d}.tmp"
-        payload = {"host": self.host_id, "step": step, "t": time.time(),
+        payload = {"schema": HEARTBEAT_SCHEMA, "host": self.host_id,
+                   "step": step, "t": rtclock.wall_now(),
                    "step_time_s": step_time_s, **metrics}
         tmp.write_text(json.dumps(payload))
         tmp.rename(self._dir / f"host{self.host_id:04d}.json")
@@ -66,19 +77,32 @@ class StragglerDetector:
     skew_tolerance_s: float = 5.0
 
     def read(self) -> List[Dict]:
+        """Parse every heartbeat file, tolerating *any* schema version: a
+        payload needs only ``host`` and ``t`` to be assessable (liveness
+        and skew are timestamp properties); everything else is normalized
+        — missing ``schema`` reads as v1, missing ``step_time_s`` as None
+        (the host is alive but contributes nothing to the straggler
+        median). A fleet mid-upgrade therefore never KeyErrors the
+        detector."""
         d = Path(self.run_dir) / "heartbeats"
         if not d.exists():
             return []
         out = []
         for p in sorted(d.glob("host*.json")):
             try:
-                out.append(json.loads(p.read_text()))
+                b = json.loads(p.read_text())
             except (json.JSONDecodeError, OSError):
                 continue  # torn read: skip this cycle
+            if not isinstance(b, dict) or "host" not in b or "t" not in b:
+                continue  # unassessable payload: skip, don't crash
+            b.setdefault("schema", 1)
+            b.setdefault("step", 0)
+            b.setdefault("step_time_s", None)
+            out.append(b)
         return out
 
     def assess(self, now: Optional[float] = None) -> Dict:
-        now = time.time() if now is None else now
+        now = rtclock.wall_now() if now is None else now
         beats = self.read()
         if not beats:
             return {"healthy": [], "dead": [], "stragglers": [],
@@ -92,10 +116,12 @@ class StragglerDetector:
                 if b["host"] not in skewed and now - b["t"] > self.dead_after_s]
         alive = [b for b in beats
                  if b["host"] not in dead and b["host"] not in skewed]
-        med = float(np.median([b["step_time_s"] for b in alive])) if alive \
-            else None
+        times = [b["step_time_s"] for b in alive
+                 if b["step_time_s"] is not None]
+        med = float(np.median(times)) if times else None
         stragglers = [b["host"] for b in alive
-                      if med and b["step_time_s"] > self.straggler_factor * med]
+                      if med and b["step_time_s"] is not None
+                      and b["step_time_s"] > self.straggler_factor * med]
         healthy = [b["host"] for b in alive if b["host"] not in stragglers]
         return {"healthy": healthy, "dead": dead, "stragglers": stragglers,
                 "skewed": skewed, "median_step_s": med}
@@ -133,13 +159,18 @@ class HealthSnapshot:
     prefix_misses: int = 0        # lookups that ended cold (counter)
     prefix_evictions: int = 0     # cache entries dropped under pressure
 
-    def beat(self, monitor: HeartbeatMonitor, step_time_s: float = 0.0):
+    def beat(self, monitor: HeartbeatMonitor, step_time_s: float = 0.0,
+             metrics: Optional[Dict] = None):
         """Publish this snapshot through the training-side heartbeat file
         protocol, so one :class:`StragglerDetector` watches both kinds of
-        host."""
-        monitor.beat(self.steps, step_time_s,
-                     **{k: v for k, v in dataclasses.asdict(self).items()
-                        if k not in ("t", "steps")})
+        host. ``metrics`` (e.g. ``engine.obs.digest()``) merges extra
+        flat keys into the payload — the serving metrics digest rides the
+        same file."""
+        extra = {k: v for k, v in dataclasses.asdict(self).items()
+                 if k not in ("t", "steps")}
+        if metrics:
+            extra.update(metrics)
+        monitor.beat(self.steps, step_time_s, **extra)
 
     def summary(self) -> str:
         """One log line (what ``launch/serve.py`` prints)."""

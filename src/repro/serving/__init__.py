@@ -95,6 +95,54 @@ pages shared by the whole fleet (default: exactly the ring footprint,
 ``kv_resident_bytes`` — bytes of *used* pages, the requests-per-GB number
 — under paging.
 
+Observability (v1.3)
+--------------------
+Every engine carries an ``Observability`` bundle (``engine.obs``; pass
+``observability=`` to share one across boot + engine, or leave it unset —
+a default bundle with tracing off is always attached). Its parts:
+
+* **Metrics registry** (``engine.obs.registry``, a ``MetricsRegistry``).
+  The metric *names, kinds, and units* in
+  ``observability.SERVING_METRICS`` are frozen exactly like
+  ``FINISH_REASONS`` — scrape pipelines and dashboards may depend on
+  them. Counters are monotone for the engine's lifetime; gauges describe
+  the instant of the read; histograms expose Prometheus cumulative
+  buckets plus exact windowed percentiles (``percentile(q)`` over the
+  last 4096 observations). Export as Prometheus text
+  (``registry.render_prometheus()``), a JSONL snapshot line
+  (``registry.jsonl_line()``), or an aligned summary table. The page-pool
+  metrics register only under ``kv_layout="paged"``.
+  ``engine.health()`` is now *derived from* the registry — a snapshot
+  and a scrape can never disagree.
+* **Lifecycle + step tracing** (``engine.obs.trace``, a bounded-ring
+  ``TraceRecorder``; ``Observability(trace=True)`` enables it, default
+  off). Each request emits spans submitted → queued → admitted →
+  prefill chunks → first token → decode → retired on its own track
+  (annotated with slot, pages, and ``finish_reason``); each engine step
+  emits phase spans (sweep, admit, prefill dispatch/sync, sample
+  collect, decode dispatch/sync, collect, page maintenance); artifact
+  boot phases land on a "boot" track. ``trace.write(path)`` emits
+  Chrome/Perfetto ``trace.json``. When the ring overflows, the *oldest*
+  events drop and ``serving_trace_dropped_total`` counts them.
+* **Clock injection.** All engine timestamps flow through one injectable
+  clock (``repro.runtime.clock``; ``faults.VirtualClock`` duck-types
+  it), so a seeded ``FaultPlan`` run produces a fully deterministic
+  trace whose span durations reconcile *exactly* with
+  ``RequestResult.t_submit/t_first/t_done`` and the histogram
+  percentiles. Direct wall-clock calls are banned from the serving and
+  model layers by a static guard test.
+* **Zero perturbation** (the testable guarantee, like determinism): a
+  request's tokens are bit-identical with tracing on, off, or the
+  bundle left unconfigured. Instrumentation is host-side only and never
+  adds a compile-cache axis; ``benchmarks/bench_observability.py``
+  bounds the tok/s overhead of tracing at < 3%.
+
+``RequestResult`` additionally carries ``t_admit`` and the derived
+``queue_wait`` (0.0 for never-admitted requests); heartbeat payloads are
+now versioned (``runtime.monitor.HEARTBEAT_SCHEMA``) and
+``HealthSnapshot.beat(..., metrics=engine.obs.digest())`` folds a metrics
+digest into the heartbeat file a ``StragglerDetector`` reads.
+
 Consumption
 -----------
 ``RequestHandle.tokens()`` — a generator yielding each generated token in
@@ -136,6 +184,8 @@ from repro.serving.api import (FINISH_REASONS, RequestHandle, RequestResult,
 from repro.serving.engine import (EngineConfig, EngineFault,
                                   SerialAdmitEngine, ServingEngine)
 from repro.serving.faults import FaultInjector, FaultPlan, VirtualClock
+from repro.serving.observability import (SERVING_METRICS, MetricsRegistry,
+                                         Observability, TraceRecorder)
 from repro.serving.paging import PageAllocator
 from repro.serving.sampling import (request_keys, sample_token, sample_tokens,
                                     sample_tokens_per_request,
@@ -146,6 +196,7 @@ __all__ = [
     "ServingEngine", "SerialAdmitEngine", "EngineConfig", "EngineFault",
     "FaultPlan", "FaultInjector", "VirtualClock", "HealthSnapshot",
     "PageAllocator",
+    "Observability", "MetricsRegistry", "TraceRecorder", "SERVING_METRICS",
     "sample_token", "sample_tokens", "sample_tokens_per_request",
     "request_keys", "top_k_top_p_mask",
 ]

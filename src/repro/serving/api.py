@@ -23,8 +23,9 @@ no randomness at all.
 from __future__ import annotations
 
 import dataclasses
-import time
 from typing import Any, FrozenSet, Iterable, Iterator, List, Optional
+
+from repro.runtime import clock as rtclock
 
 FINISH_STOP = "stop"          # hit a stop-token id (incl. EngineConfig.eos_id)
 FINISH_LENGTH = "length"      # produced max_new_tokens
@@ -110,12 +111,19 @@ class RequestResult:
     t_submit: float              # engine clock at submit()
     t_first: float               # engine clock at first generated token
     t_done: float                # engine clock at finish/cancel/retire
+    t_admit: float = 0.0         # engine clock at admission into a slot
+    #                              (0.0 if the request never admitted)
     error: Optional[str] = None  # contained-fault detail ("error"/"rejected")
 
     @property
     def ttft(self) -> float:
         """Submit → first token, seconds (0.0 if no token was produced)."""
         return max(self.t_first - self.t_submit, 0.0) if self.t_first else 0.0
+
+    @property
+    def queue_wait(self) -> float:
+        """Submit → admission, seconds (0.0 if never admitted)."""
+        return max(self.t_admit - self.t_submit, 0.0) if self.t_admit else 0.0
 
 
 class RequestHandle:
@@ -139,9 +147,11 @@ class RequestHandle:
         self.error: Optional[str] = None  # contained-fault / shed detail
         self.truncated = False
         self.t_submit = 0.0
+        self.t_admit = 0.0            # engine clock at admission into a slot
         self.t_first = 0.0
         self.t_done = 0.0
         self._engine = engine
+        self._slot: Optional[int] = None  # last slot occupied (trace label)
         self._stop_ids: FrozenSet[int] = params.stop
 
     # ------------------------------------------------------------ lifecycle
@@ -179,7 +189,7 @@ class RequestHandle:
             uid=self.uid, tokens=tuple(self.output),
             finish_reason=self.finish_reason, truncated=self.truncated,
             t_submit=self.t_submit, t_first=self.t_first, t_done=self.t_done,
-            error=self.error)
+            t_admit=self.t_admit, error=self.error)
 
     def cancel(self) -> bool:
         """Cancel the request: a queued request never admits; a resident one
@@ -205,5 +215,6 @@ def make_handle(engine: Any, prompt: Any, params: Optional[SamplingParams],
                       params if params is not None else SamplingParams())
     if not h.prompt:
         raise ValueError("empty prompt")
-    h.t_submit = time.perf_counter()
+    # provisional stamp; the engine's own clock overwrites it at submit()
+    h.t_submit = rtclock.now()
     return h

@@ -53,7 +53,6 @@ from __future__ import annotations
 
 import dataclasses
 import functools
-import time
 from collections import deque
 from typing import Any, Dict, List, Optional, Tuple
 
@@ -67,10 +66,12 @@ from repro.kernels.ternary_matmul.ops import resolve_backend
 from repro.models import (decode_step, init_decode_state, prefill,
                           prefill_chunk)
 from repro.models.common import matmul_backend
+from repro.runtime import clock as rtclock
 from repro.runtime.monitor import HealthSnapshot
 from repro.serving.api import (FINISH_CANCELLED, FINISH_ERROR, FINISH_LENGTH,
                                FINISH_REJECTED, FINISH_STOP, FINISH_TIMEOUT,
                                RequestHandle, SamplingParams, make_handle)
+from repro.serving.observability import TRACK_ENGINE, Observability
 from repro.serving.paging import PageAllocator
 from repro.serving.sampling import request_keys, sample_tokens_per_request
 
@@ -365,10 +366,19 @@ class ServingEngine:
     the engine's clock (deterministic deadline tests), raise from a chosen
     dispatch, and poison chosen rows' logits with NaN on device. Production
     engines pass None and compile the poison input out entirely.
+
+    ``observability`` (optional) is a :class:`repro.serving.observability.
+    Observability` bundle; the engine always carries one (constructing a
+    registry-only default when unconfigured), adopts it onto its own clock,
+    and registers the frozen serving metric set against its bookkeeping
+    counters. Pass ``Observability(trace=True)`` to also record the
+    lifecycle/phase trace. All instrumentation is host-side around (never
+    inside) the compiled dispatches: tokens are bit-identical with tracing
+    on, off, or unconfigured, and no new compile-cache axis exists.
     """
 
     def __init__(self, params, model_cfg, engine_cfg: EngineConfig, *,
-                 injector=None):
+                 injector=None, observability: Optional[Observability] = None):
         self.params = params
         if engine_cfg.attn_backend is not None:
             model_cfg = dataclasses.replace(
@@ -439,7 +449,7 @@ class ServingEngine:
         # ---- fault containment / admission control state
         self._injector = injector
         clock = getattr(injector, "clock", None) if injector else None
-        self._clock = clock if clock is not None else time.perf_counter
+        self._clock = clock if clock is not None else rtclock.MONOTONIC
         # suspect slots → engine step at which they may auto-rehabilitate
         self.quarantined: Dict[int, int] = {}
         self.engine_steps = 0    # step() calls (injector schedule index)
@@ -449,6 +459,16 @@ class ServingEngine:
         self.sheds = 0           # rejected at submit
         self.timeouts = 0        # retired by the deadline sweep
         self.errors = 0          # retired by fault containment
+        # ---- observability (registry always on; tracing only when asked)
+        self.submitted = 0           # submit() calls accepted
+        self.tokens_generated = 0    # tokens delivered to outputs
+        self.prefill_tokens = 0      # prompt tokens consumed by prefill
+        self.obs = observability if observability is not None \
+            else Observability()
+        # the engine's clock (a VirtualClock under an injector) owns every
+        # timestamp, including the bundle's spans and histogram observations
+        self.obs.clock = self._clock
+        self.obs.bind_engine(self)
 
     # ------------------------------------------------------------------ API
     def submit(self, prompt, params: Optional[SamplingParams] = None, *,
@@ -471,12 +491,14 @@ class ServingEngine:
         self._next_uid = max(self._next_uid, h.uid + 1)  # explicit uids must
         # not collide with auto-assigned ones
         h.t_submit = self._clock()  # the engine clock owns all timestamps
+        self.submitted += 1
         stop = frozenset(h.params.stop)
         if self.ecfg.eos_id is not None:
             stop |= {self.ecfg.eos_id}
         h._stop_ids = stop
         # the truncation that _admit will apply, surfaced at submit time
         h.truncated = len(h.prompt) > self.ecfg.capacity
+        self.obs.request_submitted(h)
         never_fits = (self.ecfg.max_resident_tokens is not None
                       and self._committed_tokens(h)
                       > self.ecfg.max_resident_tokens)
@@ -614,10 +636,12 @@ class ServingEngine:
             donate = (0,) if jax.default_backend() != "cpu" else ()
             self._maint_jit = jax.jit(_page_maint_impl,
                                       donate_argnums=donate)
-        self.state = self._maint_jit(
-            self.state, pad([s for s, _ in copies]),
-            pad([d for _, d in copies]), pad(clear),
-            jnp.asarray(self._tables))
+        with self.obs.span("page_maint",
+                           args={"copies": len(copies), "clear": len(clear)}):
+            self.state = self._maint_jit(
+                self.state, pad([s for s, _ in copies]),
+                pad([d for _, d in copies]), pad(clear),
+                jnp.asarray(self._tables))
         self._tables_dirty = False
 
     def _fork_writes(self, spans):
@@ -836,17 +860,22 @@ class ServingEngine:
         stays O(log K)) — a fleet that only needs 3 more tokens never pays
         for a 16-step dispatch.
         """
+        obs = self.obs
+        t_step0, tok0, churn0 = self._step_begin()
         self.engine_steps += 1
         if self._injector is not None:
             self._injector.on_step(self)
-        done_now = self._sweep_deadlines()
-        self._auto_rehabilitate()
-        self._admit()
+        with obs.span("sweep"):
+            done_now = self._sweep_deadlines()
+            self._auto_rehabilitate()
+        with obs.span("admit"):
+            self._admit()
         done_now += self._admit_finished
         self._admit_finished = []
         done_now = done_now + self._prefill_step()
         dec = [i for i in range(len(self.slots)) if self._decoding(i)]
         if not dec:
+            self._step_end(t_step0, tok0, churn0)
             return done_now
         remaining = max(self.slots[i].params.max_new_tokens
                         - len(self.slots[i].output) for i in dec)
@@ -875,14 +904,43 @@ class ServingEngine:
             else jnp.full((len(self.slots),), -1, jnp.int32)
         try:
             self._guard_dispatch("decode", dec)
-            self.state, (toks, bad) = self._loop_fn(
-                n_steps, use_mask, stop_w, use_poison)(
-                self._serve_params, self.state, jnp.asarray(self.last_tokens),
-                temps, active, seeds, gen0, top_k, top_p, stops, poison)
+            with obs.span("decode_dispatch",
+                          args={"n_steps": n_steps, "rows": len(dec)}):
+                self.state, (toks, bad) = self._loop_fn(
+                    n_steps, use_mask, stop_w, use_poison)(
+                    self._serve_params, self.state,
+                    jnp.asarray(self.last_tokens),
+                    temps, active, seeds, gen0, top_k, top_p, stops, poison)
         except Exception as exc:  # containment unit: this dispatch only
-            return done_now + self._contain("decode", dec, exc)
+            done_now = done_now + self._contain("decode", dec, exc)
+            self._step_end(t_step0, tok0, churn0)
+            return done_now
         self.steps += n_steps
-        return done_now + self._collect(np.asarray(toks), np.asarray(bad))
+        with obs.span("decode_sync"):
+            toks_np, bad_np = np.asarray(toks), np.asarray(bad)
+        with obs.span("collect"):
+            done_now = done_now + self._collect(toks_np, bad_np)
+        self._step_end(t_step0, tok0, churn0)
+        return done_now
+
+    def _step_begin(self) -> Tuple[float, int, int]:
+        churn = (self.alloc.allocs + self.alloc.releases) if self.paged else 0
+        return self._clock(), self.tokens_generated, churn
+
+    def _step_end(self, t0: float, tok0: int, churn0: int):
+        """Per-step observations (always on — host-side arithmetic only):
+        step duration, tokens delivered this step, page churn this step,
+        plus the enclosing "step" trace span when tracing."""
+        obs = self.obs
+        now = self._clock()
+        obs.h_step.observe(now - t0)
+        obs.h_tokens_step.observe(self.tokens_generated - tok0)
+        if self.paged:
+            obs.h_page_churn.observe(
+                self.alloc.allocs + self.alloc.releases - churn0)
+        if obs.trace is not None:
+            obs.trace.complete("step", TRACK_ENGINE, t0, now, cat="engine",
+                               args={"engine_step": self.engine_steps})
 
     # ------------------------------------------------- deadlines / containment
     def _expired(self, h: RequestHandle, now: float) -> Optional[str]:
@@ -1005,24 +1063,31 @@ class ServingEngine:
 
     def health(self) -> HealthSnapshot:
         """Current engine health (see :class:`repro.runtime.monitor.
-        HealthSnapshot`); cheap — reads host-side bookkeeping only."""
-        resident = sum(1 for s in self.slots if s is not None)
+        HealthSnapshot`); cheap — every field is a read of the same
+        registry counters/gauges the observability bundle exports, so a
+        snapshot and a metrics scrape can never disagree."""
+        reg = self.obs.registry
         pages = {}
         if self.paged:
-            pages = dict(pages_free=self.alloc.free_pages,
-                         pages_used=self.alloc.used_pages(),
-                         pages_shared=self.alloc.shared_pages(),
-                         prefix_hits=self.alloc.hits,
-                         prefix_misses=self.alloc.misses,
-                         prefix_evictions=self.alloc.evictions)
+            pages = dict(
+                pages_free=reg.value("serving_pages_free"),
+                pages_used=reg.value("serving_pages_used"),
+                pages_shared=reg.value("serving_pages_shared"),
+                prefix_hits=reg.value("serving_prefix_hits_total"),
+                prefix_misses=reg.value("serving_prefix_misses_total"),
+                prefix_evictions=reg.value("serving_prefix_evictions_total"))
         return HealthSnapshot(
             t=self._clock(), steps=self.steps,
-            queue_depth=len(self.queue), resident=resident,
-            free_slots=len(self.slots) - resident - len(self.quarantined),
+            queue_depth=reg.value("serving_queue_depth"),
+            resident=reg.value("serving_resident_slots"),
+            free_slots=reg.value("serving_free_slots"),
             quarantined_slots=tuple(sorted(self.quarantined)),
-            resident_tokens=self.resident_tokens(),
-            completed=self.completed, cancelled=self.cancelled,
-            sheds=self.sheds, timeouts=self.timeouts, errors=self.errors,
+            resident_tokens=reg.value("serving_resident_tokens"),
+            completed=reg.value("serving_requests_completed_total"),
+            cancelled=reg.value("serving_requests_cancelled_total"),
+            sheds=reg.value("serving_requests_shed_total"),
+            timeouts=reg.value("serving_requests_timeout_total"),
+            errors=reg.value("serving_requests_error_total"),
             **pages)
 
     # ------------------------------------------------------------- internals
@@ -1061,6 +1126,7 @@ class ServingEngine:
     def _mark_first(self, h: RequestHandle, now: float):
         if not h.t_first:
             h.t_first = now
+            self.obs.request_first_token(h)
 
     def _finish(self, h: RequestHandle, reason: str, now: float):
         h.finish_reason = reason
@@ -1075,6 +1141,9 @@ class ServingEngine:
             self.sheds += 1
         elif reason == FINISH_ERROR:
             self.errors += 1
+        # every retirement path funnels through here — the single place
+        # the lifecycle spans and completion histograms are emitted
+        self.obs.request_retired(h, h._slot)
 
     def _fleet_arrays(self):
         """Per-slot device arrays for the decode dispatch, cached until the
@@ -1158,6 +1227,7 @@ class ServingEngine:
             if self.slots[slot] is not None or not self.queue \
                     or slot in self.quarantined:
                 continue
+            page_args = None
             if self.paged:
                 plan = self._plan_pages(self.queue[0])
                 if plan is None:
@@ -1177,11 +1247,17 @@ class ServingEngine:
                 self._cacheable[slot] = cacheable
                 self._reserve[slot] = reserve
                 clear.extend(fresh)
+                page_args = {"pages_shared": len(shared),
+                             "pages_fresh": len(fresh),
+                             "pages_reserved": len(reserve)}
             else:
                 h = self.queue.popleft()
                 self.slots[slot] = h
                 self._prompts[slot] = list(h.prompt[-self.ecfg.capacity:])
                 self._cursor[slot] = 0
+            h.t_admit = self._clock()
+            h._slot = slot
+            self.obs.request_admitted(h, slot, pages=page_args)
             fresh_rows.append(slot)
             self.admits += 1
         if fresh_rows:
@@ -1251,19 +1327,28 @@ class ServingEngine:
                                for i in pf])
             if self._tables_dirty:
                 self._page_maintenance()
+        obs = self.obs
+        t_pf0 = self._clock()
         try:
             self._guard_dispatch("prefill", pf)
-            logits, self.state = self._prefill_fn(length)(
-                self._serve_params, self.state, jnp.asarray(tokens),
-                jnp.asarray(lengths))
+            with obs.span("prefill_dispatch",
+                          args={"bucket": length, "rows": len(pf)}):
+                logits, self.state = self._prefill_fn(length)(
+                    self._serve_params, self.state, jnp.asarray(tokens),
+                    jnp.asarray(lengths))
         except Exception as exc:  # cursors untouched: survivors retry as-is
             return self._contain("prefill", pf, exc)
+        t_pf1 = self._clock()
+        obs.h_prefill_chunk.observe(t_pf1 - t_pf0)
         self.prefill_steps += 1
+        self.prefill_tokens += int(lengths.sum())
         finishers = [i for i in pf
                      if self._cursor[i] + int(lengths[i])
                      >= len(self._prompts[i])]
         for i in pf:
             self._cursor[i] += int(lengths[i])
+            obs.prefill_chunk(self.slots[i], i, t_pf0, t_pf1,
+                              int(lengths[i]), self._cursor[i])
         if not finishers:
             return []
         if self._injector is not None:
@@ -1275,7 +1360,8 @@ class ServingEngine:
                     logits = logits.at[i].set(jnp.nan)
         # non-finite logits are contained *before* sampling: the offending
         # row retires with "error", finite rows sample from untouched logits
-        row_ok = np.asarray(jnp.all(jnp.isfinite(logits), axis=-1))
+        with obs.span("prefill_sync"):
+            row_ok = np.asarray(jnp.all(jnp.isfinite(logits), axis=-1))
         if self.paged:
             # registration rides the finisher sync that happens anyway — a
             # per-chunk publish would cost a blocking device round-trip on
@@ -1296,24 +1382,26 @@ class ServingEngine:
             return finished
         # the prompt's last logits yield the first generated token; one
         # vectorized sample covers every finishing row
-        toks = self._sample_first(logits, finishers)
-        for i in finishers:
-            h = self.slots[i]
-            tok = int(toks[i])
-            h.output.append(tok)
-            self._mark_first(h, now)
-            # the prefill-sampled token may already terminate the request —
-            # on eos_id *or* any SamplingParams.stop id
-            if tok in h._stop_ids:
-                self._finish(h, FINISH_STOP, now)
-            elif len(h.output) >= h.params.max_new_tokens:
-                self._finish(h, FINISH_LENGTH, now)
-            else:
-                self.last_tokens[i] = tok
-                self._slot_arrays = None
-                continue
-            finished.append(h)
-            self._free_slot(i)
+        with obs.span("sample_collect", args={"rows": len(finishers)}):
+            toks = self._sample_first(logits, finishers)
+            for i in finishers:
+                h = self.slots[i]
+                tok = int(toks[i])
+                h.output.append(tok)
+                self.tokens_generated += 1
+                self._mark_first(h, now)
+                # the prefill-sampled token may already terminate the
+                # request — on eos_id *or* any SamplingParams.stop id
+                if tok in h._stop_ids:
+                    self._finish(h, FINISH_STOP, now)
+                elif len(h.output) >= h.params.max_new_tokens:
+                    self._finish(h, FINISH_LENGTH, now)
+                else:
+                    self.last_tokens[i] = tok
+                    self._slot_arrays = None
+                    continue
+                finished.append(h)
+                self._free_slot(i)
         return finished
 
     def _register_pages(self, finishers: List[int], row_ok):
@@ -1368,6 +1456,7 @@ class ServingEngine:
                     break
                 tok = int(toks[k, slot])
                 h.output.append(tok)
+                self.tokens_generated += 1
                 self._mark_first(h, now)
                 self.last_tokens[slot] = tok
                 if tok in h._stop_ids:
@@ -1393,14 +1482,15 @@ class SerialAdmitEngine(ServingEngine):
     """
 
     def __init__(self, params, model_cfg, engine_cfg: EngineConfig, *,
-                 injector=None):
+                 injector=None, observability: Optional[Observability] = None):
         if engine_cfg.kv_layout != "ring":
             raise ValueError(
                 "SerialAdmitEngine prefills through prefill() into a "
                 "private ring state and merges it by slot — the paged "
                 "layout is a bucketed-scheduler feature; use "
                 "kv_layout='ring' here")
-        super().__init__(params, model_cfg, engine_cfg, injector=injector)
+        super().__init__(params, model_cfg, engine_cfg, injector=injector,
+                         observability=observability)
 
     def _warm_prefill(self):
         # Best effort only: compiles the power-of-two prompt lengths, but
@@ -1453,22 +1543,34 @@ class SerialAdmitEngine(ServingEngine):
             self.slots[slot] = h          # resident before the dispatch so
             self._prompts[slot] = list(prompt)  # containment can attribute
             self._cursor[slot] = 0        # not decoding until token 0 lands
+            h.t_admit = self._clock()
+            h._slot = slot
+            self.obs.request_admitted(h, slot)
             fn = self._prefill_len_fn(len(prompt))
+            t_pf0 = self._clock()
             try:
                 self._guard_dispatch("prefill", [slot])
-                logits, one_state = fn(self._serve_params,
-                                       jnp.asarray([prompt], jnp.int32))
+                with self.obs.span("prefill_dispatch",
+                                   args={"bucket": len(prompt), "rows": 1}):
+                    logits, one_state = fn(self._serve_params,
+                                           jnp.asarray([prompt], jnp.int32))
             except Exception as exc:  # serial admission: batch-1 containment
                 self._admit_finished.extend(
                     self._contain("prefill", [slot], exc))
                 continue
             self.state = self._merge(self.state, one_state, slot)
             self.prefill_steps += 1
+            self.prefill_tokens += len(prompt)
+            self.obs.h_prefill_chunk.observe(self._clock() - t_pf0)
+            self.obs.prefill_chunk(h, slot, t_pf0, self._clock(),
+                                   len(prompt), len(prompt))
             p = h.params
             if self._injector is not None \
                     and self._injector.poison_index(h.uid, 0, 1) == 0:
                 logits = logits.at[0].set(jnp.nan)
-            if not bool(np.asarray(jnp.all(jnp.isfinite(logits[0])))):
+            with self.obs.span("prefill_sync"):
+                row_ok = bool(np.asarray(jnp.all(jnp.isfinite(logits[0]))))
+            if not row_ok:
                 self._free_slot(slot)
                 self._quarantine(slot)
                 h.error = "non-finite logits at prefill completion"
@@ -1480,9 +1582,11 @@ class SerialAdmitEngine(ServingEngine):
             keys = request_keys(jnp.asarray([p.seed & 0xFFFFFFFF],
                                             jnp.uint32),
                                 jnp.zeros((1,), jnp.int32))
-            tok = int(self._sample_first_row(logits, keys, p))
+            with self.obs.span("sample_collect", args={"rows": 1}):
+                tok = int(self._sample_first_row(logits, keys, p))
             now = self._clock()
             h.output.append(tok)
+            self.tokens_generated += 1
             self._mark_first(h, now)
             # the prefill-sampled token may already terminate the request
             if tok in h._stop_ids:

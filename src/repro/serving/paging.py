@@ -74,6 +74,11 @@ class PageAllocator:
         self.evictions = 0
         self.forks = 0
         self.peak_used = 0
+        # churn totals (monotone): pages taken by alloc() / references
+        # dropped by release() — the per-step difference is the page-pool
+        # churn metric the observability registry exports
+        self.allocs = 0
+        self.releases = 0
 
     # -- gauges ------------------------------------------------------------
 
@@ -113,6 +118,7 @@ class PageAllocator:
             pid = self._free.pop()
             self.ref[pid] = 1
             got.append(pid)
+        self.allocs += len(got)
         self.peak_used = max(self.peak_used, self.used_pages())
         return got
 
@@ -128,6 +134,7 @@ class PageAllocator:
             return
         if self.ref[pid] <= 0:
             raise RuntimeError(f"release of free page {pid}")
+        self.releases += 1
         self.ref[pid] -= 1
         if self.ref[pid] == 0:
             # a cached page's cache hold is one of its refs, so reaching
