@@ -1,0 +1,330 @@
+"""HTTP serving frontend benchmark: wire-level bit-identity, sustained
+req/s + TTFT under the seeded Poisson trace vs the cooperative driver,
+and two-tenant DRR fairness under a greedy flood.
+
+Three sections, one JSON, all over real loopback sockets:
+
+  * **identity** — the same seeded prompt set served three ways at
+    temperature 0: cooperative in-process ``submit()`` (the oracle), HTTP
+    non-streaming, HTTP SSE streaming. Tokens must be bit-identical
+    (asserted): the driver thread, the fair scheduler, and the HTTP/SSE
+    layers may change *when* a request runs, never *what* it generates.
+  * **throughput** — the shared seeded Poisson trace
+    (``benchmarks.common``) replayed over HTTP by concurrent client
+    threads (one connection per request, SSE consumption, wall-clock
+    TTFT measured at the client) vs the identical trace driven
+    cooperatively in-process: sustained req/s, p50/p99 TTFT, and the
+    HTTP-over-cooperative ratios. The wire path pays sockets + JSON +
+    thread hops; this section is what keeps that tax measured.
+  * **fairness** — a greedy tenant floods a burst while a polite tenant
+    trickles in behind it, run twice: per-tenant DRR (quantum small
+    enough to interleave) vs everything in one FIFO queue. Records the
+    polite tenant's p99 TTFT both ways and asserts DRR keeps it below
+    the FIFO value — starvation-freedom: a flood bounds only its own
+    latency.
+
+``PYTHONPATH=src python benchmarks/bench_http.py [--quick]``
+
+Writes benchmarks/results/BENCH_http.json and mirrors it to
+BENCH_http.json at the repo root.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+import threading
+import time
+import urllib.request
+from pathlib import Path
+
+import jax
+import numpy as np
+
+sys.path.insert(0, str(Path(__file__).resolve().parents[1]))  # script mode
+
+from benchmarks.common import (drive_poisson, poisson_schedule, save_result,
+                               trace_prompts)
+from repro import configs
+from repro.core.ptqtp import PTQTPConfig
+from repro.core.quantize_model import quantize_tree
+from repro.models import init_params
+from repro.serving import (EngineConfig, SamplingParams, ServingEngine)
+from repro.serving.frontend import (EngineDriver, FairScheduler,
+                                    ThreadedHttpServer)
+
+ROOT = Path(__file__).resolve().parents[1]
+
+ECFG = dict(max_slots=2, capacity=64, decode_chunk=4, prefill_chunk=16)
+
+
+# ---------------------------------------------------------------------------
+# minimal stdlib HTTP client (what the bench "users" run)
+# ---------------------------------------------------------------------------
+
+def _request(base, prompt, *, max_new, seed, tenant="", stream=True,
+             timeout=300.0):
+    """One completion over the wire. Returns a dict with the token ids,
+    the terminal result, and client-side wall timings (t0 → first token
+    = the TTFT a real user would see, including connect + serialize)."""
+    body = json.dumps({
+        "prompt": list(prompt), "stream": stream, "max_new_tokens": max_new,
+        "seed": seed, "tenant": tenant}).encode()
+    req = urllib.request.Request(
+        base + "/v1/completions", data=body,
+        headers={"Content-Type": "application/json"})
+    tokens, result, t_first = [], None, None
+    t0 = time.perf_counter()
+    try:
+        with urllib.request.urlopen(req, timeout=timeout) as resp:
+            if stream:
+                for raw in resp:
+                    line = raw.decode("utf-8").strip()
+                    if not line.startswith("data: ") \
+                            or line == "data: [DONE]":
+                        continue
+                    ev = json.loads(line[len("data: "):])
+                    if "token" in ev:
+                        if t_first is None:
+                            t_first = time.perf_counter()
+                        tokens.append(ev["token"])
+                    else:
+                        result = ev
+            else:
+                result = json.loads(resp.read())
+                tokens = result["tokens"]
+                t_first = time.perf_counter()
+            status = resp.status
+    except urllib.error.HTTPError as e:  # 429/504/500 mapped outcomes
+        result = json.loads(e.read())
+        status = e.code
+    t_done = time.perf_counter()
+    return {
+        "tokens": tuple(tokens), "result": result, "status": status,
+        "ttft_s": (t_first - t0) if t_first is not None else 0.0,
+        "wall_s": t_done - t0,
+    }
+
+
+def _serve(eng, **fair_kw):
+    """Fresh driver + HTTP server over a (pre-warmed) engine — one per
+    section, so scheduler state never leaks between measurements while
+    the engine's compile caches stay hot across them."""
+    driver = EngineDriver(eng, fairness=FairScheduler(**fair_kw)).start()
+    srv = ThreadedHttpServer(driver).start()
+    return driver, srv, f"http://{srv.host}:{srv.port}"
+
+
+def _shutdown(driver, srv):
+    srv.stop()
+    assert driver.drain(timeout=300.0), "driver failed to drain"
+    driver.close()
+
+
+# ---------------------------------------------------------------------------
+# identity: wire == in-process, bit for bit
+# ---------------------------------------------------------------------------
+
+def _bench_identity(rows, log, ref_eng, http_eng, quick):
+    n_req = 4 if quick else 8
+    max_new = 4 if quick else 8
+    prompts = trace_prompts(n_req, quick, seed=13)
+
+    refs = [ref_eng.submit(p, SamplingParams(max_new_tokens=max_new, seed=i))
+            for i, p in enumerate(prompts)]
+    ref_eng.run()
+    ref_tokens = [tuple(h.output) for h in refs]
+
+    driver, srv, base = _serve(http_eng)
+    unary = [_request(base, p, max_new=max_new, seed=i, stream=False)
+             for i, p in enumerate(prompts)]
+    sse = [_request(base, p, max_new=max_new, seed=i, stream=True)
+           for i, p in enumerate(prompts)]
+    _shutdown(driver, srv)
+
+    unary_ok = all(r["tokens"] == t for r, t in zip(unary, ref_tokens))
+    sse_ok = all(r["tokens"] == t for r, t in zip(sse, ref_tokens))
+    assert unary_ok and sse_ok, "HTTP tokens diverge from in-process submit"
+    rows["identity_n_requests"] = n_req
+    rows["identity_unary_bit_identical"] = unary_ok
+    rows["identity_sse_bit_identical"] = sse_ok
+    for k in ("identity_unary_bit_identical", "identity_sse_bit_identical"):
+        log(f"bench_http,{k},{rows[k]}")
+
+
+# ---------------------------------------------------------------------------
+# throughput: the seeded Poisson trace over sockets vs in-process
+# ---------------------------------------------------------------------------
+
+def _bench_throughput(rows, log, ref_eng, http_eng, quick):
+    n_req = 10 if quick else 32
+    max_new = 4 if quick else 8
+    lam = 3.0
+    tick_s = 0.05
+    prompts = trace_prompts(n_req, quick, seed=7)
+
+    # cooperative baseline: same prompts, same Poisson seed, driven
+    # in-process (engine-clock TTFTs)
+    t0 = time.perf_counter()
+    handles, _depth = drive_poisson(ref_eng, prompts, max_new, lam, seed=11)
+    coop_wall = time.perf_counter() - t0
+    coop_ttft = [h.t_first - h.t_submit for h in handles if h.t_first]
+
+    # HTTP replay: the same arrival counts, one wall tick per engine step
+    # slot, each request on its own thread + connection, SSE-consumed
+    driver, srv, base = _serve(http_eng)
+    outs = [None] * n_req
+    threads = []
+
+    def fire(i):
+        outs[i] = _request(base, prompts[i], max_new=max_new, seed=i)
+
+    t0 = time.perf_counter()
+    i = 0
+    for tick, count in enumerate(poisson_schedule(n_req, lam, seed=11)):
+        lag = t0 + tick * tick_s - time.perf_counter()
+        if lag > 0:
+            time.sleep(lag)
+        for _ in range(count):
+            th = threading.Thread(target=fire, args=(i,))
+            th.start()
+            threads.append(th)
+            i += 1
+    for th in threads:
+        th.join(timeout=600.0)
+    http_wall = time.perf_counter() - t0
+    _shutdown(driver, srv)
+
+    assert all(o is not None for o in outs), "HTTP client thread hung"
+    done = [o for o in outs if o["result"] is not None
+            and o["result"].get("finish_reason") == "length"]
+    assert len(done) == n_req, [o["result"] for o in outs]
+    http_ttft = [o["ttft_s"] for o in outs if o["ttft_s"] > 0]
+
+    def pct(xs, q):
+        return 1e3 * float(np.percentile(xs, q)) if xs else 0.0
+
+    rows["throughput_n_requests"] = n_req
+    rows["throughput_lam_per_tick"] = lam
+    rows["throughput_tick_s"] = tick_s
+    rows["http_req_per_s"] = n_req / http_wall
+    rows["coop_req_per_s"] = n_req / coop_wall
+    rows["http_p50_ttft_ms"] = pct(http_ttft, 50)
+    rows["http_p99_ttft_ms"] = pct(http_ttft, 99)
+    rows["coop_p50_ttft_ms"] = pct(coop_ttft, 50)
+    rows["coop_p99_ttft_ms"] = pct(coop_ttft, 99)
+    rows["http_over_coop_p99_ttft"] = (rows["http_p99_ttft_ms"]
+                                       / max(rows["coop_p99_ttft_ms"], 1e-9))
+    for k in ("http_req_per_s", "coop_req_per_s", "http_p50_ttft_ms",
+              "http_p99_ttft_ms", "coop_p50_ttft_ms", "coop_p99_ttft_ms"):
+        log(f"bench_http,{k},{rows[k]:.3f}")
+
+
+# ---------------------------------------------------------------------------
+# fairness: greedy flood vs polite trickle, DRR vs one FIFO queue
+# ---------------------------------------------------------------------------
+
+def _run_flood(http_eng, quick, *, fair):
+    n_flood = 8 if quick else 16
+    n_polite = 3 if quick else 4
+    max_new = 24 if quick else 48
+    rng = np.random.default_rng(23)
+    flood_prompts = [rng.integers(1, 500, size=8).tolist()
+                     for _ in range(n_flood)]
+    polite_prompts = [rng.integers(1, 500, size=8).tolist()
+                      for _ in range(n_polite)]
+    # under `fair` the two tenants get separate DRR queues; the baseline
+    # collapses everyone into the anonymous tenant = one FIFO queue
+    g_tenant, p_tenant = ("greedy", "polite") if fair else ("", "")
+    driver, srv, base = _serve(http_eng, quantum=64)
+
+    outs_flood = [None] * n_flood
+    outs_polite = [None] * n_polite
+    threads = []
+
+    def fire(outs, i, prompt, tenant, seed):
+        outs[i] = _request(base, prompt, max_new=max_new, seed=seed,
+                           tenant=tenant)
+
+    # the greedy tenant dumps its whole burst first ...
+    for i, p in enumerate(flood_prompts):
+        th = threading.Thread(target=fire,
+                              args=(outs_flood, i, p, g_tenant, i))
+        th.start()
+        threads.append(th)
+    time.sleep(0.3)  # ... the polite tenant arrives strictly behind it
+    for i, p in enumerate(polite_prompts):
+        th = threading.Thread(target=fire,
+                              args=(outs_polite, i, p, p_tenant, 100 + i))
+        th.start()
+        threads.append(th)
+    for th in threads:
+        th.join(timeout=600.0)
+    _shutdown(driver, srv)
+    assert all(o is not None for o in outs_flood + outs_polite)
+    assert all(o["result"].get("finish_reason") == "length"
+               for o in outs_flood + outs_polite)
+    return {
+        "polite_ttft_ms": [1e3 * o["ttft_s"] for o in outs_polite],
+        "flood_ttft_ms": [1e3 * o["ttft_s"] for o in outs_flood],
+        "n_flood": n_flood, "n_polite": n_polite,
+    }
+
+
+def _bench_fairness(rows, log, http_eng, quick):
+    drr = _run_flood(http_eng, quick, fair=True)
+    fifo = _run_flood(http_eng, quick, fair=False)
+    p99 = lambda xs: float(np.percentile(xs, 99))
+    rows["fairness_n_flood"] = drr["n_flood"]
+    rows["fairness_n_polite"] = drr["n_polite"]
+    rows["fairness_polite_p99_ttft_ms_drr"] = p99(drr["polite_ttft_ms"])
+    rows["fairness_polite_p99_ttft_ms_fifo"] = p99(fifo["polite_ttft_ms"])
+    rows["fairness_flood_p99_ttft_ms_drr"] = p99(drr["flood_ttft_ms"])
+    rows["fairness_flood_p99_ttft_ms_fifo"] = p99(fifo["flood_ttft_ms"])
+    rows["fairness_polite_speedup"] = (
+        rows["fairness_polite_p99_ttft_ms_fifo"]
+        / max(rows["fairness_polite_p99_ttft_ms_drr"], 1e-9))
+    # starvation-freedom: behind a flood, DRR must serve the polite tenant
+    # no later than the single FIFO queue would (in practice: much earlier,
+    # because it only waits out the flood's in-flight slots, not its queue)
+    assert rows["fairness_polite_p99_ttft_ms_drr"] \
+        <= rows["fairness_polite_p99_ttft_ms_fifo"], \
+        "DRR starved the polite tenant worse than FIFO"
+    for k in ("fairness_polite_p99_ttft_ms_drr",
+              "fairness_polite_p99_ttft_ms_fifo",
+              "fairness_polite_speedup"):
+        log(f"bench_http,{k},{rows[k]:.3f}")
+
+
+def run(log=print, quick=False):
+    rows = {}
+    cfg = configs.get_smoke_config("qwen2-1.5b")
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    qparams, _ = quantize_tree(params, PTQTPConfig(group_size=32, t_max=5))
+
+    # two engines, warmed once: compile caches are per-engine, so every
+    # measured section reuses these (fresh drivers per section) and no
+    # TTFT pays jit compile time
+    ref_eng = ServingEngine(qparams, cfg, EngineConfig(**ECFG))
+    ref_eng.warmup()
+    http_eng = ServingEngine(qparams, cfg, EngineConfig(**ECFG))
+    http_eng.warmup()
+
+    _bench_identity(rows, log, ref_eng, http_eng, quick)
+    _bench_throughput(rows, log, ref_eng, http_eng, quick)
+    _bench_fairness(rows, log, http_eng, quick)
+    rows["headline_http_req_per_s"] = rows["http_req_per_s"]
+    rows["headline_fairness_polite_speedup"] = rows["fairness_polite_speedup"]
+    save_result("BENCH_http", rows)
+    (ROOT / "BENCH_http.json").write_text(
+        json.dumps(rows, indent=1, default=float))
+    return rows
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--quick", action="store_true",
+                    help="CI smoke sizes (seconds, not minutes)")
+    args = ap.parse_args()
+    run(quick=args.quick)

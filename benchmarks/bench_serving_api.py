@@ -52,7 +52,7 @@ import numpy as np
 
 sys.path.insert(0, str(Path(__file__).resolve().parents[1]))  # script mode
 
-from benchmarks.common import save_result
+from benchmarks.common import drive_poisson, save_result, trace_prompts
 from repro import configs
 from repro.core.ptqtp import PTQTPConfig
 from repro.core.quantize_model import quantize_tree
@@ -62,11 +62,7 @@ from repro.serving import (EngineConfig, SamplingParams, SerialAdmitEngine,
 
 ROOT = Path(__file__).resolve().parents[1]
 
-
-def _prompts(n, quick, seed=0):
-    rng = np.random.default_rng(seed)
-    lens = rng.integers(2, 12 if quick else 40, size=n)
-    return [rng.integers(1, 500, size=int(l)).tolist() for l in lens]
+_prompts = trace_prompts  # shared seeded trace (benchmarks.common)
 
 
 # ---------------------------------------------------------------------------
@@ -207,22 +203,10 @@ def _bench_determinism(rows, log, params, cfg, quick):
 # ---------------------------------------------------------------------------
 
 def _drive_poisson(params, cfg, ecfg, prompts, max_new, lam, seed):
-    """Offer ``prompts`` as a Poisson arrival trace (~``lam`` submits per
-    engine step) and drive to drain. Returns (handles, max queue depth)."""
-    rng = np.random.default_rng(seed)
+    """Build an engine and replay the shared seeded Poisson trace
+    (``benchmarks.common.drive_poisson``) to drain."""
     eng = ServingEngine(params, cfg, ecfg)
-    handles, i, max_depth = [], 0, 0
-    while i < len(prompts) or eng.queue \
-            or any(s is not None for s in eng.slots):
-        for _ in range(int(rng.poisson(lam))):
-            if i >= len(prompts):
-                break
-            handles.append(eng.submit(
-                prompts[i], SamplingParams(max_new_tokens=max_new, seed=i)))
-            i += 1
-        eng.step()
-        max_depth = max(max_depth, len(eng.queue))
-    assert all(h.done for h in handles)  # nothing dangles under overload
+    handles, max_depth = drive_poisson(eng, prompts, max_new, lam, seed)
     return eng, handles, max_depth
 
 

@@ -127,3 +127,52 @@ class Timer:
 
     def __exit__(self, *exc):
         self.seconds = time.perf_counter() - self.t0
+
+
+# ---------------------------------------------------------------------------
+# seeded load traces (shared by bench_serving_api and bench_http so the
+# in-process and over-the-wire runs replay the *same* offered workload)
+# ---------------------------------------------------------------------------
+
+def trace_prompts(n, quick, seed=0):
+    """Seeded synthetic prompt set: n token-id lists with novel lengths
+    (2..40, or 2..12 under --quick) drawn from a 500-token vocabulary."""
+    rng = np.random.default_rng(seed)
+    lens = rng.integers(2, 12 if quick else 40, size=n)
+    return [rng.integers(1, 500, size=int(l)).tolist() for l in lens]
+
+
+def poisson_schedule(n, lam, seed):
+    """Poisson arrival counts per tick: how many of the n requests to
+    submit at each engine step (or wall tick, over HTTP). Sums to n."""
+    rng = np.random.default_rng(seed)
+    counts, left = [], n
+    while left > 0:
+        k = min(int(rng.poisson(lam)), left)
+        counts.append(k)
+        left -= k
+    return counts
+
+
+def drive_poisson(eng, prompts, max_new, lam, seed, params_fn=None):
+    """Offer ``prompts`` to an engine as a Poisson arrival trace (~``lam``
+    submits per engine step) and drive to drain. Returns (handles, max
+    queue depth). ``params_fn(i)`` overrides the per-request
+    SamplingParams (default: greedy, max_new, seed=i)."""
+    from repro.serving import SamplingParams
+
+    rng = np.random.default_rng(seed)
+    handles, i, max_depth = [], 0, 0
+    while i < len(prompts) or eng.queue \
+            or any(s is not None for s in eng.slots):
+        for _ in range(int(rng.poisson(lam))):
+            if i >= len(prompts):
+                break
+            sp = params_fn(i) if params_fn is not None else SamplingParams(
+                max_new_tokens=max_new, seed=i)
+            handles.append(eng.submit(prompts[i], sp))
+            i += 1
+        eng.step()
+        max_depth = max(max_depth, len(eng.queue))
+    assert all(h.done for h in handles)  # nothing dangles under load
+    return handles, max_depth

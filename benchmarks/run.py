@@ -14,10 +14,11 @@ import time
 import traceback
 
 from benchmarks import (bench_artifacts, bench_condition, bench_decode,
-                        bench_groupwise, bench_iterations, bench_latency,
-                        bench_memory, bench_observability, bench_paged_kv,
-                        bench_perplexity, bench_prefill, bench_roofline,
-                        bench_runtime, bench_serving_api, bench_tolerance)
+                        bench_groupwise, bench_http, bench_iterations,
+                        bench_latency, bench_memory, bench_observability,
+                        bench_paged_kv, bench_perplexity, bench_prefill,
+                        bench_roofline, bench_runtime, bench_serving_api,
+                        bench_tolerance)
 from benchmarks.common import RESULTS
 
 SUITES = {
@@ -31,6 +32,7 @@ SUITES = {
     "serving_api": bench_serving_api.run,  # v1 streaming TTFT + cancel churn
     "paged_kv": bench_paged_kv.run,        # paged pool + COW prefix reuse
     "observability": bench_observability.run,  # v1.3 tracing overhead gate
+    "http": bench_http.run,                # v1.4 wire identity + DRR fairness
 
     "iterations": bench_iterations.run,    # Fig. 3
     "tolerance": bench_tolerance.run,      # Fig. 4

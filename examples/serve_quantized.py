@@ -10,13 +10,17 @@ with the quantized model persisted as a versioned on-disk artifact
 (quantize once) that server processes memory-map at boot (serve many,
 without ever touching the FP weights again). Serving goes through the v1
 request API: ``submit(prompt, SamplingParams(...)) -> RequestHandle``,
-with the first request consumed as a token stream.
+with the first request consumed as a token stream — and then once more
+over HTTP (v1.4): the same engine behind an ``EngineDriver`` thread and
+the asyncio SSE endpoint, consumed with nothing but ``urllib``.
 """
 
 import argparse
+import json
 import sys
 import tempfile
 import time
+import urllib.request
 from pathlib import Path
 
 sys.path.insert(0, str(Path(__file__).resolve().parents[1]))  # benchmarks/
@@ -26,6 +30,31 @@ from repro.artifacts import load_artifact, write_artifact
 from repro.core.ptqtp import PTQTPConfig
 from repro.data.tokenizer import ByteTokenizer
 from repro.serving import EngineConfig, SamplingParams, ServingEngine
+from repro.serving.frontend import EngineDriver, ThreadedHttpServer
+
+
+def sse_completion(base_url, prompt_ids, max_new=24, tenant="", seed=0):
+    """Consume ``POST /v1/completions`` as an SSE stream with the stdlib:
+    one ``data:`` JSON event per token, a terminal result event, then
+    ``data: [DONE]``. Returns (token ids, result dict)."""
+    body = json.dumps({"prompt": prompt_ids, "stream": True,
+                       "max_new_tokens": max_new, "tenant": tenant,
+                       "seed": seed}).encode()
+    req = urllib.request.Request(
+        base_url + "/v1/completions", data=body,
+        headers={"Content-Type": "application/json"})
+    tokens, result = [], None
+    with urllib.request.urlopen(req) as resp:
+        for raw in resp:          # SSE events arrive one line at a time
+            line = raw.decode("utf-8").strip()
+            if not line.startswith("data: ") or line == "data: [DONE]":
+                continue
+            event = json.loads(line[len("data: "):])
+            if "token" in event:
+                tokens.append(event["token"])
+            else:                 # the terminal RequestResult summary
+                result = event
+    return tokens, result
 
 PROMPTS = [
     "12 plus 30 equals",
@@ -96,6 +125,30 @@ def main():
         for r in sorted(results, key=lambda r: r.uid)[1:3]:
             text = tok.decode(list(r.tokens)).split(".")[0]
             print(f"      {PROMPTS[r.uid]!r} -> {text!r}")
+
+    # --- 4. the same artifact over HTTP (Serving frontend, v1.4) ----------
+    # one EngineDriver thread owns the engine; the asyncio frontend streams
+    # SSE. Tokens over the wire are bit-identical to in-process submit()
+    # at temperature 0 — asserted here against the last in-process run.
+    eng = ServingEngine(qparams, cfg, EngineConfig(max_slots=4, capacity=128,
+                                                   prefill_chunk=32))
+    driver = EngineDriver(eng).start()
+    srv = ThreadedHttpServer(driver).start()
+    base = f"http://{srv.host}:{srv.port}"
+    streamed_ids, result = sse_completion(
+        base, tok.encode(PROMPTS[0], eos=False), max_new=args.max_new,
+        tenant="example", seed=0)
+    assert tuple(streamed_ids) == results[0].tokens  # wire == in-process
+    with urllib.request.urlopen(base + "/healthz") as resp:
+        health = json.loads(resp.read())
+    print(f"[4] http: {base} streamed {len(streamed_ids)} tokens "
+          f"(finish_reason={result['finish_reason']}, bit-identical to "
+          f"in-process); healthz ok={health['ok']}")
+    print(f"      {PROMPTS[0]!r} ~> "
+          f"{tok.decode(streamed_ids).split('.')[0]!r} (SSE)")
+    srv.stop()
+    driver.drain(timeout=60)
+    driver.close()
 
 
 if __name__ == "__main__":

@@ -47,12 +47,25 @@ registry snapshot to the JSONL stream. The shutdown summary prints a
 per-request latency table (queue wait, TTFT, total) and the non-zero
 registry metrics. All of it is zero-perturbation: tokens are
 bit-identical with tracing on, off, or unconfigured.
+
+HTTP frontend (v1.4): ``--http HOST:PORT`` serves network traffic
+instead of the built-in prompt list — one ``EngineDriver`` thread owns
+the engine, the asyncio frontend exposes ``POST /v1/completions`` (SSE
+streaming, cancel-on-disconnect), ``GET /healthz``, and ``GET
+/metrics``, and admission runs deficit-weighted round-robin across
+tenants (``--tenant-quantum`` / ``--tenant-weights`` /
+``--max-pending`` / ``--tenant-max-resident-tokens``). Either mode
+shuts down gracefully on SIGINT/SIGTERM: stop admitting, finish (or
+deadline-out) residents, flush ``--trace-out`` / ``--metrics-out``, and
+print the drain tables; a second signal force-quits.
 """
 
 from __future__ import annotations
 
 import argparse
 import contextlib
+import signal
+import threading
 import time
 from pathlib import Path
 
@@ -84,6 +97,123 @@ def _boot_phase(obs, boot, name, **span_args):
     with obs.span(name, track=TRACK_BOOT, cat="boot", args=span_args or None):
         yield
     boot[name] = time.time() - t0
+
+
+def _install_drain_signals(on_signal):
+    """SIGINT/SIGTERM → graceful drain (``on_signal()``); a second signal
+    force-quits. Returns the previous handlers."""
+    fired = {"n": 0}
+
+    def _handler(signum, _frame):
+        fired["n"] += 1
+        if fired["n"] > 1:
+            raise SystemExit(128 + signum)  # operator really means it
+        print(f"[serve] {signal.Signals(signum).name}: draining "
+              "(signal again to force quit)", flush=True)
+        on_signal()
+
+    return [(s, signal.signal(s, _handler))
+            for s in (signal.SIGINT, signal.SIGTERM)]
+
+
+def _drain_report(results, engine, tok, args, dt, jsonl_f, jsonl_path):
+    """The shutdown tables + file flushes, shared by the cooperative and
+    HTTP paths (and by signal-triggered drains): per-request latency,
+    registry summary, health line, then --metrics-out/--trace-out."""
+    reg = engine.obs.registry
+    n_tok = sum(len(r.tokens) for r in results)
+    stats = engine.compile_stats()
+    print(f"[serve] {len(results)} requests, {n_tok} tokens in {dt:.2f}s "
+          f"({n_tok / max(dt, 1e-9):.1f} tok/s, {engine.steps} decode steps, "
+          f"{engine.prefill_steps} prefill steps)")
+    ttft = sorted(1e3 * r.ttft for r in results if r.t_first)
+    if ttft:
+        print(f"[serve] ttft ms: median {ttft[len(ttft) // 2]:.1f} "
+              f"max {ttft[-1]:.1f}; compiles: {stats['n_prefill_compiles']} "
+              f"prefill {sorted(stats['prefill_bucket_lengths'])} "
+              f"+ {stats['n_decode_compiles']} decode "
+              f"{stats['decode_chunk_lengths']}")
+    for r in sorted(results, key=lambda r: r.uid)[:4]:
+        print(f"  [{r.uid}] ({r.finish_reason}) -> "
+              f"{tok.decode(list(r.tokens))!r}")
+
+    # per-request latency table from the handles' own timestamps (the same
+    # numbers the trace spans are built from, so the two always reconcile)
+    print("[serve] request latency (ms):")
+    print(f"  {'uid':>4} {'reason':>9} {'tok':>4} {'queue':>8} "
+          f"{'ttft':>8} {'total':>8}")
+    for r in sorted(results, key=lambda r: r.uid):
+        total = (r.t_done - r.t_submit) if r.t_done else 0.0
+        print(f"  {r.uid:>4} {r.finish_reason:>9} {len(r.tokens):>4} "
+              f"{1e3 * r.queue_wait:>8.1f} {1e3 * r.ttft:>8.1f} "
+              f"{1e3 * total:>8.1f}")
+    print("[serve] metrics summary:")
+    for line in reg.summary_table().splitlines():
+        print(f"  {line}")
+    print(f"[serve] health: {engine.health().summary()}")
+
+    if jsonl_f is not None:
+        jsonl_f.write(reg.jsonl_line() + "\n")  # final snapshot
+        jsonl_f.close()
+        print(f"[serve] metrics snapshots -> {jsonl_path}")
+    if args.metrics_out:
+        Path(args.metrics_out).write_text(reg.render_prometheus())
+        print(f"[serve] metrics -> {args.metrics_out}")
+    if args.trace_out:
+        engine.obs.trace.write(args.trace_out)
+        print(f"[serve] trace ({len(engine.obs.trace)} events) -> "
+              f"{args.trace_out}")
+
+
+def _serve_http(engine, tok, args, stop):
+    """``--http`` mode: hand the engine to an ``EngineDriver`` (the only
+    thread that touches it from here on), serve the v1.4 endpoints, block
+    until SIGINT/SIGTERM, then drain gracefully and print the same
+    shutdown report as the cooperative path."""
+    from repro.serving.frontend import (EngineDriver, FairScheduler,
+                                        ThreadedHttpServer)
+
+    host, _, port = args.http.rpartition(":")
+    host = host or "127.0.0.1"
+    weights = {}
+    for pair in (args.tenant_weights or "").split(","):
+        if pair.strip():
+            name, _, w = pair.partition("=")
+            weights[name.strip()] = float(w or 1.0)
+    fair = FairScheduler(
+        quantum=args.tenant_quantum, weights=weights,
+        max_pending=args.max_pending,
+        tenant_max_resident_tokens=args.tenant_max_resident_tokens)
+    driver = EngineDriver(engine, fairness=fair).start()
+    srv = ThreadedHttpServer(driver, host, int(port)).start()
+    print(f"[serve] http: listening on http://{srv.host}:{srv.port} "
+          "(POST /v1/completions, GET /healthz, GET /metrics)", flush=True)
+
+    t0 = time.time()
+    interval = max(args.metrics_interval, 0)
+    jsonl_path = (Path(args.metrics_out).with_suffix(".jsonl")
+                  if args.metrics_out and interval else None)
+    jsonl_f = open(jsonl_path, "w") if jsonl_path else None
+    # in HTTP mode --metrics-interval is seconds between digests (there is
+    # no cooperative step loop to count); engine reads go through the
+    # driver so they can never race a step
+    while not stop.wait(interval if interval else None):
+        print(driver.call(lambda eng: _stats_line(eng, t0)), flush=True)
+        if jsonl_f is not None:
+            jsonl_f.write(driver.call(
+                lambda eng: eng.obs.registry.jsonl_line()) + "\n")
+
+    srv.stop()                      # stop accepting connections first,
+    driver.drain(timeout=300.0)     # then let offered work finish
+    driver.close()
+    dt = time.time() - t0
+    results = driver.results()
+    front = driver.stats()
+    print(f"[serve] drained: {front['retired']} retired "
+          f"({front['frontend_sheds']} frontend sheds, "
+          f"{front['frontend_cancelled']} cancelled pre-admission)")
+    _drain_report(results, engine, tok, args, dt, jsonl_f, jsonl_path)
+    return results
 
 
 def _stats_line(engine, t_serve0):
@@ -201,7 +331,29 @@ def main(argv=None):
     ap.add_argument("--metrics-interval", type=int, default=0, metavar="N",
                     help="print a one-line stats digest (and append a "
                          "registry snapshot to the JSONL stream) every N "
-                         "engine steps while draining (0 = off)")
+                         "engine steps while draining (0 = off); in --http "
+                         "mode, every N seconds")
+    ap.add_argument("--http", default=None, metavar="HOST:PORT",
+                    help="serve over HTTP instead of the built-in prompt "
+                         "list: a single EngineDriver thread owns the "
+                         "engine and an asyncio frontend exposes POST "
+                         "/v1/completions (SSE streaming), GET /healthz, "
+                         "GET /metrics; SIGINT/SIGTERM drains gracefully. "
+                         "':0' picks a free port")
+    ap.add_argument("--tenant-quantum", type=int, default=256, metavar="TOK",
+                    help="DRR deficit replenished per tenant per round, in "
+                         "committed tokens (--http mode fairness)")
+    ap.add_argument("--tenant-weights", default=None, metavar="T=W,...",
+                    help="per-tenant DRR weight overrides, e.g. "
+                         "'paid=4,free=1' (default weight 1.0)")
+    ap.add_argument("--max-pending", type=int, default=None, metavar="N",
+                    help="frontend cap on requests waiting in the fair "
+                         "queue across all tenants; past it submits shed "
+                         "with HTTP 429 (--http mode)")
+    ap.add_argument("--tenant-max-resident-tokens", type=int, default=None,
+                    metavar="N",
+                    help="per-tenant cap on committed tokens concurrently "
+                         "inside the engine (--http mode fairness)")
     args = ap.parse_args(argv)
 
     if args.kv_layout == "paged":
@@ -303,7 +455,18 @@ def main(argv=None):
         print(f"[serve] warmup: {engine.compile_stats()['n_prefill_compiles']}"
               f" prefill programs in {boot['warmup']:.1f}s")
     breakdown = " ".join(f"{k}={v:.2f}s" for k, v in boot.items())
-    print(f"[serve] boot {time.time() - t_boot:.2f}s ({breakdown})")
+    # graceful drain on SIGINT/SIGTERM, armed before the boot line prints
+    # so an operator (or a supervisor) can signal the moment boot is
+    # announced: stop admitting (cancel what is still queued), finish or
+    # deadline-out residents, then fall through to the normal report +
+    # file flushes instead of dying mid-step
+    draining = threading.Event()
+    _install_drain_signals(draining.set)
+    print(f"[serve] boot {time.time() - t_boot:.2f}s ({breakdown})",
+          flush=True)
+
+    if args.http is not None:
+        return _serve_http(engine, tok, args, stop=draining)
 
     handles = []
     for i in range(args.requests):
@@ -345,6 +508,9 @@ def main(argv=None):
     jsonl_f = open(jsonl_path, "w") if jsonl_path else None
     reg = engine.obs.registry
     while engine.queue or any(s is not None for s in engine.slots):
+        if draining.is_set():
+            for h in list(engine.queue):  # stop admitting: queued work
+                engine.cancel(h)          # never reaches a slot
         engine.step()
         if interval and engine.engine_steps % interval == 0:
             print(_stats_line(engine, t0))
@@ -352,47 +518,11 @@ def main(argv=None):
                 jsonl_f.write(reg.jsonl_line() + "\n")
     results = [h.result() for h in handles]  # all retired; just collects
     dt = time.time() - t0
-
-    n_tok = sum(len(r.tokens) for r in results)
-    ttft = sorted(1e3 * r.ttft for r in results)
-    stats = engine.compile_stats()
-    print(f"[serve] {len(results)} requests, {n_tok} tokens in {dt:.2f}s "
-          f"({n_tok / max(dt, 1e-9):.1f} tok/s, {engine.steps} decode steps, "
-          f"{engine.prefill_steps} prefill steps)")
-    print(f"[serve] ttft ms: median {ttft[len(ttft) // 2]:.1f} "
-          f"max {ttft[-1]:.1f}; compiles: {stats['n_prefill_compiles']} "
-          f"prefill {sorted(stats['prefill_bucket_lengths'])} "
-          f"+ {stats['n_decode_compiles']} decode {stats['decode_chunk_lengths']}")
-    for r in sorted(results, key=lambda r: r.uid)[:4]:
-        print(f"  [{r.uid}] ({r.finish_reason}) -> "
-              f"{tok.decode(list(r.tokens))!r}")
-
-    # per-request latency table from the handles' own timestamps (the same
-    # numbers the trace spans are built from, so the two always reconcile)
-    print("[serve] request latency (ms):")
-    print(f"  {'uid':>4} {'reason':>9} {'tok':>4} {'queue':>8} "
-          f"{'ttft':>8} {'total':>8}")
-    for r in sorted(results, key=lambda r: r.uid):
-        total = (r.t_done - r.t_submit) if r.t_done else 0.0
-        print(f"  {r.uid:>4} {r.finish_reason:>9} {len(r.tokens):>4} "
-              f"{1e3 * r.queue_wait:>8.1f} {1e3 * r.ttft:>8.1f} "
-              f"{1e3 * total:>8.1f}")
-    print("[serve] metrics summary:")
-    for line in reg.summary_table().splitlines():
-        print(f"  {line}")
-    print(f"[serve] health: {engine.health().summary()}")
-
-    if jsonl_f is not None:
-        jsonl_f.write(reg.jsonl_line() + "\n")  # final snapshot
-        jsonl_f.close()
-        print(f"[serve] metrics snapshots -> {jsonl_path}")
-    if args.metrics_out:
-        Path(args.metrics_out).write_text(reg.render_prometheus())
-        print(f"[serve] metrics -> {args.metrics_out}")
-    if args.trace_out:
-        engine.obs.trace.write(args.trace_out)
-        print(f"[serve] trace ({len(engine.obs.trace)} events) -> "
-              f"{args.trace_out}")
+    if draining.is_set():
+        n_cancelled = sum(r.finish_reason == "cancelled" for r in results)
+        print(f"[serve] drained: {len(results) - n_cancelled} finished, "
+              f"{n_cancelled} cancelled in queue")
+    _drain_report(results, engine, tok, args, dt, jsonl_f, jsonl_path)
     return results
 
 

@@ -143,6 +143,55 @@ now versioned (``runtime.monitor.HEARTBEAT_SCHEMA``) and
 ``HealthSnapshot.beat(..., metrics=engine.obs.digest())`` folds a metrics
 digest into the heartbeat file a ``StragglerDetector`` reads.
 
+Concurrent frontend (v1.4)
+--------------------------
+``repro.serving.frontend`` is the concurrent serving surface; the
+engines themselves stay single-threaded and the cooperative style below
+remains the in-process baseline (and the bit-identity oracle).
+
+* **Driver threading rules.** ``EngineDriver(engine).start()`` spawns
+  the one thread that owns the device: after ``start()``, no other
+  thread may call any engine method. Clients use the driver's
+  thread-safe ``submit(prompt, params, tenant=...)`` / ``cancel`` and
+  the returned ``DriverHandle`` — same reading surface as
+  ``RequestHandle`` but passive: ``tokens()`` reads a per-request queue
+  fed in the engine step that produced each token (stream TTFT is
+  engine TTFT), ``result()`` waits instead of stepping, and
+  ``subscribe(fn)`` replays history then attaches (no token can be
+  lost to the submit/attach race). Engine reads while the driver runs
+  go through ``driver.call(fn)``, which executes ``fn(engine)`` on the
+  driver thread between steps. ``drain()`` stops intake (waiting
+  requests shed ``"rejected"``; offered work finishes or deadlines
+  out); ``close()`` cancels the rest and joins. Determinism is
+  unchanged — outputs through the driver are bit-identical to
+  cooperative ``submit()``, any thread interleaving.
+* **The tenant field.** ``SamplingParams.tenant`` (default ``""``) is a
+  scheduling identity, not a sampling input: the determinism contract
+  is over (params, prompt, the sampling fields) and ignores it. The
+  driver's ``FairScheduler`` holds accepted requests in per-tenant
+  queues under deficit-weighted round-robin (quantum/weights in
+  committed tokens — the v1.1 unit) and offers the engine at most its
+  free admissible slots, so DRR order *is* admission order while the
+  engine's internal FIFO (and the v1.1/v1.2 caps and page budgets,
+  which still apply to every offer) stays shallow. Per-tenant
+  ``tenant_max_resident_tokens`` caps a tenant's committed tokens in
+  the engine; a capped tenant skips its turn without banking deficit,
+  so a flooding tenant bounds no one's admission latency but its own.
+* **HTTP status mapping.** The asyncio frontend (``HttpServer``;
+  ``serve.py --http HOST:PORT``) maps terminal outcomes known before
+  the response body starts: ``"rejected"`` → 429 with ``Retry-After``,
+  ``"timeout"`` → 504, ``"error"`` → 500; malformed input → 400. Every
+  ``/v1/completions`` response carries ``X-Request-Id: <uid>`` (the id
+  trace spans are annotated with). ``POST /v1/completions`` with
+  ``"stream": true`` is SSE — one ``data:`` event per token, a
+  terminal result event, ``data: [DONE]``; client disconnect cancels
+  the request. ``GET /healthz`` is the ``HealthSnapshot`` as JSON;
+  ``GET /metrics`` is ``render_prometheus()`` (plus frontend-only
+  additions ``serving_frontend_shed_total`` /
+  ``serving_frontend_queue_depth``, registered when a driver starts).
+  Once streaming has begun the status is committed; late outcomes
+  arrive in the terminal SSE event instead.
+
 Consumption
 -----------
 ``RequestHandle.tokens()`` — a generator yielding each generated token in
@@ -184,6 +233,8 @@ from repro.serving.api import (FINISH_REASONS, RequestHandle, RequestResult,
 from repro.serving.engine import (EngineConfig, EngineFault,
                                   SerialAdmitEngine, ServingEngine)
 from repro.serving.faults import FaultInjector, FaultPlan, VirtualClock
+from repro.serving.frontend import (DriverHandle, EngineDriver, FairScheduler,
+                                    HttpServer, ThreadedHttpServer)
 from repro.serving.observability import (SERVING_METRICS, MetricsRegistry,
                                          Observability, TraceRecorder)
 from repro.serving.paging import PageAllocator
@@ -196,6 +247,8 @@ __all__ = [
     "ServingEngine", "SerialAdmitEngine", "EngineConfig", "EngineFault",
     "FaultPlan", "FaultInjector", "VirtualClock", "HealthSnapshot",
     "PageAllocator",
+    "EngineDriver", "DriverHandle", "FairScheduler", "HttpServer",
+    "ThreadedHttpServer",
     "Observability", "MetricsRegistry", "TraceRecorder", "SERVING_METRICS",
     "sample_token", "sample_tokens", "sample_tokens_per_request",
     "request_keys", "top_k_top_p_mask",

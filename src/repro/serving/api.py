@@ -68,6 +68,12 @@ class SamplingParams:
         A request that has not produced token 0 when it expires retires
         with ``"timeout"``; once the first token lands this deadline is
         satisfied and only ``deadline_s`` still applies. ``None`` disables.
+      tenant: scheduling identity (v1.4). The fair frontend scheduler
+        (``repro.serving.frontend``) queues and meters admission per
+        tenant; the engine itself ignores it. **Not** a sampling input:
+        the determinism contract is over (prompt, the sampling fields) —
+        two requests differing only in ``tenant`` produce identical
+        output. ``""`` is the anonymous default tenant.
     """
 
     max_new_tokens: int = 16
@@ -78,9 +84,12 @@ class SamplingParams:
     stop: FrozenSet[int] = frozenset()
     deadline_s: Optional[float] = None
     ttft_deadline_s: Optional[float] = None
+    tenant: str = ""
 
     def __post_init__(self):
         object.__setattr__(self, "stop", frozenset(self.stop))
+        if not isinstance(self.tenant, str):
+            raise TypeError("tenant must be a string")
         if self.max_new_tokens < 1:
             raise ValueError("max_new_tokens must be >= 1")
         if self.temperature < 0.0:

@@ -538,6 +538,19 @@ class ServingEngine:
         live = list(self.queue) + [s for s in self.slots if s is not None]
         return sum(self._committed_tokens(h) for h in live)
 
+    @property
+    def clock(self):
+        """The engine's injectable clock (``repro.runtime.clock`` duck type;
+        a ``VirtualClock`` under a fault injector). Frontend layers stamp
+        their timestamps through this so every layer shares one time base."""
+        return self._clock
+
+    def free_admissible_slots(self) -> int:
+        """Slots a new admission could take right now (free and not
+        quarantined) — what the frontend scheduler meters offers against."""
+        return sum(1 for i, s in enumerate(self.slots)
+                   if s is None and i not in self.quarantined)
+
     def _admissible(self, h: RequestHandle) -> bool:
         if self.ecfg.max_queue is not None \
                 and len(self.queue) >= self.ecfg.max_queue:

@@ -1,0 +1,24 @@
+"""``repro.serving.frontend`` — the concurrent serving surface (v1.4).
+
+Three layers over the single-threaded engine:
+
+* :mod:`~repro.serving.frontend.driver` — :class:`EngineDriver`, the one
+  thread that owns the device; thread-safe submit/cancel/stream/call.
+* :mod:`~repro.serving.frontend.fairness` — :class:`FairScheduler`,
+  deficit-weighted round-robin admission across per-tenant queues.
+* :mod:`~repro.serving.frontend.server` — :class:`HttpServer` /
+  :class:`ThreadedHttpServer`, the stdlib-asyncio HTTP + SSE endpoint.
+
+See the v1.4 section of the ``repro.serving`` package docstring for the
+frozen contract (threading rules, tenant field, HTTP status mapping).
+"""
+
+from repro.serving.frontend.driver import DriverHandle, EngineDriver
+from repro.serving.frontend.fairness import FairScheduler
+from repro.serving.frontend.server import (STATUS_BY_REASON, HttpServer,
+                                           ThreadedHttpServer)
+
+__all__ = [
+    "EngineDriver", "DriverHandle", "FairScheduler",
+    "HttpServer", "ThreadedHttpServer", "STATUS_BY_REASON",
+]

@@ -23,3 +23,6 @@ def pytest_addoption(parser):
 
 def pytest_configure(config):
     config.addinivalue_line("markers", "slow: long-running integration test")
+    config.addinivalue_line(
+        "markers", "timeout(seconds): per-test wall cap (enforced by "
+        "pytest-timeout in CI; inert where the plugin is absent)")

@@ -1,0 +1,498 @@
+"""HTTP serving frontend (v1.4): EngineDriver thread-safety, DRR fair
+admission, the asyncio SSE endpoint, and serve.py's graceful shutdown.
+
+The keystone assertion, inherited from the determinism contract: outputs
+are a pure function of (params, prompt, SamplingParams), so tokens
+through the driver — from any number of threads, over any socket — are
+bit-identical to cooperative ``engine.submit``."""
+
+import json
+import os
+import signal
+import socket
+import subprocess
+import sys
+import threading
+import time
+import types
+import urllib.error
+import urllib.request
+from pathlib import Path
+
+import jax
+import pytest
+
+from repro import configs
+from repro.models import init_params
+from repro.serving import (EngineConfig, FINISH_REASONS, FaultInjector,
+                           FaultPlan, SamplingParams, ServingEngine,
+                           VirtualClock)
+from repro.serving.frontend import (EngineDriver, FairScheduler,
+                                    ThreadedHttpServer)
+
+ROOT = Path(__file__).resolve().parents[1]
+
+pytestmark = pytest.mark.timeout(300)  # a deadlocked driver must fail fast
+
+
+def _wait_until(pred, timeout=60.0):
+    deadline = time.monotonic() + timeout
+    while time.monotonic() < deadline:
+        if pred():
+            return True
+        time.sleep(0.005)
+    return False
+
+
+@pytest.fixture(scope="module")
+def small_model():
+    cfg = configs.get_smoke_config("qwen2-1.5b")
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    return cfg, params
+
+
+def _engine(small_model, ecfg=None, plan=None, clock=None):
+    cfg, params = small_model
+    inj = FaultInjector(plan, clock=clock) \
+        if (plan is not None or clock is not None) else None
+    return ServingEngine(params, cfg,
+                         ecfg or EngineConfig(max_slots=2, capacity=64),
+                         injector=inj)
+
+
+# ---------------------------------------------------------------------------
+# FairScheduler: DRR order, weights, caps, no credit banking
+# ---------------------------------------------------------------------------
+
+def _req(tenant="", cost=10):
+    return types.SimpleNamespace(params=types.SimpleNamespace(tenant=tenant),
+                                 cost=cost)
+
+
+def _fs(**kw):
+    kw.setdefault("cost", lambda h: h.cost)
+    return FairScheduler(**kw)
+
+
+class TestFairScheduler:
+    def test_single_tenant_is_fifo(self):
+        fs = _fs(quantum=100)
+        hs = [_req() for _ in range(5)]
+        for h in hs:
+            assert fs.push(h) is None
+        assert [fs.pop() for _ in range(5)] == hs
+        assert fs.pop() is None and len(fs) == 0
+
+    def test_drr_alternates_between_backlogged_tenants(self):
+        """quantum = 2 requests' worth → each visit serves a run of two,
+        then the turn ends: AABB AABB, never an unbounded run (the front
+        tenant must not replenish more than once per ring visit)."""
+        fs = _fs(quantum=20)
+        for _ in range(6):
+            fs.push(_req("A", 10))
+            fs.push(_req("B", 10))
+        order = [fs.pop().params.tenant for _ in range(8)]
+        assert order == ["A", "A", "B", "B", "A", "A", "B", "B"]
+
+    def test_weights_scale_bandwidth(self):
+        fs = _fs(quantum=10, weights={"A": 2.0})
+        for _ in range(6):
+            fs.push(_req("A", 10))
+            fs.push(_req("B", 10))
+        order = [fs.pop().params.tenant for _ in range(6)]
+        assert order == ["A", "A", "B", "A", "A", "B"]
+
+    def test_empty_queue_forfeits_deficit(self):
+        """A tenant that drains loses its credit — idling must not bank
+        bandwidth for a later burst."""
+        fs = _fs(quantum=100)
+        fs.push(_req("A", 10))
+        a = fs.pop()
+        assert fs._tenants["A"].deficit == 0.0  # reset on empty, not 90
+        fs.retire(a)
+        assert "A" not in fs._tenants  # fully idle tenants are dropped
+
+    def test_resident_token_cap_blocks_then_frees(self):
+        fs = _fs(quantum=100, tenant_max_resident_tokens=25)
+        hs = [_req("A", 10) for _ in range(4)]
+        for h in hs:
+            fs.push(h)
+        served = [fs.pop(), fs.pop()]
+        assert served == hs[:2]
+        assert fs.pop() is None            # 20 + 10 > 25: capped
+        assert fs.inflight_by_tenant() == {"A": 20}
+        fs.retire(served[0])               # room frees...
+        assert fs.pop() is hs[2]           # ...and the queue moves again
+
+    def test_capped_tenant_does_not_starve_others(self):
+        fs = _fs(quantum=100, tenant_max_resident_tokens=15)
+        fs.push(_req("A", 10))
+        fs.push(_req("A", 10))
+        fs.push(_req("B", 10))
+        assert fs.pop().params.tenant == "A"
+        assert fs.pop().params.tenant == "B"  # A capped: skipped, no stall
+
+    def test_max_pending_sheds(self):
+        fs = _fs(max_pending=2)
+        assert fs.push(_req()) is None and fs.push(_req()) is None
+        why = fs.push(_req())
+        assert why is not None and "full" in why
+
+    def test_remove_and_drain(self):
+        fs = _fs()
+        a, b = _req("A"), _req("B")
+        fs.push(a)
+        fs.push(b)
+        assert fs.remove(a) and not fs.remove(a)
+        assert fs.drain() == [b] and len(fs) == 0
+
+
+# ---------------------------------------------------------------------------
+# EngineDriver: bit-identity, concurrency under faults, cancel/drain
+# ---------------------------------------------------------------------------
+
+PROMPTS = [[5, 9, 17, 2], [1, 2], [3, 4, 5], [7, 11, 13, 17, 19]]
+
+
+def _coop_reference(small_model, reqs, ecfg=None):
+    """Fault-free cooperative run of (prompt, SamplingParams) pairs →
+    {(prompt, seed): tokens}. One engine: determinism makes co-batching
+    irrelevant."""
+    eng = _engine(small_model, ecfg)
+    hs = [(p, sp, eng.submit(p, sp)) for p, sp in reqs]
+    eng.run()
+    return {(tuple(p), sp.seed): tuple(h.output) for p, sp, h in hs}
+
+
+class TestEngineDriver:
+    def test_bit_identical_to_cooperative(self, small_model):
+        reqs = [(PROMPTS[i], SamplingParams(max_new_tokens=6, seed=i))
+                for i in range(3)]
+        reqs.append((PROMPTS[3], SamplingParams(max_new_tokens=6,
+                                                temperature=0.9, seed=41)))
+        ref = _coop_reference(small_model, reqs)
+        driver = EngineDriver(_engine(small_model)).start()
+        hs = [driver.submit(p, sp) for p, sp in reqs]
+        streamed = list(hs[0].tokens())  # same-step queue consumption
+        for (p, sp), h in zip(reqs, hs):
+            res = h.result(timeout=120)
+            assert res.finish_reason == "length"
+            assert res.tokens == ref[(tuple(p), sp.seed)]
+        assert tuple(streamed) == ref[(tuple(PROMPTS[0]), 0)]
+        assert driver.drain(timeout=60)
+        driver.close()
+
+    def test_many_threads_with_faults_no_deadlock(self, small_model):
+        """12 requests from 6 threads, each consuming its own stream,
+        against an engine with a seeded NaN fault. Gates: every thread
+        joins (no deadlock), every finish_reason is valid, the poisoned
+        uid errors, and every survivor is bit-identical to a fault-free
+        cooperative run."""
+        n_threads, per_thread = 6, 2
+        reqs = [(PROMPTS[i % len(PROMPTS)],
+                 SamplingParams(max_new_tokens=8, temperature=0.9, seed=i))
+                for i in range(n_threads * per_thread)]
+        ref = _coop_reference(small_model, reqs)
+
+        ecfg = EngineConfig(max_slots=2, capacity=64, quarantine_steps=None)
+        plan = FaultPlan().nan_logits(uid=3, gen_index=1)
+        driver = EngineDriver(_engine(small_model, ecfg, plan=plan)).start()
+
+        out = {}
+
+        def client(t):
+            for j in range(per_thread):
+                i = t * per_thread + j
+                p, sp = reqs[i]
+                h = driver.submit(p, sp)
+                toks = list(h.tokens())      # stream to completion
+                out[i] = (h, tuple(toks), h.result(timeout=0.0))
+
+        threads = [threading.Thread(target=client, args=(t,))
+                   for t in range(n_threads)]
+        for th in threads:
+            th.start()
+        for th in threads:
+            th.join(timeout=240)
+        assert not any(th.is_alive() for th in threads), "driver deadlocked"
+
+        assert sorted(out) == list(range(len(reqs)))
+        victims = 0
+        for i, (h, toks, res) in out.items():
+            assert res.finish_reason in FINISH_REASONS
+            assert toks == res.tokens  # stream delivered exactly the record
+            if res.uid == 3:
+                victims += 1
+                assert res.finish_reason == "error"
+                assert "non-finite logits" in res.error
+            else:
+                assert res.finish_reason == "length"
+                p, sp = reqs[i]
+                assert res.tokens == ref[(tuple(p), sp.seed)]
+        assert victims == 1  # exactly the planned uid was poisoned
+        driver.close()
+
+    def test_cancel_queued_and_resident(self, small_model):
+        ecfg = EngineConfig(max_slots=1, capacity=64)
+        driver = EngineDriver(_engine(small_model, ecfg)).start()
+        a = driver.submit(PROMPTS[0], SamplingParams(max_new_tokens=32))
+        b = driver.submit(PROMPTS[1], SamplingParams(max_new_tokens=32))
+        # a resident (the single slot), b still waiting in the fair queue
+        assert _wait_until(lambda: driver.stats()["live"] == 1)
+        assert b.cancel()
+        rb = b.result(timeout=60)
+        assert rb.finish_reason == "cancelled" and rb.tokens == ()
+        assert "before admission" in rb.error
+        assert not b.cancel()  # already finished
+        assert a.cancel()      # resident: routed to engine.cancel
+        ra = a.result(timeout=60)
+        assert ra.finish_reason in ("cancelled", "length")
+        assert driver.stats()["frontend_cancelled"] == 1
+        driver.close()
+
+    def test_drain_sheds_queue_and_finishes_residents(self, small_model):
+        ecfg = EngineConfig(max_slots=1, capacity=64)
+        driver = EngineDriver(_engine(small_model, ecfg)).start()
+        a = driver.submit(PROMPTS[0], SamplingParams(max_new_tokens=64))
+        b = driver.submit(PROMPTS[1], SamplingParams(max_new_tokens=4))
+        # drain with a resident and b still queued: only b sheds
+        assert _wait_until(lambda: driver.stats()["live"] == 1)
+        assert driver.drain(timeout=120)
+        assert a.result(timeout=0.0).finish_reason == "length"
+        rb = b.result(timeout=0.0)
+        assert rb.finish_reason == "rejected" and "draining" in rb.error
+        late = driver.submit(PROMPTS[2], SamplingParams(max_new_tokens=4))
+        assert late.result(timeout=60).finish_reason == "rejected"
+        driver.close()
+
+    def test_call_and_stats_while_running(self, small_model):
+        driver = EngineDriver(_engine(small_model)).start()
+        h = driver.submit(PROMPTS[0], SamplingParams(max_new_tokens=16))
+        snap = driver.call(lambda eng: eng.health())
+        assert snap is not None
+        with pytest.raises(TypeError):
+            driver.submit("text prompt")
+        with pytest.raises(ValueError):
+            driver.submit([])
+        assert h.result(timeout=120).finish_reason == "length"
+        s = driver.stats()
+        assert s["submitted"] == 1 and s["retired"] == 1
+        assert "serving_frontend_shed_total" in driver.call(
+            lambda eng: eng.obs.registry.render_prometheus())
+        driver.close()
+
+
+# ---------------------------------------------------------------------------
+# HTTP endpoint over a loopback socket
+# ---------------------------------------------------------------------------
+
+def _post(base, obj, path="/v1/completions", method="POST"):
+    """(status, headers, parsed JSON body) — HTTP errors included."""
+    data = json.dumps(obj).encode() if obj is not None else None
+    req = urllib.request.Request(base + path, data=data, method=method,
+                                 headers={"Content-Type": "application/json"})
+    try:
+        with urllib.request.urlopen(req, timeout=120) as resp:
+            return resp.status, dict(resp.headers), json.loads(resp.read())
+    except urllib.error.HTTPError as e:
+        return e.code, dict(e.headers), json.loads(e.read())
+
+
+def _sse(base, obj):
+    req = urllib.request.Request(base + "/v1/completions",
+                                 data=json.dumps(obj).encode(),
+                                 headers={"Content-Type": "application/json"})
+    tokens, result = [], None
+    with urllib.request.urlopen(req, timeout=120) as resp:
+        headers = dict(resp.headers)
+        for raw in resp:
+            line = raw.decode().strip()
+            if not line.startswith("data: ") or line == "data: [DONE]":
+                continue
+            ev = json.loads(line[len("data: "):])
+            if "token" in ev:
+                tokens.append(ev["token"])
+            else:
+                result = ev
+    return tokens, result, headers
+
+
+@pytest.fixture()
+def http_env(small_model):
+    driver = EngineDriver(_engine(small_model)).start()
+    srv = ThreadedHttpServer(driver).start()
+    yield driver, f"http://{srv.host}:{srv.port}", srv
+    srv.stop()
+    driver.close(timeout=60)
+
+
+class TestHttpServer:
+    def test_wire_bit_identical_and_request_id(self, small_model, http_env):
+        driver, base, _srv = http_env
+        reqs = [(PROMPTS[i], SamplingParams(max_new_tokens=6, seed=i))
+                for i in range(3)]
+        ref = _coop_reference(small_model, reqs)
+        for p, sp in reqs:
+            status, headers, body = _post(base, {
+                "prompt": p, "max_new_tokens": 6, "seed": sp.seed})
+            assert status == 200
+            assert body["finish_reason"] == "length"
+            assert tuple(body["tokens"]) == ref[(tuple(p), sp.seed)]
+            assert headers["X-Request-Id"] == str(body["id"])
+        toks, result, headers = _sse(base, {
+            "prompt": PROMPTS[0], "max_new_tokens": 6, "seed": 0,
+            "stream": True})
+        assert tuple(toks) == ref[(tuple(PROMPTS[0]), 0)]
+        assert result["finish_reason"] == "length"
+        assert tuple(result["tokens"]) == tuple(toks)
+        assert "X-Request-Id" in headers
+
+    def test_healthz_and_metrics(self, http_env):
+        _driver, base, _srv = http_env
+        status, _h, body = _post(base, None, path="/healthz", method="GET")
+        assert status == 200 and body["ok"] is True
+        req = urllib.request.Request(base + "/metrics")
+        with urllib.request.urlopen(req, timeout=60) as resp:
+            assert resp.status == 200
+            assert resp.headers["Content-Type"].startswith("text/plain")
+            text = resp.read().decode()
+        assert "# TYPE" in text
+        assert "serving_frontend_shed_total" in text
+        assert "serving_frontend_queue_depth" in text
+
+    def test_http_errors(self, http_env):
+        _driver, base, _srv = http_env
+        assert _post(base, None, path="/nope", method="GET")[0] == 404
+        assert _post(base, None, method="GET")[0] == 405  # completions
+        assert _post(base, {"prompt": "text"})[0] == 400
+        assert _post(base, {"prompt": [1, 2], "bogus": 1})[0] == 400
+        assert _post(base, {"prompt": []})[0] == 400
+        status, _h, body = _post(base, {"prompt": [1], "temperature": -1})
+        assert status == 400 and "error" in body
+
+    def test_rejected_maps_429_with_retry_after(self, small_model):
+        fair = FairScheduler(tenant_max_resident_tokens=8)
+        driver = EngineDriver(_engine(small_model), fairness=fair).start()
+        srv = ThreadedHttpServer(driver).start()
+        try:
+            status, headers, body = _post(
+                f"http://{srv.host}:{srv.port}",
+                {"prompt": [1, 2, 3], "max_new_tokens": 16})
+            assert status == 429
+            assert headers["Retry-After"] == "1"
+            assert body["finish_reason"] == "rejected"
+            assert "never fit" in body["error"]
+        finally:
+            srv.stop()
+            driver.close(timeout=60)
+
+    def test_frontend_timeout_maps_504(self, small_model):
+        """A request that deadlines while still in the fair queue (slot
+        held by a long request, virtual clock jumped past its TTFT
+        budget) surfaces as HTTP 504."""
+        clock = VirtualClock()
+        eng = _engine(small_model,
+                      EngineConfig(max_slots=1, capacity=64),
+                      plan=FaultPlan(), clock=clock)
+        driver = EngineDriver(eng).start()
+        srv = ThreadedHttpServer(driver).start()
+        try:
+            base = f"http://{srv.host}:{srv.port}"
+            hog = driver.submit([1, 2, 3],
+                                SamplingParams(max_new_tokens=400))
+            got = {}
+
+            def post():
+                got["resp"] = _post(base, {"prompt": [4, 5],
+                                           "max_new_tokens": 4,
+                                           "ttft_deadline_s": 5.0})
+
+            th = threading.Thread(target=post)
+            th.start()
+            # wait until the hog is resident AND the HTTP request is the
+            # one waiting in the fair queue, then expire its budget
+            assert _wait_until(lambda: driver.stats()["live"] == 1
+                               and driver.stats()["pending"] == 1)
+            driver.call(lambda _eng: clock.advance(10.0))
+            th.join(timeout=120)
+            assert not th.is_alive()
+            status, _headers, body = got["resp"]
+            assert status == 504
+            assert body["finish_reason"] == "timeout"
+            hog.cancel()
+        finally:
+            srv.stop()
+            driver.close(timeout=60)
+
+    def test_engine_error_maps_500(self, small_model):
+        plan = FaultPlan().nan_logits(uid=0, gen_index=0)
+        ecfg = EngineConfig(max_slots=2, capacity=64, quarantine_steps=None)
+        driver = EngineDriver(_engine(small_model, ecfg, plan=plan)).start()
+        srv = ThreadedHttpServer(driver).start()
+        try:
+            status, _h, body = _post(f"http://{srv.host}:{srv.port}",
+                                     {"prompt": [1, 2], "max_new_tokens": 4})
+            assert status == 500
+            assert body["finish_reason"] == "error"
+        finally:
+            srv.stop()
+            driver.close(timeout=60)
+
+    def test_disconnect_mid_stream_cancels(self, http_env):
+        driver, base, srv = http_env
+        body = json.dumps({"prompt": [1, 2, 3], "max_new_tokens": 300,
+                           "stream": True}).encode()
+        s = socket.create_connection((srv.host, srv.port), timeout=60)
+        s.sendall((f"POST /v1/completions HTTP/1.1\r\nHost: t\r\n"
+                   f"Content-Type: application/json\r\n"
+                   f"Content-Length: {len(body)}\r\n\r\n").encode() + body)
+        buf = b""
+        while b"data: " not in buf:  # at least one token on the wire
+            chunk = s.recv(4096)
+            assert chunk, "stream closed before first token"
+            buf += chunk
+        s.close()  # client walks away mid-generation
+        deadline = time.monotonic() + 60
+        while time.monotonic() < deadline:
+            if any(r.finish_reason == "cancelled" for r in driver.results()):
+                break
+            time.sleep(0.05)
+        cancelled = [r for r in driver.results()
+                     if r.finish_reason == "cancelled"]
+        assert cancelled, "disconnect did not cancel the request"
+        assert len(cancelled[0].tokens) < 300  # it genuinely stopped early
+
+
+# ---------------------------------------------------------------------------
+# serve.py: graceful signal-driven shutdown (subprocess)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.slow
+def test_serve_sigint_drains_and_flushes(tmp_path):
+    """SIGINT mid-run: queued requests cancel, residents finish, the
+    drain tables print, --metrics-out flushes, exit code 0."""
+    metrics = tmp_path / "final.prom"
+    proc = subprocess.Popen(
+        [sys.executable, "-m", "repro.launch.serve", "--no-quantize",
+         "--requests", "6", "--max-new", "200", "--slots", "2",
+         "--metrics-out", str(metrics)],
+        cwd=ROOT, stdout=subprocess.PIPE, stderr=subprocess.STDOUT,
+        text=True, env={**os.environ, "PYTHONPATH": str(ROOT / "src"),
+                        "PYTHONUNBUFFERED": "1"})
+    try:
+        booted = False
+        for line in proc.stdout:
+            if line.startswith("[serve] boot"):
+                booted = True
+                break
+        assert booted, "serve.py never finished booting"
+        proc.send_signal(signal.SIGINT)
+        out = proc.stdout.read()
+        rc = proc.wait(timeout=240)
+    finally:
+        if proc.poll() is None:
+            proc.kill()
+    assert rc == 0, out
+    assert "drained:" in out
+    assert "request latency (ms):" in out       # full epilogue ran
+    assert metrics.exists() and "# TYPE" in metrics.read_text()
