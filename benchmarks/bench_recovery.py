@@ -1,0 +1,205 @@
+"""Supervised recovery benchmark: MTTR, availability, and replay
+bit-identity under a seeded engine-crash schedule.
+
+Two runs over the same seeded prompt set at temperature 0:
+
+  * **oracle** — crash-free cooperative run (``engine.submit`` +
+    ``run()``): the reference token streams.
+  * **chaos** — the same requests served over real loopback SSE by an
+    ``EngineSupervisor`` whose factory arms a seeded ``engine_crash``
+    fault in each of the first K generations (mid-decode, ambiguous
+    multi-row attribution so nobody is blacklisted). Every crash tears
+    the engine down, the factory rebuilds it, and every in-flight
+    request replays from token 0 while the SSE streams continue.
+
+Gates (hard asserts):
+
+  * every scheduled crash happened and was recovered (generation == K),
+  * every recovery stamped a first replayed token — MTTR
+    (crash-detect → first post-crash token on a survivor's stream) is
+    finite and recorded per recovery,
+  * zero errored requests: all K crashes were ambiguous, so every
+    request replays and finishes,
+  * **bit-identity**: every SSE stream — spliced across K engine
+    generations by the ``_delivered`` dedup cursor — equals the
+    crash-free oracle exactly (no duplicate, no gap, no divergence).
+
+Availability is reported as the fraction of the serving window not
+spent inside a recovery (detect → survivors requeued).
+
+``PYTHONPATH=src python benchmarks/bench_recovery.py [--quick]``
+
+Writes benchmarks/results/BENCH_recovery.json and mirrors it to
+BENCH_recovery.json at the repo root.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+import threading
+import time
+import urllib.request
+from pathlib import Path
+
+import jax
+
+sys.path.insert(0, str(Path(__file__).resolve().parents[1]))  # script mode
+
+from benchmarks.common import save_result, trace_prompts
+from repro import configs
+from repro.core.ptqtp import PTQTPConfig
+from repro.core.quantize_model import quantize_tree
+from repro.models import init_params
+from repro.serving import (EngineConfig, FaultInjector, FaultPlan,
+                           SamplingParams, ServingEngine)
+from repro.serving.frontend import EngineSupervisor, ThreadedHttpServer
+
+ROOT = Path(__file__).resolve().parents[1]
+
+ECFG = dict(max_slots=2, capacity=64, decode_chunk=4, prefill_chunk=16)
+
+
+def _sse(base, prompt, *, max_new, seed, timeout=300.0):
+    """One streamed completion; returns the spliced token tuple and the
+    terminal result event (what a real client sees across restarts)."""
+    body = json.dumps({"prompt": list(prompt), "stream": True,
+                       "max_new_tokens": max_new, "seed": seed}).encode()
+    req = urllib.request.Request(
+        base + "/v1/completions", data=body,
+        headers={"Content-Type": "application/json"})
+    tokens, result = [], None
+    try:
+        with urllib.request.urlopen(req, timeout=timeout) as resp:
+            for raw in resp:
+                line = raw.decode("utf-8").strip()
+                if not line.startswith("data: ") or line == "data: [DONE]":
+                    continue
+                ev = json.loads(line[len("data: "):])
+                if "token" in ev:
+                    tokens.append(ev["token"])
+                else:
+                    result = ev
+    except urllib.error.HTTPError as e:  # shed/degraded outcomes
+        result = json.loads(e.read())
+    return {"tokens": tuple(tokens), "result": result}
+
+
+def run(log=print, quick=False):
+    rows = {}
+    n_req = 4 if quick else 8
+    max_new = 8 if quick else 16
+    # decode-dispatch index (cumulative, per engine generation) at which
+    # each generation's engine dies; sized so both slots are resident at
+    # the crash (ambiguous attribution → everybody replays)
+    crash_at = [1, 2] if quick else [2, 4]
+    prompts = trace_prompts(n_req, quick, seed=29)
+
+    cfg = configs.get_smoke_config("qwen2-1.5b")
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    qparams, _ = quantize_tree(params, PTQTPConfig(group_size=32, t_max=5))
+
+    # ---- oracle: the crash-free streams ---------------------------------
+    ref_eng = ServingEngine(qparams, cfg, EngineConfig(**ECFG))
+    ref_eng.warmup()
+    refs = [ref_eng.submit(p, SamplingParams(max_new_tokens=max_new, seed=i))
+            for i, p in enumerate(prompts)]
+    ref_eng.run()
+    ref_tokens = [tuple(h.output) for h in refs]
+
+    # ---- chaos: K seeded crashes under supervision ----------------------
+    built = {"n": 0}
+
+    def factory():
+        g = built["n"]
+        built["n"] += 1
+        plan = FaultPlan(seed=g)
+        if g < len(crash_at):
+            plan.engine_crash("decode", crash_at[g])
+        return ServingEngine(qparams, cfg, EngineConfig(**ECFG),
+                             injector=FaultInjector(plan))
+
+    sup = EngineSupervisor(
+        factory,
+        max_restarts=len(crash_at) + 2,   # the breaker must not trip here
+        restart_backoff_s=0.05,
+        blacklist_after=len(crash_at) + 1,  # ambiguous strikes never condemn
+    ).start()
+    srv = ThreadedHttpServer(sup).start()
+    base = f"http://{srv.host}:{srv.port}"
+
+    outs = [None] * n_req
+    threads = []
+
+    def fire(i):
+        outs[i] = _sse(base, prompts[i], max_new=max_new, seed=i)
+
+    t0 = time.perf_counter()
+    for i in range(n_req):
+        th = threading.Thread(target=fire, args=(i,))
+        th.start()
+        threads.append(th)
+    for th in threads:
+        th.join(timeout=600.0)
+    wall = time.perf_counter() - t0
+
+    srv.stop()
+    assert sup.drain(timeout=300.0), "supervisor failed to drain"
+    status = sup.supervisor_status()
+    recoveries = list(sup.recoveries)
+    sup.close()
+
+    # ---- gates ----------------------------------------------------------
+    assert all(o is not None for o in outs), "SSE client thread hung"
+    assert status["generation"] == len(crash_at), \
+        f"expected {len(crash_at)} recoveries, got {status}"
+    assert not status["degraded"] and not status["dead"], status
+    errored = [o for o in outs
+               if o["result"] is None
+               or o["result"].get("finish_reason") != "length"]
+    assert not errored, [o["result"] for o in errored]
+    identical = [o["tokens"] == t for o, t in zip(outs, ref_tokens)]
+    assert all(identical), \
+        "replayed SSE streams diverge from the crash-free oracle"
+
+    mttr = []
+    for rec in recoveries:
+        assert rec["t_first_replayed_token"] is not None, \
+            f"recovery never delivered a replayed token: {rec}"
+        mttr.append(rec["t_first_replayed_token"] - rec["t_detect"])
+    downtime = sum(rec["duration_s"] for rec in recoveries)
+
+    rows["n_requests"] = n_req
+    rows["max_new_tokens"] = max_new
+    rows["n_crashes"] = len(crash_at)
+    rows["crash_decode_indices"] = crash_at
+    rows["restarts"] = status["restarts"]
+    rows["replayed"] = status["replayed"]
+    rows["survivors_bit_identical"] = all(identical)
+    rows["errored_requests"] = len(errored)
+    rows["wall_s"] = wall
+    rows["mttr_s_per_recovery"] = mttr
+    rows["mttr_s_max"] = max(mttr)
+    rows["mttr_s_mean"] = sum(mttr) / len(mttr)
+    rows["recovery_downtime_s"] = downtime
+    rows["availability"] = 1.0 - downtime / max(wall, 1e-9)
+    rows["headline_mttr_s_mean"] = rows["mttr_s_mean"]
+    rows["headline_availability"] = rows["availability"]
+    for k in ("restarts", "replayed", "mttr_s_mean", "mttr_s_max",
+              "availability", "wall_s"):
+        log(f"bench_recovery,{k},{rows[k]:.3f}")
+    log(f"bench_recovery,survivors_bit_identical,"
+        f"{rows['survivors_bit_identical']}")
+    save_result("BENCH_recovery", rows)
+    (ROOT / "BENCH_recovery.json").write_text(
+        json.dumps(rows, indent=1, default=float))
+    return rows
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--quick", action="store_true",
+                    help="CI smoke sizes (seconds, not minutes)")
+    args = ap.parse_args()
+    run(quick=args.quick)

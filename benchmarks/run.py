@@ -17,8 +17,8 @@ from benchmarks import (bench_artifacts, bench_condition, bench_decode,
                         bench_groupwise, bench_http, bench_iterations,
                         bench_latency, bench_memory, bench_observability,
                         bench_paged_kv, bench_perplexity, bench_prefill,
-                        bench_roofline, bench_runtime, bench_serving_api,
-                        bench_tolerance)
+                        bench_recovery, bench_roofline, bench_runtime,
+                        bench_serving_api, bench_tolerance)
 from benchmarks.common import RESULTS
 
 SUITES = {
@@ -33,6 +33,7 @@ SUITES = {
     "paged_kv": bench_paged_kv.run,        # paged pool + COW prefix reuse
     "observability": bench_observability.run,  # v1.3 tracing overhead gate
     "http": bench_http.run,                # v1.4 wire identity + DRR fairness
+    "recovery": bench_recovery.run,        # v1.5 MTTR/availability/replay
 
     "iterations": bench_iterations.run,    # Fig. 3
     "tolerance": bench_tolerance.run,      # Fig. 4

@@ -12,7 +12,10 @@ without ever touching the FP weights again). Serving goes through the v1
 request API: ``submit(prompt, SamplingParams(...)) -> RequestHandle``,
 with the first request consumed as a token stream — and then once more
 over HTTP (v1.4): the same engine behind an ``EngineDriver`` thread and
-the asyncio SSE endpoint, consumed with nothing but ``urllib``.
+the asyncio SSE endpoint, consumed with nothing but ``urllib`` — here
+under crash-restart supervision (v1.5): an ``EngineSupervisor`` owns a
+factory that re-maps the artifact, so engine death would rebuild a new
+generation and replay in-flight requests bit-identically.
 """
 
 import argparse
@@ -30,7 +33,7 @@ from repro.artifacts import load_artifact, write_artifact
 from repro.core.ptqtp import PTQTPConfig
 from repro.data.tokenizer import ByteTokenizer
 from repro.serving import EngineConfig, SamplingParams, ServingEngine
-from repro.serving.frontend import EngineDriver, ThreadedHttpServer
+from repro.serving.frontend import EngineSupervisor, ThreadedHttpServer
 
 
 def sse_completion(base_url, prompt_ids, max_new=24, tenant="", seed=0):
@@ -126,13 +129,23 @@ def main():
             text = tok.decode(list(r.tokens)).split(".")[0]
             print(f"      {PROMPTS[r.uid]!r} -> {text!r}")
 
-    # --- 4. the same artifact over HTTP (Serving frontend, v1.4) ----------
+    # --- 4. the same artifact over HTTP, supervised (v1.4/v1.5) -----------
     # one EngineDriver thread owns the engine; the asyncio frontend streams
     # SSE. Tokens over the wire are bit-identical to in-process submit()
     # at temperature 0 — asserted here against the last in-process run.
-    eng = ServingEngine(qparams, cfg, EngineConfig(max_slots=4, capacity=128,
-                                                   prefill_chunk=32))
-    driver = EngineDriver(eng).start()
+    # The driver lifecycle is wrapped in an EngineSupervisor whose factory
+    # re-maps the artifact: should the engine ever die (or hang a step),
+    # it is rebuilt under a new generation id and every in-flight request
+    # replays from token 0, deduped against what its client already saw —
+    # this is what `serve.py --supervise --artifact <dir>` runs in
+    # production, and because replay rides the determinism contract the
+    # streams are bit-identical either way.
+    def engine_factory():
+        p, _ = load_artifact(out, verify="off")
+        return ServingEngine(p, cfg, EngineConfig(max_slots=4, capacity=128,
+                                                  prefill_chunk=32))
+
+    driver = EngineSupervisor(engine_factory).start()
     srv = ThreadedHttpServer(driver).start()
     base = f"http://{srv.host}:{srv.port}"
     streamed_ids, result = sse_completion(
@@ -141,9 +154,11 @@ def main():
     assert tuple(streamed_ids) == results[0].tokens  # wire == in-process
     with urllib.request.urlopen(base + "/healthz") as resp:
         health = json.loads(resp.read())
+    sup = health["supervisor"]
     print(f"[4] http: {base} streamed {len(streamed_ids)} tokens "
           f"(finish_reason={result['finish_reason']}, bit-identical to "
-          f"in-process); healthz ok={health['ok']}")
+          f"in-process); healthz ok={health['ok']}, supervised "
+          f"(generation {sup['generation']}, {sup['restarts']} restarts)")
     print(f"      {PROMPTS[0]!r} ~> "
           f"{tok.decode(streamed_ids).split('.')[0]!r} (SSE)")
     srv.stop()

@@ -64,6 +64,7 @@ from __future__ import annotations
 
 import argparse
 import contextlib
+import os
 import signal
 import threading
 import time
@@ -101,13 +102,20 @@ def _boot_phase(obs, boot, name, **span_args):
 
 def _install_drain_signals(on_signal):
     """SIGINT/SIGTERM → graceful drain (``on_signal()``); a second signal
-    force-quits. Returns the previous handlers."""
+    force-quits with rc ``128+signum`` — distinct from the graceful
+    drain's 0, so a process manager can tell a forced kill from a clean
+    shutdown. Returns the previous handlers."""
     fired = {"n": 0}
 
     def _handler(signum, _frame):
         fired["n"] += 1
         if fired["n"] > 1:
-            raise SystemExit(128 + signum)  # operator really means it
+            # operator really means it: exit immediately with a nonzero
+            # rc wherever the main thread is blocked (drain join, step
+            # loop, Event.wait). os._exit skips flushes by design — this
+            # is the no-more-waiting path, not a shutdown.
+            print(f"[serve] force quit (rc {128 + signum})", flush=True)
+            os._exit(128 + signum)
         print(f"[serve] {signal.Signals(signum).name}: draining "
               "(signal again to force quit)", flush=True)
         on_signal()
@@ -165,13 +173,15 @@ def _drain_report(results, engine, tok, args, dt, jsonl_f, jsonl_path):
               f"{args.trace_out}")
 
 
-def _serve_http(engine, tok, args, stop):
+def _serve_http(engine, tok, args, stop, factory=None):
     """``--http`` mode: hand the engine to an ``EngineDriver`` (the only
     thread that touches it from here on), serve the v1.4 endpoints, block
     until SIGINT/SIGTERM, then drain gracefully and print the same
-    shutdown report as the cooperative path."""
-    from repro.serving.frontend import (EngineDriver, FairScheduler,
-                                        ThreadedHttpServer)
+    shutdown report as the cooperative path. With ``--supervise`` the
+    driver lifecycle is wrapped in an ``EngineSupervisor``: engine death
+    rebuilds from ``factory`` and replays in-flight requests (v1.5)."""
+    from repro.serving.frontend import (EngineDriver, EngineSupervisor,
+                                        FairScheduler, ThreadedHttpServer)
 
     host, _, port = args.http.rpartition(":")
     host = host or "127.0.0.1"
@@ -180,14 +190,25 @@ def _serve_http(engine, tok, args, stop):
         if pair.strip():
             name, _, w = pair.partition("=")
             weights[name.strip()] = float(w or 1.0)
-    fair = FairScheduler(
-        quantum=args.tenant_quantum, weights=weights,
-        max_pending=args.max_pending,
-        tenant_max_resident_tokens=args.tenant_max_resident_tokens)
-    driver = EngineDriver(engine, fairness=fair).start()
+
+    def make_fair():
+        return FairScheduler(
+            quantum=args.tenant_quantum, weights=weights,
+            max_pending=args.max_pending,
+            tenant_max_resident_tokens=args.tenant_max_resident_tokens)
+
+    if args.supervise:
+        driver = EngineSupervisor(
+            factory, engine=engine, fairness_factory=make_fair,
+            max_restarts=args.max_restarts,
+            restart_backoff_s=args.restart_backoff,
+            watchdog_step_timeout_s=args.watchdog_step_timeout).start()
+    else:
+        driver = EngineDriver(engine, fairness=make_fair()).start()
     srv = ThreadedHttpServer(driver, host, int(port)).start()
     print(f"[serve] http: listening on http://{srv.host}:{srv.port} "
-          "(POST /v1/completions, GET /healthz, GET /metrics)", flush=True)
+          "(POST /v1/completions, GET /healthz, GET /metrics"
+          f"{'; supervised' if args.supervise else ''})", flush=True)
 
     t0 = time.time()
     interval = max(args.metrics_interval, 0)
@@ -198,10 +219,15 @@ def _serve_http(engine, tok, args, stop):
     # no cooperative step loop to count); engine reads go through the
     # driver so they can never race a step
     while not stop.wait(interval if interval else None):
-        print(driver.call(lambda eng: _stats_line(eng, t0)), flush=True)
-        if jsonl_f is not None:
-            jsonl_f.write(driver.call(
-                lambda eng: eng.obs.registry.jsonl_line()) + "\n")
+        try:
+            print(driver.call(lambda eng: _stats_line(eng, t0)), flush=True)
+            if jsonl_f is not None:
+                jsonl_f.write(driver.call(
+                    lambda eng: eng.obs.registry.jsonl_line()) + "\n")
+        except (RuntimeError, TimeoutError) as e:
+            # supervised mode: the engine may be mid-rebuild (or dead)
+            # when the digest tick fires — report, don't crash the loop
+            print(f"[serve] stats unavailable: {e}", flush=True)
 
     srv.stop()                      # stop accepting connections first,
     driver.drain(timeout=300.0)     # then let offered work finish
@@ -212,6 +238,13 @@ def _serve_http(engine, tok, args, stop):
     print(f"[serve] drained: {front['retired']} retired "
           f"({front['frontend_sheds']} frontend sheds, "
           f"{front['frontend_cancelled']} cancelled pre-admission)")
+    if args.supervise:
+        sup = driver.supervisor_status()
+        print(f"[serve] supervisor: generation {sup['generation']}, "
+              f"{sup['restarts']} restarts, {sup['replayed']} replayed, "
+              f"degraded={sup['degraded']}, "
+              f"blacklisted={sup['blacklisted']}")
+        engine = driver.engine  # report against the surviving generation
     _drain_report(results, engine, tok, args, dt, jsonl_f, jsonl_path)
     return results
 
@@ -340,6 +373,27 @@ def main(argv=None):
                          "/v1/completions (SSE streaming), GET /healthz, "
                          "GET /metrics; SIGINT/SIGTERM drains gracefully. "
                          "':0' picks a free port")
+    ap.add_argument("--supervise", action="store_true",
+                    help="wrap the driver in an EngineSupervisor (--http "
+                         "mode): engine death or a hung step rebuilds the "
+                         "engine (from --artifact when given, else "
+                         "re-quantizing in-process) under a new generation "
+                         "id and replays in-flight requests bit-identically "
+                         "(serving contract v1.5)")
+    ap.add_argument("--max-restarts", type=int, default=3, metavar="N",
+                    help="crash-loop circuit breaker: N crashes within the "
+                         "crash window open the breaker (degraded mode: new "
+                         "submits shed with HTTP 503 + Retry-After while "
+                         "replayable work finishes)")
+    ap.add_argument("--restart-backoff", type=float, default=0.5,
+                    metavar="S",
+                    help="base seconds between engine death and rebuild; "
+                         "doubles per crash in the window")
+    ap.add_argument("--watchdog-step-timeout", type=float, default=None,
+                    metavar="S",
+                    help="flag an engine step running longer than S seconds "
+                         "(on the injectable clock) as hung and recover as "
+                         "if it crashed (default: watchdog off)")
     ap.add_argument("--tenant-quantum", type=int, default=256, metavar="TOK",
                     help="DRR deficit replenished per tenant per round, in "
                          "committed tokens (--http mode fairness)")
@@ -356,6 +410,9 @@ def main(argv=None):
                          "inside the engine (--http mode fairness)")
     args = ap.parse_args(argv)
 
+    if args.supervise and args.http is None:
+        ap.error("--supervise requires --http (the batch path has no "
+                 "driver to supervise)")
     if args.kv_layout == "paged":
         if args.scheduler == "serial":
             ap.error("--kv-layout paged requires the bucketed scheduler "
@@ -423,16 +480,29 @@ def main(argv=None):
 
     tok = ByteTokenizer()
     cls = ServingEngine if args.scheduler == "bucketed" else SerialAdmitEngine
+    ecfg = EngineConfig(
+        max_slots=args.slots, capacity=args.capacity,
+        prefill_chunk=args.prefill_chunk, attn_backend=args.attn_backend,
+        max_queue=args.max_queue,
+        max_resident_tokens=args.max_resident_tokens,
+        admission_policy=args.admission_policy,
+        kv_layout=args.kv_layout, page_size=args.page_size,
+        max_pages=args.max_pages, prefix_cache=args.prefix_cache)
     with _boot_phase(obs, boot, "engine_init", scheduler=args.scheduler):
-        engine = cls(params, cfg, EngineConfig(
-            max_slots=args.slots, capacity=args.capacity,
-            prefill_chunk=args.prefill_chunk, attn_backend=args.attn_backend,
-            max_queue=args.max_queue,
-            max_resident_tokens=args.max_resident_tokens,
-            admission_policy=args.admission_policy,
-            kv_layout=args.kv_layout, page_size=args.page_size,
-            max_pages=args.max_pages, prefix_cache=args.prefix_cache),
-            observability=obs)
+        engine = cls(params, cfg, ecfg, observability=obs)
+
+    def engine_factory():
+        # supervised recovery rebuild: reload params from the artifact when
+        # one was given (the mmap re-open is cheap and sheds any state the
+        # dying generation may have corrupted), else reuse the in-memory
+        # quantized tree; each generation gets a fresh Observability so
+        # bind_engine's single-bind invariant holds
+        p = params
+        if args.artifact:
+            p, _ = load_artifact(args.artifact, verify="off")
+        return cls(p, cfg, ecfg, observability=Observability(
+            trace=args.trace_out is not None))
+
     mem = engine.memory_stats()
     if args.kv_layout == "paged":
         print(f"[serve] paged KV: pool {engine.alloc.n_pages} pages x "
@@ -466,7 +536,8 @@ def main(argv=None):
           flush=True)
 
     if args.http is not None:
-        return _serve_http(engine, tok, args, stop=draining)
+        return _serve_http(engine, tok, args, stop=draining,
+                           factory=engine_factory)
 
     handles = []
     for i in range(args.requests):

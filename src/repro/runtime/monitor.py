@@ -41,7 +41,11 @@ from repro.runtime import clock as rtclock
 #:     digest. Readers must tolerate missing keys beyond {host, t}: the
 #:     fleet never upgrades atomically, so one detector version always
 #:     overlaps older writers.
-HEARTBEAT_SCHEMA = 2
+#:   3 — supervised serving hosts add "engine_generation" and
+#:     "engine_restarts" (via the digest) so the fleet monitor can spot
+#:     crash-looping hosts; readers default both to 0 (a host that never
+#:     reports them has simply never restarted its engine).
+HEARTBEAT_SCHEMA = 3
 
 
 @dataclasses.dataclass
@@ -98,6 +102,8 @@ class StragglerDetector:
             b.setdefault("schema", 1)
             b.setdefault("step", 0)
             b.setdefault("step_time_s", None)
+            b.setdefault("engine_generation", 0)
+            b.setdefault("engine_restarts", 0)
             out.append(b)
         return out
 

@@ -192,6 +192,46 @@ remains the in-process baseline (and the bit-identity oracle).
   Once streaming has begun the status is committed; late outcomes
   arrive in the terminal SSE event instead.
 
+Supervised recovery (v1.5)
+--------------------------
+``EngineSupervisor`` (``repro.serving.frontend.supervisor``; ``serve.py
+--supervise``) wraps the driver lifecycle so engine *death* — an
+exception escaping ``engine.step()`` (``EngineCrash`` from the fault
+plan's ``engine_crash``, or any real crash) or a hung step flagged by
+the watchdog (``step_age() > watchdog_step_timeout_s``, read off the
+injectable clock) — becomes a recovery, not a fleet-wide ``"error"``:
+
+* **Engine generations.** The supervisor owns an engine *factory*
+  (rebuild from the memmap artifact or in-process quantization). Each
+  rebuild gets a fresh engine, driver, and registry under a new integer
+  generation id (gauge ``serving_engine_generation``; heartbeats carry
+  ``engine_generation`` / ``engine_restarts`` under HEARTBEAT_SCHEMA 3).
+* **Replay guarantee.** Every non-retired request is re-queued on the
+  new generation, keeping its uid, handle, subscribers, and original
+  timestamps. The determinism contract (output is a pure function of
+  (params, prompt, SamplingParams)) means replay regenerates the same
+  stream from token 0; the handle's delivered-token cursor skips the
+  already-streamed prefix, so an SSE client sees its stream continue
+  with **no duplicated and no dropped token** and a final result
+  bit-identical to a crash-free run.
+* **Suspects and the blacklist.** The request mid-dispatch at the crash
+  is the suspect. A single-attributed suspect retires ``"error"``
+  exactly once (crash detail in ``.error`` and the HTTP 500 body) and
+  never replays; an ambiguous multi-row crash replays everyone but
+  counts strikes, and a repeat offender is blacklisted — a poison
+  request cannot crash-loop the fleet.
+* **Degraded mode.** Exponential backoff between restarts; ≥
+  ``max_restarts`` crashes inside ``crash_window_s`` open the circuit
+  breaker: new submits shed with HTTP **503 + Retry-After**
+  (``DegradedError``) while replayable work finishes, and a crash-free
+  window closes the breaker. ``GET /healthz`` carries the supervisor
+  block (generation, restarts, degraded, blacklist).
+* **Unchanged surface.** ``FINISH_REASONS`` is untouched — recovery
+  introduces no new terminal state (crash victims that cannot replay
+  retire with the existing ``"error"``), and the supervisor duck-types
+  the driver's client surface, so every v1.4 rule above applies
+  verbatim under supervision.
+
 Consumption
 -----------
 ``RequestHandle.tokens()`` — a generator yielding each generated token in
@@ -230,10 +270,11 @@ what makes the determinism guarantee scheduler-independent.
 from repro.runtime.monitor import HealthSnapshot
 from repro.serving.api import (FINISH_REASONS, RequestHandle, RequestResult,
                                SamplingParams)
-from repro.serving.engine import (EngineConfig, EngineFault,
+from repro.serving.engine import (EngineConfig, EngineCrash, EngineFault,
                                   SerialAdmitEngine, ServingEngine)
 from repro.serving.faults import FaultInjector, FaultPlan, VirtualClock
-from repro.serving.frontend import (DriverHandle, EngineDriver, FairScheduler,
+from repro.serving.frontend import (DegradedError, DriverHandle, EngineDriver,
+                                    EngineSupervisor, FairScheduler,
                                     HttpServer, ThreadedHttpServer)
 from repro.serving.observability import (SERVING_METRICS, MetricsRegistry,
                                          Observability, TraceRecorder)
@@ -245,10 +286,11 @@ from repro.serving.sampling import (request_keys, sample_token, sample_tokens,
 __all__ = [
     "SamplingParams", "RequestHandle", "RequestResult", "FINISH_REASONS",
     "ServingEngine", "SerialAdmitEngine", "EngineConfig", "EngineFault",
+    "EngineCrash",
     "FaultPlan", "FaultInjector", "VirtualClock", "HealthSnapshot",
     "PageAllocator",
     "EngineDriver", "DriverHandle", "FairScheduler", "HttpServer",
-    "ThreadedHttpServer",
+    "ThreadedHttpServer", "EngineSupervisor", "DegradedError",
     "Observability", "MetricsRegistry", "TraceRecorder", "SERVING_METRICS",
     "sample_token", "sample_tokens", "sample_tokens_per_request",
     "request_keys", "top_k_top_p_mask",

@@ -76,7 +76,27 @@ from repro.serving.paging import PageAllocator
 from repro.serving.sampling import request_keys, sample_tokens_per_request
 
 __all__ = ["EngineConfig", "ServingEngine", "SerialAdmitEngine",
-           "SamplingParams", "RequestHandle", "EngineFault"]
+           "SamplingParams", "RequestHandle", "EngineFault", "EngineCrash"]
+
+
+class EngineCrash(RuntimeError):
+    """The engine itself died — not a containable per-dispatch fault.
+
+    Unlike :class:`EngineFault`, which ``_contain`` absorbs (retire the
+    attributed slot, quarantine, keep stepping), an ``EngineCrash``
+    deliberately escapes ``step()``: device state after a crash cannot be
+    trusted, so whoever drives the engine (the ``EngineDriver``'s
+    ``_fatal`` path) must tear it down and — under an
+    ``EngineSupervisor`` — rebuild and replay. ``uid`` blames one request
+    when the crasher is known; the engine fills ``suspects`` with the
+    uids participating in the dispatch that died (just the blamed uid
+    when it was resident), which is what the supervisor's replay
+    blacklist keys on."""
+
+    def __init__(self, msg: str, uid: Optional[int] = None):
+        super().__init__(msg)
+        self.uid = uid
+        self.suspects: Tuple[int, ...] = ()
 
 
 class EngineFault(RuntimeError):
@@ -924,6 +944,9 @@ class ServingEngine:
                     self._serve_params, self.state,
                     jnp.asarray(self.last_tokens),
                     temps, active, seeds, gen0, top_k, top_p, stops, poison)
+        except EngineCrash as exc:  # engine death escapes containment
+            self._attribute_crash(exc, dec)
+            raise
         except Exception as exc:  # containment unit: this dispatch only
             done_now = done_now + self._contain("decode", dec, exc)
             self._step_end(t_step0, tok0, churn0)
@@ -1013,6 +1036,18 @@ class ServingEngine:
         self._dispatch_counts[kind] = idx + 1
         if self._injector is not None:
             self._injector.before_dispatch(self, kind, idx, slots)
+
+    def _attribute_crash(self, exc: "EngineCrash", slots: List[int]) -> None:
+        """Stamp an escaping :class:`EngineCrash` with its suspects: the
+        blamed uid when it is resident in the dying dispatch, else every
+        participating row — the supervisor retires/blacklists from this."""
+        if exc.suspects:
+            return
+        uids = [self.slots[i].uid for i in slots if self.slots[i] is not None]
+        if exc.uid is not None and exc.uid in uids:
+            exc.suspects = (exc.uid,)
+        else:
+            exc.suspects = tuple(uids)
 
     def _contain(self, kind: str, slots: List[int],
                  exc: Exception) -> List[RequestHandle]:
@@ -1349,6 +1384,9 @@ class ServingEngine:
                 logits, self.state = self._prefill_fn(length)(
                     self._serve_params, self.state, jnp.asarray(tokens),
                     jnp.asarray(lengths))
+        except EngineCrash as exc:  # engine death escapes containment
+            self._attribute_crash(exc, pf)
+            raise
         except Exception as exc:  # cursors untouched: survivors retry as-is
             return self._contain("prefill", pf, exc)
         t_pf1 = self._clock()
@@ -1567,6 +1605,9 @@ class SerialAdmitEngine(ServingEngine):
                                    args={"bucket": len(prompt), "rows": 1}):
                     logits, one_state = fn(self._serve_params,
                                            jnp.asarray([prompt], jnp.int32))
+            except EngineCrash as exc:  # engine death escapes containment
+                self._attribute_crash(exc, [slot])
+                raise
             except Exception as exc:  # serial admission: batch-1 containment
                 self._admit_finished.extend(
                     self._contain("prefill", [slot], exc))

@@ -9,8 +9,12 @@ repeatable. This module makes them both:
     NaN-poison the logits that produce generated token *k* of request *r*
     (on device, through the real non-finite detection path), raise from the
     *n*-th prefill/decode dispatch (before the device call, so state is
-    never half-written), and stall the engine's wall clock past a deadline
-    at a chosen engine step.
+    never half-written), stall the engine's wall clock past a deadline
+    at a chosen engine step, kill the whole engine at a chosen dispatch
+    (``engine_crash`` — raises ``EngineCrash``, which escapes containment
+    and exercises the supervisor's rebuild-and-replay path), and hang a
+    chosen step (``stall_step`` — the injected clock jumps and the hook
+    blocks until ``release_stalls()``, tripping the hung-step watchdog).
   * :class:`FaultInjector` — the engine-side hook that executes a plan.
     Pass it to ``ServingEngine(..., injector=...)``; a ``None`` injector
     (production) compiles every injection input out of the hot loop.
@@ -33,6 +37,7 @@ from __future__ import annotations
 
 import dataclasses
 import json
+import threading
 from pathlib import Path
 from typing import Any, Dict, List, Optional, Tuple
 
@@ -79,6 +84,20 @@ class _ClockStall:
     advance_s: float  # seconds the virtual clock jumps before that step
 
 
+@dataclasses.dataclass(frozen=True)
+class _EngineCrashFault:
+    kind: str                  # "prefill" | "decode"
+    index: int                 # which dispatch of that kind (0-based count)
+    uid: Optional[int] = None  # blame this request (else the whole dispatch
+    #                            is suspect — ambiguous attribution)
+
+
+@dataclasses.dataclass(frozen=True)
+class _StallStep:
+    at_step: int      # engine step() ordinal (1-based) that hangs
+    hang_s: float     # VirtualClock seconds the step appears to take
+
+
 class FaultPlan:
     """A schedulable set of faults, fully determined at construction.
 
@@ -94,6 +113,8 @@ class FaultPlan:
         self.nans: List[_NanFault] = []
         self.dispatch_faults: List[_DispatchFault] = []
         self.stalls: List[_ClockStall] = []
+        self.crashes: List[_EngineCrashFault] = []
+        self.step_stalls: List[_StallStep] = []
 
     # ------------------------------------------------------------- authoring
     def nan_logits(self, uid: int, gen_index: int) -> "FaultPlan":
@@ -120,6 +141,30 @@ class FaultPlan:
         self.stalls.append(_ClockStall(at_step, advance_s))
         return self
 
+    def engine_crash(self, kind: str, index: int,
+                     uid: Optional[int] = None) -> "FaultPlan":
+        """Raise :class:`~repro.serving.engine.EngineCrash` from the
+        ``index``-th dispatch of ``kind`` — engine death, not a contained
+        fault: the exception escapes ``step()`` and kills the driver.
+        ``uid`` marks the poison request (the engine attributes it as the
+        sole suspect when resident); omitted, every participating row is
+        suspect (ambiguous attribution, the supervisor replays them all
+        and blacklists repeat offenders)."""
+        assert kind in ("prefill", "decode"), kind
+        self.crashes.append(_EngineCrashFault(kind, index, uid))
+        return self
+
+    def stall_step(self, at_step: int, hang_s: float) -> "FaultPlan":
+        """Hang engine step ``at_step``: the injector advances the
+        VirtualClock by ``hang_s`` and then blocks inside ``on_step``
+        until :meth:`FaultInjector.release_stalls` — from the watchdog's
+        point of view the step never returns. ``hang_s`` past the
+        supervisor's ``watchdog_step_timeout_s`` makes detection exact
+        without any real-time sleeping."""
+        assert hang_s >= 0.0
+        self.step_stalls.append(_StallStep(at_step, hang_s))
+        return self
+
     def describe(self) -> Dict[str, Any]:
         """JSON-able summary (recorded by the chaos benchmark)."""
         return {
@@ -128,6 +173,8 @@ class FaultPlan:
             "dispatch_errors": [dataclasses.asdict(f)
                                 for f in self.dispatch_faults],
             "clock_stalls": [dataclasses.asdict(f) for f in self.stalls],
+            "engine_crashes": [dataclasses.asdict(f) for f in self.crashes],
+            "step_stalls": [dataclasses.asdict(f) for f in self.step_stalls],
         }
 
 
@@ -156,6 +203,11 @@ class FaultInjector:
         self.clock = clock
         self._fired: set = set()
         self.log: List[Tuple[str, Any]] = []  # what actually fired, in order
+        # stall_step machinery: the hook blocks here until release_stalls()
+        # (or the test tears the run down); stall_engaged lets a test wait
+        # for the hang to actually be in progress before asserting on it
+        self._stall_gate = threading.Event()
+        self.stall_engaged = threading.Event()
 
     # --------------------------------------------------------- engine hooks
     def on_step(self, engine):
@@ -167,11 +219,40 @@ class FaultInjector:
                     raise RuntimeError("stall_clock needs a VirtualClock")
                 self.clock.advance(s.advance_s)
                 self.log.append(("stall", dataclasses.asdict(s)))
+        for s in self.plan.step_stalls:
+            key = ("stall_step", s.at_step)
+            if engine.engine_steps == s.at_step and key not in self._fired:
+                self._fired.add(key)
+                if self.clock is None:
+                    raise RuntimeError("stall_step needs a VirtualClock")
+                # the step "takes" hang_s on the injected clock, then the
+                # driver thread wedges until released — exactly what a hung
+                # device call looks like to the supervisor's watchdog
+                self.clock.advance(s.hang_s)
+                self.log.append(("stall_step", dataclasses.asdict(s)))
+                self.stall_engaged.set()
+                self._stall_gate.wait()
+
+    def release_stalls(self) -> None:
+        """Unblock every fired (and future) ``stall_step`` hang. The
+        supervisor abandons a hung driver thread rather than joining it;
+        tests call this so the daemon thread can exit and the process can
+        wind down cleanly."""
+        self._stall_gate.set()
 
     def before_dispatch(self, engine, kind: str, index: int,
                         slots: List[int]):
-        from repro.serving.engine import EngineFault  # circular-free
+        from repro.serving.engine import EngineCrash, EngineFault
 
+        for f in self.plan.crashes:
+            key = ("crash", f.kind, f.index)
+            if f.kind != kind or f.index != index or key in self._fired:
+                continue
+            self._fired.add(key)
+            self.log.append(("crash", dataclasses.asdict(f)))
+            raise EngineCrash(
+                f"injected engine crash at {kind} dispatch #{index}",
+                uid=f.uid)
         for f in self.plan.dispatch_faults:
             key = ("dispatch", f.kind, f.index)
             if f.kind != kind or f.index != index or key in self._fired:

@@ -1,6 +1,6 @@
-"""``repro.serving.frontend`` — the concurrent serving surface (v1.4).
+"""``repro.serving.frontend`` — the concurrent serving surface (v1.5).
 
-Three layers over the single-threaded engine:
+Four layers over the single-threaded engine:
 
 * :mod:`~repro.serving.frontend.driver` — :class:`EngineDriver`, the one
   thread that owns the device; thread-safe submit/cancel/stream/call.
@@ -8,17 +8,27 @@ Three layers over the single-threaded engine:
   deficit-weighted round-robin admission across per-tenant queues.
 * :mod:`~repro.serving.frontend.server` — :class:`HttpServer` /
   :class:`ThreadedHttpServer`, the stdlib-asyncio HTTP + SSE endpoint.
+* :mod:`~repro.serving.frontend.supervisor` — :class:`EngineSupervisor`,
+  crash-restart supervision: engine-death detection (driver fatal path +
+  hung-step watchdog), rebuild from the engine factory with a new
+  generation id, deterministic replay of in-flight requests, suspect
+  blacklisting, and a crash-loop circuit breaker
+  (:class:`DegradedError` → HTTP 503).
 
-See the v1.4 section of the ``repro.serving`` package docstring for the
-frozen contract (threading rules, tenant field, HTTP status mapping).
+See the v1.4/v1.5 sections of the ``repro.serving`` package docstring
+for the frozen contract (threading rules, tenant field, HTTP status
+mapping, recovery semantics).
 """
 
 from repro.serving.frontend.driver import DriverHandle, EngineDriver
 from repro.serving.frontend.fairness import FairScheduler
 from repro.serving.frontend.server import (STATUS_BY_REASON, HttpServer,
                                            ThreadedHttpServer)
+from repro.serving.frontend.supervisor import (DegradedError,
+                                               EngineSupervisor, StepTimeout)
 
 __all__ = [
     "EngineDriver", "DriverHandle", "FairScheduler",
     "HttpServer", "ThreadedHttpServer", "STATUS_BY_REASON",
+    "EngineSupervisor", "DegradedError", "StepTimeout",
 ]

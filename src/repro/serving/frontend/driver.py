@@ -39,6 +39,16 @@ retries another replica) and lets everything already offered to the
 engine finish or deadline out; ``close()`` cancels whatever is left and
 joins the thread.
 
+Engine death: an exception escaping ``engine.step()`` hits ``_fatal``.
+Standalone, every in-flight handle retires ``"error"`` with the crash
+detail attached (clients can tell engine death from a contained
+per-request fault) and the driver closes. Under an
+:class:`~repro.serving.frontend.supervisor.EngineSupervisor`
+(``on_fatal`` set), handles are left alive for :meth:`EngineDriver.reap`
+/ :meth:`EngineDriver.adopt` migration onto a rebuilt engine: replay
+regenerates from token 0 and the ``_delivered`` cursor dedups the
+already-streamed prefix.
+
 Every timestamp routes through the engine's injectable clock
 (``engine.clock`` — a ``VirtualClock`` under a fault injector), keeping
 the static wall-clock guard and the trace-reconciliation guarantee
@@ -90,6 +100,7 @@ class DriverHandle:
         self._inner = None              # engine RequestHandle, driver-only
         self._state = "new"             # new -> queued -> engine -> done
         self._delivered = 0             # engine tokens already mirrored
+        self._replayed = False          # re-queued after an engine crash
         self._drr_cost: Optional[int] = None
         self._elock = threading.Lock()
         self._events: List[tuple] = []
@@ -200,6 +211,15 @@ class EngineDriver:
         self._closed = False
         self._drained_evt = threading.Event()
         self._next_uid = engine._next_uid
+        # supervision surface (EngineSupervisor): on_fatal routes engine
+        # death to the supervisor instead of fanning "error" out to every
+        # client; generation tags which rebuild this driver belongs to
+        self.on_fatal: Optional[Callable[[BaseException], None]] = None
+        self.fatal_exc: Optional[BaseException] = None
+        self.generation = 0
+        self._abandoned = False   # reaped: the loop must exit touching nothing
+        self._step_t0: Optional[float] = None  # engine-clock stamp of the
+        #                                        in-flight step (watchdog read)
         self.submitted = 0
         self.sheds = 0      # frontend sheds (caps, drain) — engine sheds
         #                     are counted by the engine itself
@@ -363,6 +383,14 @@ class EngineDriver:
             t_done=self._clock(), error=why))
 
     def _finish_locked(self, h: DriverHandle, res: RequestResult) -> None:
+        if h._replayed:
+            # a replayed request's record keeps its original submit/admit/
+            # first-token stamps — the client experienced one request, not
+            # one per engine generation
+            res = dataclasses.replace(
+                res, t_submit=h.t_submit or res.t_submit,
+                t_admit=h.t_admit or res.t_admit,
+                t_first=h.t_first or res.t_first)
         h.finish_reason = res.finish_reason
         h.error = res.error
         h.t_admit, h.t_first, h.t_done = res.t_admit, res.t_first, res.t_done
@@ -471,28 +499,124 @@ class EngineDriver:
             self._cond.notify_all()  # wake a drain() waiter's re-check path
 
     def _fatal(self, exc: BaseException) -> None:
-        """Engine-level failure (not a contained per-request fault):
-        retire everything with ``"error"`` so no client hangs."""
-        why = f"engine driver failed: {type(exc).__name__}: {exc}"
+        """Engine-level failure (not a contained per-request fault).
+
+        Standalone: retire everything with ``"error"`` carrying the crash
+        detail (exception type + message), so no client hangs and each
+        can tell engine death from a per-request fault. Supervised
+        (``on_fatal`` set): leave the non-retired handles untouched — the
+        supervisor harvests them with :meth:`reap` and replays them on a
+        rebuilt engine — and just hand the exception over."""
+        why = self._crash_detail(exc)
+        cb = self.on_fatal
         with self._cond:
-            now = self._clock()
-            for h in list(self._live.values()):
-                self._live.pop(h.uid, None)
-                self._fair.retire(h)
-                self._finish_locked(h, RequestResult(
-                    uid=h.uid, tokens=tuple(h.output),
-                    finish_reason=FINISH_ERROR, truncated=h.truncated,
-                    t_submit=h.t_submit, t_first=h.t_first, t_done=now,
-                    t_admit=h.t_admit, error=why))
-            for h in self._fair.drain():
-                self._shed_locked(h, why)
+            self.fatal_exc = exc
             self._closed = True
+            self._abandoned = True
+            self._fail_calls_locked(why)
+            if cb is None:
+                now = self._clock()
+                for h in list(self._live.values()):
+                    self._live.pop(h.uid, None)
+                    self._fair.retire(h)
+                    self._finish_locked(h, RequestResult(
+                        uid=h.uid, tokens=tuple(h.output),
+                        finish_reason=FINISH_ERROR, truncated=h.truncated,
+                        t_submit=h.t_submit, t_first=h.t_first, t_done=now,
+                        t_admit=h.t_admit, error=why))
+                for h in self._fair.drain():
+                    self._shed_locked(h, why)
             self._drained_evt.set()
+            self._cond.notify_all()
+        if cb is not None:
+            try:
+                cb(exc)
+            except Exception:  # a broken supervisor must not mask the crash
+                pass
+
+    def _crash_detail(self, exc: Optional[BaseException]) -> str:
+        if exc is None:
+            return f"engine died (generation {self.generation})"
+        return (f"engine died (generation {self.generation}): "
+                f"{type(exc).__name__}: {exc}")
+
+    def _fail_calls_locked(self, why: str) -> None:
+        while self._calls:
+            box = self._calls.popleft()
+            box.exc = RuntimeError(why)
+            box.evt.set()
+
+    def step_age(self) -> Optional[float]:
+        """Engine-clock seconds the in-flight ``engine.step()`` has been
+        running, or None between steps — the watchdog's only read."""
+        t0 = self._step_t0
+        return None if t0 is None else self._clock() - t0
+
+    def reap(self, exc: Optional[BaseException] = None):
+        """Supervisor-side harvest after engine death (crash or hang).
+
+        Marks the driver closed and abandoned (a still-running loop exits
+        without touching handles), fails pending ``call()`` waiters, and
+        returns ``(suspects, survivors)``: the uids blamed for the death
+        (from ``exc.suspects`` / ``exc.uid``, else every engine-resident
+        uid — the hung-step case) and every non-retired handle, engine
+        residents first then the fair queue, each in uid order. Safe from
+        any thread: the driver thread is either dead (crash) or stuck
+        inside ``engine.step()`` (hang), and never holds the condition
+        across a step."""
+        exc = exc if exc is not None else self.fatal_exc
+        with self._cond:
+            self.fatal_exc = self.fatal_exc or exc
+            self._closed = True
+            self._abandoned = True
+            self._fail_calls_locked(self._crash_detail(exc))
+            suspects = tuple(getattr(exc, "suspects", ()) or ())
+            if not suspects and getattr(exc, "uid", None) is not None:
+                suspects = (exc.uid,)
+            if not suspects:
+                suspects = tuple(h.uid for h in self._eng.slots
+                                 if h is not None)
+            live = sorted(self._live.values(), key=lambda h: h.uid)
+            self._live.clear()
+            queued = sorted(self._fair.drain(), key=lambda h: h.uid)
+            self._drained_evt.set()
+            self._cond.notify_all()
+        return suspects, live + queued
+
+    def adopt(self, h: DriverHandle) -> bool:
+        """Re-queue a handle that lived on a previous (crashed) driver.
+
+        The handle keeps its uid, delivered-token count, event history,
+        and subscribers; the rebuilt engine regenerates its stream from
+        token 0 (the determinism contract) and ``_pump``'s
+        ``_delivered``-cursor skips the already-mirrored prefix — clients
+        see no duplicate and no gap. Returns False when the handle
+        already finished (nothing to replay)."""
+        with self._cond:
+            if h.done:
+                return False
+            h._driver = self
+            h._inner = None
+            h._replayed = True
+            self._next_uid = max(self._next_uid, h.uid + 1)
+            if self._closed or self._draining:
+                self._shed_locked(h, "driver closed" if self._closed
+                                  else "server draining")
+                return True
+            why = self._fair.push(h)
+            if why is not None:
+                self._shed_locked(h, why)
+                return True
+            h._state = "queued"
+            self._cond.notify_all()
+        return True
 
     def _loop(self) -> None:
         eng = self._eng
         while True:
             with self._cond:
+                if self._abandoned:
+                    return  # reaped by a supervisor — handles migrated
                 self._service_calls_locked()
                 if self._closed:
                     self._shutdown_locked()
@@ -519,9 +643,17 @@ class EngineDriver:
                     self._pump()
                     self._cond.wait(0.5)
                     continue
+            self._step_t0 = self._clock()
             try:
                 eng.step()
-            except Exception as e:  # pragma: no cover — engine crash path
+            except Exception as e:
+                self._step_t0 = None
                 self._fatal(e)
+                return
+            self._step_t0 = None
+            if self._abandoned:
+                # the watchdog reaped us mid-step (hung-step recovery that
+                # eventually woke up): the handles now live on a newer
+                # generation — mirroring anything would double-deliver
                 return
             self._pump()

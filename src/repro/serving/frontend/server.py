@@ -24,7 +24,9 @@ close`` — SSE holds the connection for the response anyway). Endpoints:
 Status mapping (the v1.4 contract): terminal outcomes that occur before
 any byte of the body is sent map to HTTP codes — ``"rejected"`` → 429
 with ``Retry-After``, ``"timeout"`` → 504, ``"error"`` → 500; malformed
-bodies/params → 400. Every ``/v1/completions`` response carries
+bodies/params → 400; a supervised driver in degraded mode (crash-loop
+circuit breaker open) → 503 with ``Retry-After``. Every
+``/v1/completions`` response carries
 ``X-Request-Id: <uid>`` — the id the trace recorder annotates spans
 with, so an operator can go from an HTTP error straight to the request's
 lifecycle spans. Once streaming has started, late outcomes are reported
@@ -47,6 +49,7 @@ from typing import Any, Dict, Optional, Tuple
 from repro.serving.api import (FINISH_ERROR, FINISH_REJECTED, FINISH_TIMEOUT,
                                SamplingParams)
 from repro.serving.frontend.driver import DriverHandle, EngineDriver
+from repro.serving.frontend.supervisor import DegradedError
 
 #: terminal finish_reason → HTTP status, when known before the body starts
 STATUS_BY_REASON = {
@@ -230,9 +233,22 @@ class HttpServer:
         if method != "GET":
             await self._write_json(writer, 405, {"error": "GET only"})
             return
-        snap = await self._driver_call(lambda eng: eng.health())
+        # a supervised driver surfaces its recovery state (generation,
+        # restarts, degraded, blacklist) alongside the engine snapshot
+        status_fn = getattr(self.driver, "supervisor_status", None)
+        sup = status_fn() if status_fn is not None else None
+        try:
+            snap = await self._driver_call(lambda eng: eng.health())
+        except RuntimeError as e:  # engine mid-rebuild / permanently dead
+            payload = {"ok": False, "error": str(e)}
+            if sup is not None:
+                payload["supervisor"] = sup
+            await self._write_json(writer, 503, payload)
+            return
         payload = dataclasses.asdict(snap)
         payload["ok"] = True
+        if sup is not None:
+            payload["supervisor"] = sup
         await self._write_json(writer, 200, payload)
 
     async def _handle_metrics(self, writer, method):
@@ -259,13 +275,21 @@ class HttpServer:
         except _BadRequest as e:
             await self._write_json(writer, 400, {"error": str(e)})
             return
+        loop = asyncio.get_running_loop()
         try:
-            handle = self.driver.submit(prompt, params)
+            # executor hop: a supervised submit may park briefly while the
+            # engine rebuilds — never block the event loop on it
+            handle = await loop.run_in_executor(
+                None, functools.partial(self.driver.submit, prompt, params))
         except (TypeError, ValueError) as e:
             await self._write_json(writer, 400, {"error": str(e)})
             return
+        except DegradedError as e:  # breaker open: shed with Retry-After
+            await self._write_json(
+                writer, 503, {"error": str(e), "degraded": True},
+                extra={"Retry-After": str(max(int(e.retry_after), 1))})
+            return
 
-        loop = asyncio.get_running_loop()
         events: asyncio.Queue = asyncio.Queue()
         handle.subscribe(
             lambda ev: loop.call_soon_threadsafe(events.put_nowait, ev))

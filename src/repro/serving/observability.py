@@ -172,6 +172,18 @@ SERVING_METRICS: Tuple[MetricSpec, ...] = (
     MetricSpec("serving_page_churn_pages", "histogram", "pages",
                "page alloc+release events per engine step", COUNT_BUCKETS,
                paged_only=True),
+    # ---- supervised recovery (v1.5; registered by EngineSupervisor)
+    MetricSpec("serving_engine_restarts_total", "counter", "1",
+               "engine rebuilds performed by the supervisor"),
+    MetricSpec("serving_requests_replayed_total", "counter", "1",
+               "requests replayed onto a rebuilt engine"),
+    MetricSpec("serving_engine_generation", "gauge", "1",
+               "current engine generation id (0 = never restarted)"),
+    MetricSpec("serving_degraded", "gauge", "1",
+               "1 while the crash-loop breaker sheds new submits"),
+    MetricSpec("serving_recovery_seconds", "histogram", "seconds",
+               "engine death detected -> survivors requeued on the "
+               "rebuilt engine", LATENCY_BUCKETS),
 )
 
 SPEC_BY_NAME: Dict[str, MetricSpec] = {s.name: s for s in SERVING_METRICS}
@@ -740,6 +752,13 @@ class Observability:
                      "serving_engine_steps_total"):
             if name in reg:
                 out[name] = reg.value(name)
+        # supervised serving: generation + restart count ride the heartbeat
+        # (HEARTBEAT_SCHEMA 3) so the fleet monitor can spot crash-loopers
+        if "serving_engine_generation" in reg:
+            out["engine_generation"] = reg.value("serving_engine_generation")
+        if "serving_engine_restarts_total" in reg:
+            out["engine_restarts"] = reg.value(
+                "serving_engine_restarts_total")
         for name, key in (("serving_ttft_seconds", "ttft"),
                           ("serving_queue_wait_seconds", "queue_wait"),
                           ("serving_step_seconds", "step")):
